@@ -1,0 +1,110 @@
+"""Beyond-paper ablation: non-IID (Dirichlet) federated data.
+
+The paper's experiments use equal IID shards. Under label-skewed shards the
+per-worker optima genuinely disagree; ADMM's dual variables absorb the
+disagreement, so A-FADMM should retain accuracy where plain analog gradient
+averaging degrades. Reported: test accuracy after a fixed round budget, IID
+vs Dirichlet(0.3), for A-FADMM and A-GD.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import MLP_IMG_DIM, MLP_SIZES, MLP_SUBCARRIERS
+from repro.core import AdmmConfig, ChannelConfig, SubcarrierPlan, make
+from repro.data.federated import make_batch_fn, split_dirichlet, split_iid
+from repro.data.synthetic import image_dataset
+from repro.models.mlp import init_mlp_flat, make_loss_fns
+from repro.optim import adam
+from repro.optim.local_solvers import prox_adam_solver
+from repro.train import train
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _task(split: str, n_workers: int = 8, rho: float = 0.5):
+    n_train, n_test = 4000, 800
+    xtr, ytr, xte, yte = image_dataset(KEY, n_train, n_test, dim=MLP_IMG_DIM,
+                                       cluster_std=3.0)
+    if split == "iid":
+        shards = split_iid(jax.random.fold_in(KEY, 1), n_train, n_workers)
+    else:
+        shards = split_dirichlet(jax.random.fold_in(KEY, 1), ytr, n_workers,
+                                 alpha=0.3)
+    flat0, unflatten = init_mlp_flat(jax.random.fold_in(KEY, 2), MLP_SIZES)
+    d = int(flat0.shape[0])
+    loss, grad, acc = make_loss_fns(unflatten)
+    batch_fn = make_batch_fn((xtr, ytr), shards, batch_size=64)
+    ctr = {"i": 0}
+
+    def grad_fn(theta_w):
+        ctr["i"] += 1
+        bx, by = batch_fn(jax.random.fold_in(KEY, 500 + ctr["i"]), 0)
+        return jax.vmap(grad)(theta_w, bx, by)
+
+    solver = prox_adam_solver(grad_fn, adam(0.01), n_steps=5, rho=rho)
+    theta0 = jnp.broadcast_to(flat0[None], (n_workers, d)) \
+        + 0.01 * jax.random.normal(KEY, (n_workers, d))
+
+    def eval_fn(theta):
+        return {"loss": loss(theta, xte, yte),
+                "accuracy": acc(theta, xte, yte)}
+
+    return theta0, solver, grad_fn, eval_fn, d, n_workers
+
+
+def ablation_decentralized(rounds: int = 300):
+    """Paper §6 "Decentralized Architecture": chain GADMM with analog
+    neighbour links vs the PS-based algorithms — channel uses per round are
+    2 (spatial reuse), and no worker ever talks to a central server."""
+    import jax.numpy as jnp
+
+    from repro.core.decentralized import (AnalogGadmm,
+                                          gadmm_quadratic_solver)
+    from repro.data.synthetic import linreg_dataset
+
+    key = jax.random.PRNGKey(11)
+    W, d = 8, 6
+    X, y, _ = linreg_dataset(key, 2000, d)
+    m = 2000 // W
+    Xw = X[: m * W].reshape(W, m, d) / jnp.sqrt(m)
+    yw = y[: m * W].reshape(W, m) / jnp.sqrt(m)
+    theta_star = jnp.linalg.solve(X.T @ X, X.T @ y)
+    f = lambda th: float(jnp.mean((y - X @ th) ** 2))
+
+    ccfg = ChannelConfig(n_workers=W, n_subcarriers=d, noisy=True,
+                         snr_db=40.0)
+    alg = AnalogGadmm(ccfg=ccfg, plan=SubcarrierPlan.build(d, d), rho=1.0)
+    solver = gadmm_quadratic_solver(Xw, yw, alg.rho)
+    st = alg.init(key, jax.random.normal(key, (W, d)))
+    step = jax.jit(lambda st, k: alg.round(k, st, solver, None))
+    for i in range(rounds):
+        st, met = step(st, jax.random.fold_in(key, i))
+    return {
+        "final_gap": abs(f(alg.global_model(st)) - f(theta_star)),
+        "consensus_gap": float(met["consensus_gap"]),
+        "channel_uses_per_round": float(met["channel_uses"]),
+    }
+
+
+def ablation_noniid(rounds: int = 20):
+    out = {}
+    for split in ("iid", "dirichlet0.3"):
+        theta0, solver, grad_fn, eval_fn, d, W = _task(split)
+        row = {}
+        for name, extra in [("afadmm", None),
+                            ("analog_gd", dict(learning_rate=5e-2,
+                                               epsilon=1e-6))]:
+            acfg = AdmmConfig(rho=0.5, flip_on_change=False,
+                              power_control=True)
+            ccfg = ChannelConfig(n_workers=W, n_subcarriers=MLP_SUBCARRIERS,
+                                 snr_db=40.0)
+            alg = make(name, acfg, ccfg, SubcarrierPlan.build(d, MLP_SUBCARRIERS),
+                       **(extra or {}))
+            hist = train(alg, theta0, solver, grad_fn, rounds,
+                         jax.random.fold_in(KEY, 9), eval_fn=eval_fn,
+                         eval_every=rounds - 1)
+            row[name] = hist.accuracy[-1]
+        out[split] = row
+    return out

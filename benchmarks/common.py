@@ -1,0 +1,149 @@
+"""Shared benchmark infrastructure: the paper's two tasks + algorithm
+runners, scaled to run on this CPU container while keeping the paper's
+structure (d=6 linreg over 10 subcarriers; 784-128-64-10 MLP over 4096).
+
+Benchmark scale knobs live here so every figure uses consistent settings;
+``FAST`` (default) shrinks workers/rounds ~5-10x vs the paper but keeps every
+ratio the paper's claims depend on (bandwidth per worker, model/subcarrier
+ratio, coherence).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import AdmmConfig, ChannelConfig, SubcarrierPlan, make
+from repro.data.synthetic import image_dataset, linreg_dataset
+from repro.data.federated import make_batch_fn, split_iid
+from repro.models.mlp import init_mlp_flat, make_loss_fns
+from repro.optim import adam
+from repro.optim.local_solvers import exact_quadratic_solver, prox_adam_solver
+from repro.train import History, train
+
+FAST = True
+
+LINREG_WORKERS = 10 if FAST else 100
+LINREG_ROUNDS = 300
+MLP_WORKERS = 10 if FAST else 100
+MLP_SIZES = (64, 32, 16, 10) if FAST else (784, 128, 64, 10)
+MLP_IMG_DIM = MLP_SIZES[0]
+MLP_SUBCARRIERS = 512 if FAST else 4096
+MLP_ROUNDS = 25 if FAST else 200
+
+
+@dataclasses.dataclass
+class LinregTask:
+    X: jax.Array          # (W, m, d)
+    y: jax.Array
+    theta0: jax.Array
+    f_star: float
+    eval_fn: Callable
+    grad_fn: Callable
+    d: int = 6
+
+
+def make_linreg_task(key, n_workers: int = LINREG_WORKERS,
+                     n_samples: int = 2000) -> LinregTask:
+    X, y, _ = linreg_dataset(key, n_samples, 6)
+    m = n_samples // n_workers
+    Xw = X[: m * n_workers].reshape(n_workers, m, 6) / jnp.sqrt(m)
+    yw = y[: m * n_workers].reshape(n_workers, m) / jnp.sqrt(m)
+    Xf, yf = X, y
+
+    def f_total(th):
+        r = yf - Xf @ th
+        return jnp.mean(r * r)
+
+    theta_star = jnp.linalg.solve(Xf.T @ Xf, Xf.T @ yf)
+    f_star = float(f_total(theta_star))
+
+    def grad_fn(theta):
+        r = jnp.einsum("wmd,wd->wm", Xw, theta) - yw
+        return 2.0 * jnp.einsum("wmd,wm->wd", Xw, r)
+
+    def eval_fn(Theta):
+        return {"loss": jnp.abs(f_total(Theta) - f_star)}
+
+    theta0 = jax.random.normal(jax.random.fold_in(key, 9),
+                               (n_workers, 6))
+    return LinregTask(X=Xw, y=yw, theta0=theta0, f_star=f_star,
+                      eval_fn=eval_fn, grad_fn=grad_fn)
+
+
+def linreg_algorithm(name: str, task: LinregTask, *, snr_db=40.0,
+                     noisy=True, rho=0.5, n_sub=10, extra=None):
+    W = task.theta0.shape[0]
+    acfg = AdmmConfig(rho=rho, flip_on_change=True, power_control=True)
+    ccfg = ChannelConfig(n_workers=W, n_subcarriers=n_sub, snr_db=snr_db,
+                         noisy=noisy)
+    plan = SubcarrierPlan.build(task.d, n_sub)
+    alg = make(name, acfg, ccfg, plan, **(extra or {}))
+    solver = exact_quadratic_solver(task.X, task.y, rho)
+    return alg, solver
+
+
+@dataclasses.dataclass
+class MlpTask:
+    theta0: jax.Array
+    solver: Callable
+    grad_fn: Callable
+    eval_fn: Callable
+    d: int
+
+
+def make_mlp_task(key, n_workers: int = MLP_WORKERS, rho: float = 0.5,
+                  local_iters: int = 20 if not FAST else 5,
+                  lr: float = 0.01, batch: int = 100) -> MlpTask:
+    n_train, n_test = (4000, 800) if FAST else (60000, 10000)
+    # cluster_std 3.0 keeps the task unsaturated at FAST scale so the
+    # algorithm ranking (paper Fig. 3) stays visible
+    xtr, ytr, xte, yte = image_dataset(key, n_train, n_test, dim=MLP_IMG_DIM,
+                                       cluster_std=3.0)
+    shards = split_iid(jax.random.fold_in(key, 1), n_train, n_workers)
+    flat0, unflatten = init_mlp_flat(jax.random.fold_in(key, 2), MLP_SIZES)
+    d = int(flat0.shape[0])
+    loss, grad, acc = make_loss_fns(unflatten)
+    batch_fn = make_batch_fn((xtr, ytr), shards, batch_size=batch)
+
+    rng = {"i": 0}
+
+    def sample():
+        rng["i"] += 1
+        return batch_fn(jax.random.fold_in(key, 10_000 + rng["i"]), 0)
+
+    def grad_fn(theta_w):
+        bx, by = sample()
+        return jax.vmap(grad)(theta_w, bx, by)
+
+    solver = prox_adam_solver(
+        lambda th: grad_fn(th), adam(lr), n_steps=local_iters, rho=rho)
+
+    def eval_fn(theta):
+        return {"loss": loss(theta, xte, yte),
+                "accuracy": acc(theta, xte, yte)}
+
+    theta0 = jnp.broadcast_to(flat0[None], (n_workers, d)) + \
+        0.01 * jax.random.normal(key, (n_workers, d))
+    return MlpTask(theta0=theta0, solver=solver, grad_fn=grad_fn,
+                   eval_fn=eval_fn, d=d)
+
+
+def mlp_algorithm(name: str, task: MlpTask, *, snr_db=40.0, noisy=True,
+                  rho=0.5, n_sub=MLP_SUBCARRIERS, extra=None):
+    W = task.theta0.shape[0]
+    acfg = AdmmConfig(rho=rho, flip_on_change=False, power_control=True)
+    ccfg = ChannelConfig(n_workers=W, n_subcarriers=n_sub, snr_db=snr_db,
+                         noisy=noisy)
+    plan = SubcarrierPlan.build(task.d, n_sub)
+    return make(name, acfg, ccfg, plan, **(extra or {}))
+
+
+def timed(fn: Callable) -> Dict:
+    t0 = time.time()
+    derived = fn()
+    dt = time.time() - t0
+    return {"seconds": dt, "derived": derived}

@@ -1,0 +1,69 @@
+"""Paper Fig. 3 — image classification with the 784-128-64-10 MLP
+(A-SFADMM / D-SFADMM / A-SGD stochastic variants).
+
+(a) test accuracy vs # uploads; (b) accuracy vs SNR; (c) channel uses to a
+target accuracy vs # workers.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import (MLP_ROUNDS, make_mlp_task, mlp_algorithm)
+from repro.train import train
+
+KEY = jax.random.PRNGKey(1)
+
+
+def fig3a_comm_efficiency(rounds: int = MLP_ROUNDS):
+    task = make_mlp_task(KEY)
+    out = {}
+    for name, kw in [("afadmm", {}),
+                     ("dfadmm", {}),
+                     ("analog_gd", dict(extra=dict(learning_rate=5e-2,
+                                                   epsilon=1e-6)))]:
+        alg = mlp_algorithm(name, task, **kw)
+        hist = train(alg, task.theta0, task.solver, task.grad_fn, rounds,
+                     jax.random.fold_in(KEY, 1), eval_fn=task.eval_fn,
+                     eval_every=max(rounds // 5, 1))
+        out["A-S" + name.upper() if name == "afadmm" else name] = {
+            "final_accuracy": hist.accuracy[-1],
+            "uploads": sum(hist.channel_uses) / max(hist.channel_uses[0], 1),
+        }
+    return out
+
+
+def fig3b_energy(snrs=(-10.0, 10.0, 40.0), rounds: int = MLP_ROUNDS):
+    task = make_mlp_task(KEY)
+    W = task.theta0.shape[0]
+    out = {}
+    for snr in snrs:
+        row = {}
+        for name in ("afadmm", "dfadmm"):
+            alg = mlp_algorithm(name, task, snr_db=snr)
+            n_rounds = rounds if name == "afadmm" else max(rounds // 4, 3)
+            hist = train(alg, task.theta0, task.solver, task.grad_fn,
+                         n_rounds, jax.random.fold_in(KEY, 2),
+                         eval_fn=task.eval_fn,
+                         eval_every=max(n_rounds - 1, 1))
+            row[name] = hist.accuracy[-1]
+        out[f"snr_{snr:g}dB"] = row
+    return out
+
+
+def fig3c_scalability(workers=(5, 10), target_acc: float = 0.5,
+                      rounds: int = MLP_ROUNDS):
+    out = {}
+    for W in workers:
+        task = make_mlp_task(jax.random.fold_in(KEY, W), n_workers=W)
+        row = {}
+        for name in ("afadmm", "dfadmm"):
+            alg = mlp_algorithm(name, task)
+            hist = train(alg, task.theta0, task.solver, task.grad_fn,
+                         rounds, jax.random.fold_in(KEY, 3),
+                         eval_fn=task.eval_fn)
+            cum = hist.cumulative_uses()
+            idx = next((i for i, a in enumerate(hist.accuracy)
+                        if a > target_acc), None)
+            row[name] = cum[idx] if idx is not None else float("inf")
+        out[f"W={W}"] = row
+    return out

@@ -1,0 +1,61 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (us_per_call = wall time of the whole
+benchmark in microseconds; derived = the figure's headline numbers as JSON).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig2a_comm_efficiency]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def _benchmarks():
+    from benchmarks import (ablation_noniid, fig2_linreg,
+                            fig3_classification, fig5_rho,
+                            kernels_microbench, roofline, serve_microbench)
+    return {
+        "ablation_noniid": ablation_noniid.ablation_noniid,
+        "ablation_decentralized": ablation_noniid.ablation_decentralized,
+        "serve_microbench": serve_microbench.serve_microbench,
+        "fig2a_comm_efficiency": fig2_linreg.fig2a_comm_efficiency,
+        "fig2b_energy": fig2_linreg.fig2b_energy,
+        "fig2c_scalability": fig2_linreg.fig2c_scalability,
+        "fig3a_comm_efficiency": fig3_classification.fig3a_comm_efficiency,
+        "fig3b_energy": fig3_classification.fig3b_energy,
+        "fig3c_scalability": fig3_classification.fig3c_scalability,
+        "fig5_rho_sensitivity": fig5_rho.fig5_rho_sensitivity,
+        "kernels_microbench": kernels_microbench.microbench,
+        "roofline_summary": roofline.roofline_summary,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    benches = _benchmarks()
+    if args.only:
+        benches = {k: v for k, v in benches.items() if args.only in k}
+
+    print("name,us_per_call,derived")
+    ok = True
+    for name, fn in benches.items():
+        t0 = time.time()
+        try:
+            derived = fn()
+            us = (time.time() - t0) * 1e6
+            print(f"{name},{us:.0f},{json.dumps(derived, default=str)}",
+                  flush=True)
+        except Exception as e:  # pragma: no cover
+            ok = False
+            print(f"{name},-1,{json.dumps({'error': repr(e)})}", flush=True)
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Privacy demo (Theorems 2-3): what the parameter server actually sees.
+
+    PYTHONPATH=src python examples/privacy_attack_demo.py
+
+1. Digital FL: the PS decodes every worker's model verbatim — model-inversion
+   attacks get a perfect input.
+2. A-FADMM: the PS sees only the fading-perturbed, dual-shifted SUM.  We
+   construct a second, different set of worker models producing a
+   bit-identical observation — no attack can distinguish them (Definition 1).
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import cplx
+from repro.core.channel import rayleigh
+from repro.core.privacy import (construct_ambiguity, eavesdropper_view,
+                                model_inversion_attack, observation_gap)
+
+key = jax.random.PRNGKey(0)
+W, d, rho = 8, 10, 0.5
+k1, k2, k3 = jax.random.split(key, 3)
+theta = jax.random.normal(k1, (W, d))          # true private local models
+lam = cplx.Complex(0.1 * jax.random.normal(k2, (W, d)), jnp.zeros((W, d)))
+h = rayleigh(k3, (W, d))
+Theta = jnp.mean(theta, 0)
+
+print("=== digital FL (D-FADMM uplink) ===")
+print("PS receives worker 0's model exactly:",
+      jnp.round(theta[0], 3).tolist())
+print("reconstruction error: 0.0  -> privacy violated\n")
+
+print("=== A-FADMM (analog over-the-air uplink) ===")
+view = eavesdropper_view(theta, lam, h, rho, Theta, Theta)
+print("PS receives only the perturbed aggregate (first 5 elements):",
+      jnp.round(view.y.re[:5], 3).tolist())
+
+guess = model_inversion_attack(view, W, rho, key)
+err = float(jnp.sqrt(jnp.mean((guess - theta[0]) ** 2)))
+print(f"best-effort inversion of worker 0: RMSE = {err:.3f} "
+      f"(vs 0.0 under digital)")
+
+theta2, lam2, _ = construct_ambiguity(jax.random.fold_in(key, 7), theta,
+                                      lam, h, rho)
+view2 = eavesdropper_view(theta2, lam2, h, rho, Theta, Theta)
+print(f"\nambiguity witness: a different model set "
+      f"(max |θ'-θ| = {float(jnp.max(jnp.abs(theta2 - theta))):.3f}) gives "
+      f"observation gap {float(observation_gap(view, view2)):.2e}")
+print("-> the inverse problem has multiple exact solutions: Definition-1 "
+      "privacy holds before convergence (Thm 2) and on the trajectory "
+      "after it (Thm 3).")

@@ -1,0 +1,47 @@
+"""Quickstart: A-FADMM on federated linear regression in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Ten workers share one wireless channel; their model updates superpose over
+the air (one channel use per round, regardless of worker count) and the
+parameter server never sees any individual model.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import AdmmConfig, ChannelConfig, SubcarrierPlan, make
+from repro.data.synthetic import linreg_dataset
+from repro.optim import exact_quadratic_solver
+
+W, D, ROUNDS = 10, 6, 200
+key = jax.random.PRNGKey(0)
+
+# --- federated data: 10 workers, equal IID shards -------------------------
+X, y, _ = linreg_dataset(key, n_samples=2000, d=D)
+m = 2000 // W
+Xw = X[: m * W].reshape(W, m, D) / jnp.sqrt(m)
+yw = y[: m * W].reshape(W, m) / jnp.sqrt(m)
+theta_star = jnp.linalg.solve(X.T @ X, X.T @ y)
+f = lambda th: float(jnp.mean((y - X @ th) ** 2))
+
+# --- the wireless channel + the algorithm ----------------------------------
+acfg = AdmmConfig(rho=0.5)                      # paper Sec. 5 default
+ccfg = ChannelConfig(n_workers=W, n_subcarriers=10, snr_db=40.0)
+alg = make("afadmm", acfg, ccfg, SubcarrierPlan.build(D, 10))
+solver = exact_quadratic_solver(Xw, yw, acfg.rho)
+
+
+def grad_fn(theta):
+    r = jnp.einsum("wmd,wd->wm", Xw, theta) - yw
+    return 2.0 * jnp.einsum("wmd,wm->wd", Xw, r)
+
+
+st = alg.init(key, jax.random.normal(key, (W, D)))
+step = jax.jit(lambda st, k: alg.round(k, st, solver, grad_fn))
+for r in range(ROUNDS):
+    st, metrics = step(st, jax.random.fold_in(key, r))
+    if r % 40 == 0 or r == ROUNDS - 1:
+        gap = abs(f(alg.global_model(st)) - f(theta_star))
+        print(f"round {r:3d}  optimality gap {gap:.3e}  "
+              f"channel uses/round {float(metrics['channel_uses']):.0f}")
+print("NB: one channel use per round — independent of the number of workers.")

@@ -1,0 +1,67 @@
+"""End-to-end driver: federated training of a transformer over the simulated
+wireless channel (A-FADMM replicated mode).
+
+    PYTHONPATH=src python examples/train_llm_federated.py \
+        [--d-model 256 --layers 8 --steps 300]
+
+Defaults are sized for this single-core CPU container (a ~10M-param
+granite-family decoder, 300 rounds); on real hardware raise --d-model/--layers
+to the 100M+ regime — the driver, trainer, and sharding annotations are the
+same objects the 256-chip dry-run lowers.
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.admm import AdmmConfig
+from repro.core.channel import ChannelConfig
+from repro.data.synthetic import token_dataset
+from repro.models.registry import build_model, get_config
+from repro.train.llm_trainer import FLConfig, make_fl_train
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--d-model", type=int, default=256)
+ap.add_argument("--layers", type=int, default=8)
+ap.add_argument("--vocab", type=int, default=2048)
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--workers", type=int, default=4)
+ap.add_argument("--batch", type=int, default=2)
+ap.add_argument("--seq", type=int, default=64)
+ap.add_argument("--snr-db", type=float, default=40.0)
+args = ap.parse_args()
+
+cfg = dataclasses.replace(
+    get_config("granite-8b"), n_layers=args.layers, d_model=args.d_model,
+    n_heads=max(4, args.d_model // 64), n_kv_heads=max(2, args.d_model // 128),
+    head_dim=64, d_ff=4 * args.d_model, vocab_size=args.vocab,
+    name=f"granite-{args.d_model}d{args.layers}L")
+model = build_model(cfg)
+print(f"model: {cfg.name}  params={cfg.param_count() / 1e6:.1f}M  "
+      f"workers={args.workers}")
+
+key = jax.random.PRNGKey(0)
+W = args.workers
+flcfg = FLConfig(mode="replicated", n_workers=W, local_steps=2,
+                 local_lr=2e-2)
+init_fn, train_step = make_fl_train(
+    model, flcfg, AdmmConfig(rho=0.5, flip_on_change=False),
+    ChannelConfig(n_workers=W, snr_db=args.snr_db))
+
+data = token_dataset(key, 128, args.seq, cfg.vocab_size, n_workers=W)
+st = jax.tree.map(jnp.array, init_fn(key))
+step = jax.jit(train_step, donate_argnums=(0,))
+
+t0 = time.time()
+for r in range(args.steps):
+    kb = jax.random.fold_in(key, r)
+    idx = jax.random.randint(kb, (W, args.batch), 0, data.shape[1])
+    batch = {"tokens": jnp.take_along_axis(data, idx[:, :, None], axis=1)}
+    st, m = step(st, batch, jax.random.fold_in(key, 10_000 + r))
+    if r % 25 == 0 or r == args.steps - 1:
+        print(f"step {r:4d}  loss={float(m['loss']):.4f}  "
+              f"worker-drift={float(m['theta_drift']):.4f}  "
+              f"({(time.time() - t0) / (r + 1):.2f}s/step)", flush=True)
+print(f"total {time.time() - t0:.0f}s")

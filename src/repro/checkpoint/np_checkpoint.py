@@ -1,0 +1,64 @@
+"""Checkpointing: numpy-based pytree save/restore (no orbax in container).
+
+Pytree leaves are stored in a single ``.npz`` keyed by their joined tree
+path; the treedef is reconstructed from the path keys on restore (dicts,
+lists/tuples, and registered NamedTuples like ``Complex`` round-trip because
+they flatten to path-addressable leaves).
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_SEP = "|"
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(f"#{p.idx}")
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return _SEP.join(parts)
+
+
+def _to_np(v) -> np.ndarray:
+    a = np.asarray(v)
+    if a.dtype.name == "bfloat16":  # npz can't round-trip ml_dtypes
+        a = a.astype(np.float32)
+    return a
+
+
+def save(path: str, tree: PyTree) -> None:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays = {_path_str(p): _to_np(v) for p, v in flat}
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **arrays)
+
+
+def restore(path: str, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (shape/dtype-checked)."""
+    with np.load(path if path.endswith(".npz") else path + ".npz") as zf:
+        data = {k: zf[k] for k in zf.files}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for p, proto in flat:
+        key = _path_str(p)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(proto.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {proto.shape}")
+        out.append(jax.numpy.asarray(arr).astype(proto.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

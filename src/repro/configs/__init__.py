@@ -1,0 +1,5 @@
+"""Per-architecture configs (one module per assigned arch).
+
+Select with --arch <id> in repro.launch.{train,dryrun}.
+"""
+from repro.models.registry import ARCHS, get_config, list_archs  # noqa: F401

@@ -1,0 +1,12 @@
+"""Config: codeqwen1.5-7b  [hf:Qwen/CodeQwen1.5-7B].
+
+Exact dims live in the central registry (repro.models.registry.ARCHS)
+so one source of truth serves --arch selection, smoke tests, and the
+dry-run manifest.  This module re-exports them plus the reduced smoke
+variant.
+"""
+from repro.models.registry import get_config
+
+ARCH = "codeqwen1.5-7b"
+CONFIG = get_config(ARCH)
+REDUCED = CONFIG.reduced()

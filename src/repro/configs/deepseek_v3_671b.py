@@ -1,0 +1,12 @@
+"""Config: deepseek-v3-671b  [arXiv:2412.19437].
+
+Exact dims live in the central registry (repro.models.registry.ARCHS)
+so one source of truth serves --arch selection, smoke tests, and the
+dry-run manifest.  This module re-exports them plus the reduced smoke
+variant.
+"""
+from repro.models.registry import get_config
+
+ARCH = "deepseek-v3-671b"
+CONFIG = get_config(ARCH)
+REDUCED = CONFIG.reduced()

@@ -1,0 +1,15 @@
+"""The paper's own image-classification model (Sec. 5): 784-128-64-10 MLP,
+ReLU hidden activations, softmax output, cross-entropy loss.
+
+The paper's model size d = 109,184 = 784*128 + 128*64 + 64*10 (weights only;
+the paper's count excludes biases).  Our implementation includes biases
+(d = 109,386) and the subcarrier plan adapts automatically.
+"""
+LAYER_SIZES = (784, 128, 64, 10)
+PAPER_MODEL_SIZE_D = 784 * 128 + 128 * 64 + 64 * 10
+assert PAPER_MODEL_SIZE_D == 109_184
+N_SUBCARRIERS = 4096
+LOCAL_ITERS = 20        # Appendix H: 20 local Adam iterations per round
+LOCAL_LR = 0.01
+BATCH_SIZE = 100
+RHO = 0.5

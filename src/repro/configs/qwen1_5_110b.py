@@ -1,0 +1,12 @@
+"""Config: qwen1.5-110b  [hf:Qwen/Qwen1.5-110B (arch family: Qwen1.5, QKV bias)].
+
+Exact dims live in the central registry (repro.models.registry.ARCHS)
+so one source of truth serves --arch selection, smoke tests, and the
+dry-run manifest.  This module re-exports them plus the reduced smoke
+variant.
+"""
+from repro.models.registry import get_config
+
+ARCH = "qwen1.5-110b"
+CONFIG = get_config(ARCH)
+REDUCED = CONFIG.reduced()

@@ -1,0 +1,12 @@
+"""Config: qwen3-moe-30b-a3b  [hf:Qwen/Qwen3-30B-A3B].
+
+Exact dims live in the central registry (repro.models.registry.ARCHS)
+so one source of truth serves --arch selection, smoke tests, and the
+dry-run manifest.  This module re-exports them plus the reduced smoke
+variant.
+"""
+from repro.models.registry import get_config
+
+ARCH = "qwen3-moe-30b-a3b"
+CONFIG = get_config(ARCH)
+REDUCED = CONFIG.reduced()

@@ -1,0 +1,10 @@
+"""Core A-FADMM library: the paper's contribution as composable JAX modules."""
+from repro.core.admm import AdmmConfig, AFadmmState, afadmm_round  # noqa: F401
+from repro.core.aggregators import (ALGORITHMS, AFadmm, AnalogGD, DFadmm,  # noqa: F401
+                                    FedAvg, make)
+from repro.core.channel import (ChannelBlock, ChannelConfig, awgn,  # noqa: F401
+                                init_channel, rayleigh, shannon_rate,
+                                step_channel)
+from repro.core.cplx import Complex  # noqa: F401
+from repro.core.sketch import SketchPlan, decode, encode  # noqa: F401
+from repro.core.subcarrier import SubcarrierPlan, flatten  # noqa: F401

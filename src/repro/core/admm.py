@@ -1,0 +1,221 @@
+"""A-FADMM: analog federated ADMM — the paper's core algorithm (Sec. 2).
+
+Pure-functional update rules on ``(W, d)`` worker-major arrays.  The worker
+axis ``W`` may be a real leading dimension (single-host simulation, the
+paper's own experiments) or sharded over the mesh ``data`` axis (the
+production trainer wraps the superposition in a ``psum``) — every function
+here is elementwise over (worker, element) except the explicit reductions,
+which accept a pluggable ``reduce_fn`` so the caller chooses ``jnp.sum`` vs
+``lax.psum``.
+
+Update rules implemented (paper equation numbers):
+
+* modulate   (Alg. 1 l.14):   s_{n,i} = h*_{n,i} θ_{n,i} + λ*_{n,i}/ρ
+* uplink     (Eq. 23):        y_i = Σ_n h_{n,i} s_{n,i} + z_i,  z ~ CN(0, N0/T)
+* global     (Eq. 9/24):      Θ_i = Re{y_i} / Σ_n |h_{n,i}|²
+* primal     (Eq. 6/10):      0 ∈ ∂f + Re{λ* h} + ρ|h|²(θ − Θ)   [solved by caller]
+* dual       (Eq. 8/11):      λ' = λ + ρ h (θ − Θ)  (− ρ Re{z} under analog downlink)
+* flip rule  (Sec. 2, "Time-varying Channel"): when h^{k+1} ≠ h^k freeze θ and
+  re-solve the stationarity condition for λ:  λ = t·h/|h|²  with
+  t = −(∂f(θ) + ρ|h|²(θ − Θ)) so that λ* h = t exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cplx
+from repro.core.channel import ChannelBlock, ChannelConfig, matched_filter_noise
+from repro.core.cplx import Complex
+
+Array = jax.Array
+ReduceFn = Callable[[Array], Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmmConfig:
+    """Hyperparameters of the ADMM layer (paper Sec. 5 defaults)."""
+
+    rho: float = 0.5
+    #: apply the time-varying-channel flip rule (Sec. 2). Appendix H notes the
+    #: stochastic variants may skip it (primal-only updates) and still converge.
+    flip_on_change: bool = True
+    #: enforce the per-worker transmit power budget via the min-α protocol
+    power_control: bool = True
+
+
+class AFadmmState(NamedTuple):
+    """Per-round algorithm state. Shapes: theta/lam (W, d); Theta (d,)."""
+
+    theta: Array
+    lam: Complex
+    Theta: Array
+    blk: ChannelBlock
+    step: Array  # int32
+
+
+def init_state(key: Array, theta0: Array, blk: ChannelBlock) -> AFadmmState:
+    """theta0: (W, d) initial local models (paper: random init)."""
+    W, d = theta0.shape
+    return AFadmmState(
+        theta=theta0,
+        lam=cplx.czero((W, d), theta0.dtype),
+        Theta=jnp.mean(theta0, axis=0),
+        blk=blk,
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Signal-level primitives (the over-the-air pipeline)
+# ---------------------------------------------------------------------------
+
+def modulate(theta: Array, lam: Complex, h: Complex, rho: float) -> Complex:
+    """Worker TX signal s = h*·θ + λ*/ρ  (Alg. 1 line 14)."""
+    hc = cplx.conj(h)
+    lc = cplx.conj(lam)
+    return Complex(hc.re * theta + lc.re / rho, hc.im * theta + lc.im / rho)
+
+
+def superpose(signals: Complex, h: Complex,
+              reduce_fn: Optional[ReduceFn] = None) -> Tuple[Complex, Array]:
+    """The air: y = Σ_n h_n ⊙ s_n ; also the pilot aggregate Σ_n |h_n|².
+
+    ``signals``/``h``: (W, d).  Returns ((d,) Complex, (d,) Array) under the
+    default reducer; under shard_map the caller passes a psum reducer and the
+    local W slice is partial.
+    """
+    rx = cplx.cmul(h, signals)  # (W, d)
+    sumh2 = cplx.abs2(h)
+    if reduce_fn is None:
+        reduce_fn = lambda x: jnp.sum(x, axis=0)
+    return Complex(reduce_fn(rx.re), reduce_fn(rx.im)), reduce_fn(sumh2)
+
+
+def demodulate(y: Complex, sumh2: Array, noise: Complex,
+               inv_alpha: Array | float = 1.0) -> Array:
+    """PS global update Θ = Re{y + z/α} / Σ|h|²  (Eq. 24)."""
+    re = y.re + noise.re * inv_alpha
+    return re / jnp.maximum(sumh2, 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# ADMM update rules
+# ---------------------------------------------------------------------------
+
+def penalty_grad(theta: Array, lam: Complex, h: Complex, Theta: Array,
+                 rho: float) -> Array:
+    """∇ of the augmented-Lagrangian terms added to f_n (for prox local steps).
+
+    d/dθ [ Re{λ* h} θ + ρ/2 |h|² (θ − Θ)² ] = Re{λ* h} + ρ|h|²(θ − Θ).
+    """
+    mu = cplx.cmul_conj(h, lam).re  # Re{λ* h} == Re{h λ*}
+    return mu + rho * cplx.abs2(h) * (theta - Theta)
+
+
+def flip_lambda(grad_f: Array, theta: Array, Theta_prev: Array, h: Complex,
+                rho: float) -> Complex:
+    """Re-solve stationarity (Eq. 6) for λ when the channel changed.
+
+    Target: λ* h = t := −(∂f(θ) + ρ|h|²(θ − Θ^k)).  The minimum-norm complex
+    solution is λ = t · h / |h|²  (then λ* h = t, real, exactly).
+    """
+    t = -(grad_f + rho * cplx.abs2(h) * (theta - Theta_prev))
+    scale = t / jnp.maximum(cplx.abs2(h), 1e-12)
+    return Complex(h.re * scale, h.im * scale)
+
+
+def dual_update(lam: Complex, h: Complex, theta: Array, Theta: Array,
+                rho: float, noise_re: Array | float = 0.0) -> Complex:
+    """Eq. (11): λ' = λ + ρ h (θ − Θ) − ρ Re{z} (noise term only if the
+    downlink is analog; the default digital downlink is error-free)."""
+    r = theta - Theta
+    return Complex(lam.re + rho * (h.re * r - noise_re), lam.im + rho * h.im * r)
+
+
+def residuals(state: AFadmmState, Theta_prev: Array) -> Tuple[Array, Array]:
+    """(primal, dual) residual norms of Theorem 1: r = θ−Θ, S = ρ|h|²(Θ'−Θ)."""
+    r = state.theta - state.Theta[None, :]
+    h2 = cplx.abs2(state.blk.h)
+    S = h2 * (state.Theta - Theta_prev)[None, :]
+    return jnp.sqrt(jnp.sum(r * r)), jnp.sqrt(jnp.sum(S * S))
+
+
+# ---------------------------------------------------------------------------
+# One full A-FADMM round
+# ---------------------------------------------------------------------------
+
+LocalSolve = Callable[[Array, Complex, Complex, Array], Array]
+GradFn = Callable[[Array], Array]
+
+
+def afadmm_round(
+    state: AFadmmState,
+    blk_next: ChannelBlock,
+    local_solve: LocalSolve,
+    grad_fn: GradFn,
+    acfg: AdmmConfig,
+    ccfg: ChannelConfig,
+    key: Array,
+    reduce_fn: Optional[ReduceFn] = None,
+    min_reduce_fn: Optional[Callable[[Array], Array]] = None,
+) -> Tuple[AFadmmState, dict]:
+    """One synchronous round of Algorithm 1 (with Appendix-B noise handling).
+
+    Args:
+      blk_next: the channel block for iteration k+1 (caller steps the channel
+        so the trainer can account coherence across rounds).
+      local_solve: ``(theta, lam, h, Theta) -> theta'`` — solves/approximates
+        the primal problem (Eq. 6/10) *ignoring* the flip mask (applied here).
+      grad_fn: ``theta -> ∂f(θ)`` per worker, used by the flip rule. Shapes
+        (W, d) -> (W, d).
+    """
+    h = blk_next.h
+    changed = blk_next.changed
+    rho = acfg.rho
+
+    # --- primal / flip (Sec. 2 "Time-varying Channel") --------------------
+    theta_solved = local_solve(state.theta, state.lam, h, state.Theta)
+    if acfg.flip_on_change:
+        theta_new = jnp.where(changed, state.theta, theta_solved)
+        lam_flip = flip_lambda(grad_fn(state.theta), state.theta, state.Theta, h, rho)
+        lam_pre = cplx.cwhere(changed, lam_flip, state.lam)
+    else:
+        theta_new = theta_solved
+        lam_pre = state.lam
+
+    # --- uplink: modulate, power-scale, superpose, matched-filter ---------
+    signals = modulate(theta_new, lam_pre, h, rho)
+    if acfg.power_control:
+        from repro.core.power import min_alpha  # local import: avoid cycle
+        # Budget: per-subcarrier power P (the paper's SNR definition is
+        # per-subcarrier: SNR = P|h|^2/(N0 W)) times the elements uploaded.
+        budget = ccfg.transmit_power * signals.re.shape[-1]
+        inv_alpha = 1.0 / min_alpha(signals, budget,
+                                    min_reduce_fn=min_reduce_fn)
+    else:
+        inv_alpha = jnp.asarray(1.0, theta_new.dtype)
+    y, sumh2 = superpose(signals, h, reduce_fn)
+    noise = matched_filter_noise(key, y.re.shape, ccfg)
+    Theta_new = demodulate(y, sumh2, noise, inv_alpha)
+
+    # --- downlink + dual ---------------------------------------------------
+    if ccfg.analog_downlink:
+        kd = jax.random.fold_in(key, 1)
+        dn = matched_filter_noise(kd, state.theta.shape, ccfg)
+        lam_new = dual_update(lam_pre, h, theta_new, Theta_new, rho, dn.re)
+    else:
+        lam_new = dual_update(lam_pre, h, theta_new, Theta_new, rho)
+
+    new_state = AFadmmState(theta=theta_new, lam=lam_new, Theta=Theta_new,
+                            blk=blk_next, step=state.step + 1)
+    metrics = {
+        "primal_residual": jnp.sqrt(jnp.mean((theta_new - Theta_new[None, :]) ** 2)),
+        "dual_residual": jnp.sqrt(jnp.mean(
+            (cplx.abs2(h) * (Theta_new - state.Theta)[None, :]) ** 2)) * rho,
+        "inv_alpha": jnp.asarray(inv_alpha),
+    }
+    return new_state, metrics

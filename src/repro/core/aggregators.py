@@ -1,0 +1,250 @@
+"""Federated aggregation algorithms — the framework's first-class plug point.
+
+Every algorithm exposes the same functional interface so the trainer, the
+benchmarks, and the distributed launcher are agnostic to *how* updates travel:
+
+    alg = make("afadmm", acfg, ccfg, plan)
+    st  = alg.init(key, theta0)                     # theta0: (W, d)
+    st, m = alg.round(key, st, local_solve, grad_fn)
+    Theta = alg.global_model(st)
+
+Implemented algorithms (paper Sec. 5 benchmark set):
+
+* ``afadmm``  — A-FADMM (the paper): analog OTA, no channel inversion.
+* ``dfadmm``  — D-FADMM: digital orthogonal-subcarrier ADMM (Appendix A),
+                Shannon-rate channel-use accounting (Appendix H).
+* ``analog_gd`` — A-GD/A-SGD: first-order analog FL with *truncated channel
+                inversion* (transmit only when |h| ≥ ε) [refs 9-11].
+* ``fedavg``  — plain FedAvg (no channel), the ideal-link reference.
+
+``local_solve(theta, lam, h, Theta) -> theta'`` approximates the primal
+problem; ``grad_fn(theta) -> ∂f(θ)`` supplies gradients (flip rule, A-GD).
+The worker axis is shardable: pass ``reduce_fn``/``min_reduce_fn`` for psum /
+pmin under shard_map.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import admm, cplx, subcarrier
+from repro.core.admm import AdmmConfig, AFadmmState
+from repro.core.channel import (ChannelBlock, ChannelConfig, init_channel,
+                                matched_filter_noise, shannon_rate,
+                                step_channel)
+from repro.core.cplx import Complex
+from repro.core.subcarrier import SubcarrierPlan
+
+Array = jax.Array
+LocalSolve = Callable[[Array, Complex, Complex, Array], Array]
+GradFn = Callable[[Array], Array]
+
+
+# ---------------------------------------------------------------------------
+# A-FADMM (the paper)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AFadmm:
+    acfg: AdmmConfig
+    ccfg: ChannelConfig
+    plan: SubcarrierPlan
+    reduce_fn: Optional[Callable[[Array], Array]] = None
+    min_reduce_fn: Optional[Callable[[Array], Array]] = None
+
+    name = "afadmm"
+
+    def init(self, key: Array, theta0: Array) -> AFadmmState:
+        kc, _ = jax.random.split(key)
+        blk = init_channel(kc, self.ccfg, n_coeffs=theta0.shape[-1])
+        return admm.init_state(key, theta0, blk)
+
+    def round(self, key: Array, st: AFadmmState, local_solve: LocalSolve,
+              grad_fn: GradFn) -> Tuple[AFadmmState, dict]:
+        kc, kn = jax.random.split(key)
+        blk_next = step_channel(kc, st.blk, self.ccfg)
+        st, metrics = admm.afadmm_round(
+            st, blk_next, local_solve, grad_fn, self.acfg, self.ccfg, kn,
+            reduce_fn=self.reduce_fn, min_reduce_fn=self.min_reduce_fn)
+        metrics["channel_uses"] = jnp.asarray(
+            float(subcarrier.analog_channel_uses(self.plan)))
+        return st, metrics
+
+    def global_model(self, st: AFadmmState) -> Array:
+        return st.Theta
+
+
+# ---------------------------------------------------------------------------
+# D-FADMM (digital baseline, Appendix A)
+# ---------------------------------------------------------------------------
+
+class DFadmmState(NamedTuple):
+    theta: Array   # (W, d)
+    lam: Array     # (W, d) real duals
+    Theta: Array   # (d,)
+    blk: ChannelBlock  # for Shannon channel-use accounting only
+    step: Array
+
+
+@dataclasses.dataclass(frozen=True)
+class DFadmm:
+    acfg: AdmmConfig
+    ccfg: ChannelConfig
+    plan: SubcarrierPlan
+    bits_per_element: int = 32
+    reduce_fn: Optional[Callable[[Array], Array]] = None
+
+    name = "dfadmm"
+
+    def init(self, key: Array, theta0: Array) -> DFadmmState:
+        blk = init_channel(key, self.ccfg)  # per-subcarrier rates
+        return DFadmmState(theta=theta0, lam=jnp.zeros_like(theta0),
+                           Theta=jnp.mean(theta0, axis=0), blk=blk,
+                           step=jnp.zeros((), jnp.int32))
+
+    def round(self, key: Array, st: DFadmmState, local_solve: LocalSolve,
+              grad_fn: GradFn) -> Tuple[DFadmmState, dict]:
+        del grad_fn
+        rho = self.acfg.rho
+        ones = cplx.from_real(jnp.ones_like(st.theta))
+        lam_c = cplx.from_real(st.lam)
+        theta_new = local_solve(st.theta, lam_c, ones, st.Theta)  # Eq. (20)
+        reduce_fn = self.reduce_fn or (lambda x: jnp.sum(x, axis=0))
+        n = jnp.asarray(self.ccfg.n_workers, st.theta.dtype)
+        Theta_new = reduce_fn(theta_new + st.lam / rho) / n        # Eq. (21)
+        lam_new = st.lam + rho * (theta_new - Theta_new[None, :])  # Eq. (22)
+
+        blk_next = step_channel(key, st.blk, self.ccfg)
+        # Appendix H straggler accounting: orthogonal S/N subcarriers/worker.
+        s_w = max(self.ccfg.n_subcarriers // self.ccfg.n_workers, 1)
+        rates = shannon_rate(blk_next.h, self.ccfg)[:, :s_w]  # (N, S/N) bits/slot
+        bits = float(self.bits_per_element * self.plan.d)
+        uses = subcarrier.digital_channel_uses(rates, bits, s_w)
+
+        new_st = DFadmmState(theta=theta_new, lam=lam_new, Theta=Theta_new,
+                             blk=blk_next, step=st.step + 1)
+        metrics = {
+            "primal_residual": jnp.sqrt(jnp.mean((theta_new - Theta_new[None, :]) ** 2)),
+            "dual_residual": rho * jnp.sqrt(jnp.mean((Theta_new - st.Theta) ** 2)),
+            "channel_uses": uses,
+        }
+        return new_st, metrics
+
+    def global_model(self, st: DFadmmState) -> Array:
+        return st.Theta
+
+
+# ---------------------------------------------------------------------------
+# A-GD / A-SGD (truncated channel inversion, refs [9-11])
+# ---------------------------------------------------------------------------
+
+class AnalogGDState(NamedTuple):
+    Theta: Array  # (d,) — first-order methods keep one global model
+    blk: ChannelBlock
+    step: Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalogGD:
+    ccfg: ChannelConfig
+    plan: SubcarrierPlan
+    learning_rate: float = 1e-4
+    #: truncation threshold ε: transmit only when |h| ≥ ε (Appendix H: 1e-6)
+    epsilon: float = 1e-6
+    reduce_fn: Optional[Callable[[Array], Array]] = None
+
+    name = "analog_gd"
+
+    def init(self, key: Array, theta0: Array) -> AnalogGDState:
+        blk = init_channel(key, self.ccfg, n_coeffs=theta0.shape[-1])
+        return AnalogGDState(Theta=jnp.mean(theta0, axis=0), blk=blk,
+                             step=jnp.zeros((), jnp.int32))
+
+    def round(self, key: Array, st: AnalogGDState, local_solve: LocalSolve,
+              grad_fn: GradFn) -> Tuple[AnalogGDState, dict]:
+        del local_solve
+        kc, kn = jax.random.split(key)
+        blk = step_channel(kc, st.blk, self.ccfg)
+        W = self.ccfg.n_workers
+        theta_rep = jnp.broadcast_to(st.Theta[None, :], (W, st.Theta.shape[0]))
+        g = grad_fn(theta_rep)  # (W, d) local gradients at the global model
+        mask = (jnp.sqrt(cplx.abs2(blk.h)) >= self.epsilon).astype(g.dtype)
+        # channel inversion: tx g/h, channel applies h -> PS sees masked sum + z
+        reduce_fn = self.reduce_fn or (lambda x: jnp.sum(x, axis=0))
+        num = reduce_fn(mask * g)
+        den = jnp.maximum(reduce_fn(mask), 1.0)
+        noise = matched_filter_noise(kn, st.Theta.shape, self.ccfg)
+        g_hat = num / den + noise.re / jnp.maximum(den, 1.0)
+        Theta_new = st.Theta - self.learning_rate * g_hat
+        metrics = {
+            "participation": jnp.mean(mask),
+            "channel_uses": jnp.asarray(float(self.plan.n_slots)),
+            "grad_norm": jnp.sqrt(jnp.sum(g_hat ** 2)),
+        }
+        return AnalogGDState(Theta=Theta_new, blk=blk, step=st.step + 1), metrics
+
+    def global_model(self, st: AnalogGDState) -> Array:
+        return st.Theta
+
+
+# ---------------------------------------------------------------------------
+# FedAvg (ideal-link reference)
+# ---------------------------------------------------------------------------
+
+class FedAvgState(NamedTuple):
+    theta: Array
+    Theta: Array
+    step: Array
+
+
+@dataclasses.dataclass(frozen=True)
+class FedAvg:
+    ccfg: ChannelConfig
+    plan: SubcarrierPlan
+    reduce_fn: Optional[Callable[[Array], Array]] = None
+
+    name = "fedavg"
+
+    def init(self, key: Array, theta0: Array) -> FedAvgState:
+        return FedAvgState(theta=theta0, Theta=jnp.mean(theta0, axis=0),
+                           step=jnp.zeros((), jnp.int32))
+
+    def round(self, key: Array, st: FedAvgState, local_solve: LocalSolve,
+              grad_fn: GradFn) -> Tuple[FedAvgState, dict]:
+        del key, grad_fn
+        ones = cplx.from_real(jnp.ones_like(st.theta))
+        zer = cplx.czero(st.theta.shape, st.theta.dtype)
+        theta_new = local_solve(st.theta, zer, ones, st.Theta)
+        reduce_fn = self.reduce_fn or (lambda x: jnp.sum(x, axis=0))
+        Theta_new = reduce_fn(theta_new) / self.ccfg.n_workers
+        theta_sync = jnp.broadcast_to(Theta_new[None, :], st.theta.shape)
+        metrics = {"channel_uses": jnp.asarray(float(self.plan.n_slots))}
+        return FedAvgState(theta=theta_sync, Theta=Theta_new,
+                           step=st.step + 1), metrics
+
+    def global_model(self, st: FedAvgState) -> Array:
+        return st.Theta
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+ALGORITHMS = {
+    "afadmm": AFadmm,
+    "dfadmm": DFadmm,
+    "analog_gd": AnalogGD,
+    "fedavg": FedAvg,
+}
+
+
+def make(name: str, acfg: AdmmConfig, ccfg: ChannelConfig, plan: SubcarrierPlan,
+         **kw):
+    """Factory. ``acfg`` is ignored by the first-order algorithms."""
+    cls = ALGORITHMS[name]
+    if cls in (AnalogGD, FedAvg):
+        return cls(ccfg=ccfg, plan=plan, **kw)
+    return cls(acfg=acfg, ccfg=ccfg, plan=plan, **kw)

@@ -1,0 +1,108 @@
+"""Complex arithmetic as explicit (re, im) planes.
+
+TPU VPUs have no native complex ALU; XLA decomposes complex ops into
+real-plane arithmetic anyway, and Pallas kernels want the planes explicit so
+they tile cleanly into VMEM.  We therefore carry every complex tensor in the
+framework (fading coefficients ``h``, dual variables ``lambda``, analog
+signals, AWGN) as a :class:`Complex` pytree of two real arrays.
+
+All helpers are shape-polymorphic and jit/vmap/shard_map-safe.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class Complex(NamedTuple):
+    """A complex tensor as explicit real/imaginary planes (same shape/dtype)."""
+
+    re: Array
+    im: Array
+
+    @property
+    def shape(self):
+        return self.re.shape
+
+    @property
+    def dtype(self):
+        return self.re.dtype
+
+    def __add__(self, other: "Complex") -> "Complex":  # type: ignore[override]
+        return Complex(self.re + other.re, self.im + other.im)
+
+    def __sub__(self, other: "Complex") -> "Complex":
+        return Complex(self.re - other.re, self.im - other.im)
+
+    def __neg__(self) -> "Complex":
+        return Complex(-self.re, -self.im)
+
+
+def czero(shape, dtype=jnp.float32) -> Complex:
+    return Complex(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def cfull_like(x: Complex, re: float, im: float = 0.0) -> Complex:
+    return Complex(jnp.full_like(x.re, re), jnp.full_like(x.im, im))
+
+
+def from_real(x: Array) -> Complex:
+    return Complex(x, jnp.zeros_like(x))
+
+
+def conj(x: Complex) -> Complex:
+    return Complex(x.re, -x.im)
+
+
+def cmul(a: Complex, b: Complex) -> Complex:
+    """(a.re + i a.im)(b.re + i b.im)."""
+    return Complex(a.re * b.re - a.im * b.im, a.re * b.im + a.im * b.re)
+
+
+def cmul_conj(a: Complex, b: Complex) -> Complex:
+    """a * conj(b) — fused to avoid materialising conj(b)."""
+    return Complex(a.re * b.re + a.im * b.im, a.im * b.re - a.re * b.im)
+
+
+def scale(a: Complex, s: Array | float) -> Complex:
+    return Complex(a.re * s, a.im * s)
+
+
+def scale_real(a: Complex, s: Array | float) -> Complex:
+    return scale(a, s)
+
+
+def abs2(x: Complex) -> Array:
+    """|x|^2 elementwise (a real array)."""
+    return x.re * x.re + x.im * x.im
+
+
+def cdiv_real(a: Complex, d: Array) -> Complex:
+    return Complex(a.re / d, a.im / d)
+
+
+def csum(x: Complex, axis=None, keepdims: bool = False) -> Complex:
+    return Complex(
+        jnp.sum(x.re, axis=axis, keepdims=keepdims),
+        jnp.sum(x.im, axis=axis, keepdims=keepdims),
+    )
+
+
+def cwhere(mask: Array, a: Complex, b: Complex) -> Complex:
+    return Complex(jnp.where(mask, a.re, b.re), jnp.where(mask, a.im, b.im))
+
+
+def allclose(a: Complex, b: Complex, **kw: Any) -> Array:
+    return jnp.logical_and(jnp.allclose(a.re, b.re, **kw), jnp.allclose(a.im, b.im, **kw))
+
+
+def to_jax_complex(x: Complex) -> Array:
+    return jax.lax.complex(x.re, x.im)
+
+
+def from_jax_complex(x: Array) -> Complex:
+    return Complex(jnp.real(x), jnp.imag(x))

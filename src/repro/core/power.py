@@ -1,0 +1,38 @@
+"""Transmit power control (paper Sec. 2, "Power Control").
+
+Each worker computes α_n with  α_n² · Σ_i |s_{n,i}|² = P, sends the scalar to
+the PS over the control channel; the PS takes α = min_n α_n and broadcasts it.
+Everyone transmits α·s, the PS divides the matched-filter output by α — so the
+effective receiver noise is z/α and no worker ever exceeds its budget P.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cplx
+from repro.core.cplx import Complex
+
+Array = jax.Array
+
+
+def per_worker_alpha(signals: Complex, power_budget: float) -> Array:
+    """α_n = sqrt(P / Σ_i |s_{n,i}|²), per worker. signals: (W, d)."""
+    energy = jnp.sum(cplx.abs2(signals), axis=-1)  # (W,)
+    return jnp.sqrt(power_budget / jnp.maximum(energy, 1e-30))
+
+
+def min_alpha(signals: Complex, power_budget: float,
+              min_reduce_fn: Optional[Callable[[Array], Array]] = None) -> Array:
+    """α = min_n α_n (scalar). Under shard_map pass a pmin reducer."""
+    alphas = per_worker_alpha(signals, power_budget)
+    if min_reduce_fn is None:
+        return jnp.min(alphas)
+    return min_reduce_fn(jnp.min(alphas))
+
+
+def tx_energy(signals: Complex, alpha: Array | float) -> Array:
+    """Actual per-worker transmitted energy α²·Σ|s|² (for the energy benchmark)."""
+    return (alpha ** 2) * jnp.sum(cplx.abs2(signals), axis=-1)

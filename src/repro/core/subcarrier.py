@@ -1,0 +1,89 @@
+"""Subcarrier mapping: model pytree <-> flat analog frames.
+
+The paper transmits the i-th model element on subcarrier ``i mod S`` during
+time slot ``i // S`` (Appendix H: MNIST MLP d=109,184 over S=4,096 subcarriers
+-> ceil(d/S)=27 slots per upload).  This module owns that accounting:
+
+* flatten/unflatten a parameter pytree to a padded (n_slots * S,) vector;
+* per-element subcarrier index (for fading lookup: h has one coefficient per
+  (worker, subcarrier), reused across the slots of one upload, because all
+  slots of one iteration fall inside a coherence block);
+* channel-use accounting for analog vs digital uploads.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SubcarrierPlan:
+    """Static element->subcarrier schedule for one model."""
+
+    d: int  # true number of model elements
+    n_subcarriers: int
+    n_slots: int  # ceil(d / S): analog channel uses per upload
+    d_padded: int  # n_slots * S
+
+    @classmethod
+    def build(cls, d: int, n_subcarriers: int) -> "SubcarrierPlan":
+        n_slots = -(-d // n_subcarriers)
+        return cls(d=d, n_subcarriers=n_subcarriers, n_slots=n_slots,
+                   d_padded=n_slots * n_subcarriers)
+
+    def subcarrier_index(self) -> Array:
+        """Subcarrier used by each padded element: i mod S."""
+        return jnp.arange(self.d_padded, dtype=jnp.int32) % self.n_subcarriers
+
+    def expand_h(self, h_sub: Array) -> Array:
+        """Tile a per-subcarrier array (..., S) to per-element (..., d_padded)."""
+        reps = self.d_padded // self.n_subcarriers
+        return jnp.tile(h_sub, (1,) * (h_sub.ndim - 1) + (reps,))
+
+
+def flatten(tree: PyTree) -> Tuple[Array, Callable[[Array], PyTree]]:
+    """Flatten a pytree of arrays into one f32 vector + an unflattener."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = [l.shape for l in leaves]
+    sizes = [int(l.size) for l in leaves]
+    dtypes = [l.dtype for l in leaves]
+    flat = jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in leaves]) if leaves \
+        else jnp.zeros((0,), jnp.float32)
+
+    def unflatten(vec: Array) -> PyTree:
+        out, off = [], 0
+        for shp, sz, dt in zip(shapes, sizes, dtypes):
+            out.append(vec[off:off + sz].reshape(shp).astype(dt))
+            off += sz
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return flat, unflatten
+
+
+def pad_to(vec: Array, d_padded: int) -> Array:
+    return jnp.pad(vec, (0, d_padded - vec.shape[-1]))
+
+
+def analog_channel_uses(plan: SubcarrierPlan) -> int:
+    """One analog upload = n_slots channel uses, *independent of N workers*."""
+    return plan.n_slots
+
+
+def digital_channel_uses(rates_bits_per_slot: Array, bits: float,
+                         subcarriers_per_worker: int) -> Array:
+    """Slots needed for the slowest worker to push ``bits`` bits (Appendix H).
+
+    ``rates_bits_per_slot``: (N, S_w) per-worker per-allocated-subcarrier
+    Shannon rates for the current block.  Every worker gets an orthogonal
+    S_w = S/N slice, so total channel uses per slot is S (all of them), and
+    the number of slots is set by the straggler: T_hat = max_n bits / rate_n.
+    """
+    per_worker_rate = jnp.sum(rates_bits_per_slot, axis=-1)  # bits/slot/worker
+    slots = jnp.ceil(bits / jnp.maximum(per_worker_rate, 1e-9))
+    return jnp.max(slots) * subcarriers_per_worker * rates_bits_per_slot.shape[0]

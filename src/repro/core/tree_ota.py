@@ -1,0 +1,188 @@
+"""Pytree-level A-FADMM: the production integration of the paper's protocol.
+
+``core.admm`` works on flat ``(W, d)`` vectors (the paper's own scale);
+LLM-scale parameters are pytrees whose leaves carry a leading worker dim
+``W`` sharded over the mesh ``data`` axis.  The OTA math is elementwise, so
+it generalises leafwise; only two reductions cross leaves/workers:
+
+* the **superposition** Σ_n h⊙s (a per-leaf sum over the worker axis — XLA
+  lowers it to the all-reduce the roofline accounts as the single "channel
+  use");
+* the **power control** min_n α_n (energy summed across *all* leaves per
+  worker, then a min over workers).
+
+Fading is drawn per (worker, element) exactly as in the flat version; each
+leaf keeps an independent subcarrier block.  OTA arithmetic runs in f32
+regardless of param dtype (the analog signal path), duals are f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cplx
+from repro.core.admm import AdmmConfig
+from repro.core.channel import ChannelConfig, awgn, rayleigh
+from repro.core.cplx import Complex
+
+Array = jax.Array
+PyTree = Any
+
+
+class TreeChannel(NamedTuple):
+    h: PyTree       # Complex leaves, shape (W,) + leaf_shape, f32
+    age: Array      # int32 scalar
+
+
+class TreeFLState(NamedTuple):
+    theta: PyTree   # param pytree, leaves (W, ...)
+    lam: PyTree     # Complex leaves (W, ...), f32
+    Theta: PyTree   # global model, leaves (...)
+    chan: TreeChannel
+    opt: Any        # per-worker local optimizer state (leaves (W, ...))
+    step: Array
+
+
+def _is_cplx(x) -> bool:
+    return isinstance(x, Complex)
+
+
+def _zmap(fn: Callable, *trees: PyTree) -> PyTree:
+    """tree.map that treats :class:`Complex` as a leaf in EVERY argument.
+
+    Mixed trees (plain-array leaves vs Complex leaves) share theta's
+    structure, so we zip their flattened leaves positionally.
+    """
+    flats = [jax.tree_util.tree_flatten(t, is_leaf=_is_cplx)[0] for t in trees]
+    treedef = jax.tree_util.tree_structure(trees[0], is_leaf=_is_cplx)
+    out = [fn(*args) for args in zip(*flats)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _leaf_keys(key: Array, tree: PyTree) -> list:
+    n = len(jax.tree_util.tree_flatten(tree, is_leaf=_is_cplx)[0])
+    return list(jax.random.split(key, n))
+
+
+def init_channel_tree(key: Array, theta_w: PyTree) -> TreeChannel:
+    keys = iter(_leaf_keys(key, theta_w))
+    h = jax.tree.map(lambda l: rayleigh(next(keys), l.shape), theta_w)
+    return TreeChannel(h=h, age=jnp.zeros((), jnp.int32))
+
+
+def step_channel_tree(key: Array, chan: TreeChannel,
+                      ccfg: ChannelConfig) -> Tuple[TreeChannel, Array]:
+    """Redraw every leaf's fading block at coherence boundaries."""
+    age = chan.age + 1
+    redraw = age >= ccfg.coherence_iters
+    keys = iter(_leaf_keys(key, chan.h))
+
+    def upd(h_leaf: Complex) -> Complex:
+        fresh = rayleigh(next(keys), h_leaf.re.shape)
+        return cplx.cwhere(redraw, fresh, h_leaf)
+
+    h = _zmap(upd, chan.h)
+    new_age = jnp.where(redraw, jnp.zeros((), jnp.int32), age)
+    return TreeChannel(h=h, age=new_age), redraw
+
+
+def tree_penalty_grad(theta: PyTree, lam: PyTree, h: PyTree, Theta: PyTree,
+                      rho: float) -> PyTree:
+    """Leafwise Re{λ*h} + ρ|h|²(θ − Θ), broadcasting Θ over the worker dim."""
+    def leaf(t, l, hh, T):
+        mu = cplx.cmul_conj(hh, l).re
+        g = mu + rho * cplx.abs2(hh) * (t.astype(jnp.float32) - T[None].astype(jnp.float32))
+        return g.astype(t.dtype)
+
+    return _zmap(leaf, theta, lam, h, Theta)
+
+
+def _modulate_tree(theta: PyTree, lam: PyTree, h: PyTree, rho: float) -> PyTree:
+    def leaf(t, l, hh) -> Complex:
+        tf = t.astype(jnp.float32)
+        hc = cplx.conj(hh)
+        lc = cplx.conj(l)
+        return Complex(hc.re * tf + lc.re / rho, hc.im * tf + lc.im / rho)
+
+    return _zmap(leaf, theta, lam, h)
+
+
+def _tree_energy_per_worker(signals: PyTree) -> Array:
+    """Σ over all leaves/elements of |s|² per worker -> (W,)."""
+    def leaf(s: Complex) -> Array:
+        e = cplx.abs2(s)
+        return jnp.sum(e.reshape(e.shape[0], -1), axis=1)
+
+    energies = [leaf(s) for s in jax.tree_util.tree_leaves(
+        signals, is_leaf=lambda x: isinstance(x, Complex))]
+    return sum(energies)
+
+
+def _tree_size(tree: PyTree) -> int:
+    leaves = jax.tree_util.tree_leaves(
+        tree, is_leaf=lambda x: isinstance(x, Complex))
+    total = 0
+    for l in leaves:
+        shape = l.re.shape if isinstance(l, Complex) else l.shape
+        n = 1
+        for s in shape[1:]:  # skip worker dim
+            n *= s
+        total += n
+    return total
+
+
+def ota_tree_round(theta: PyTree, lam: PyTree, h: PyTree, key: Array,
+                   acfg: AdmmConfig, ccfg: ChannelConfig
+                   ) -> Tuple[PyTree, PyTree, dict]:
+    """Uplink + global + dual for one round (post-local-steps).
+
+    Returns (Theta_new, lam_new, metrics).  theta leaves: (W, ...).
+    """
+    rho = acfg.rho
+    signals = _modulate_tree(theta, lam, h, rho)
+
+    if acfg.power_control:
+        d_total = _tree_size(signals)
+        budget = ccfg.transmit_power * d_total
+        energy = _tree_energy_per_worker(signals)          # (W,)
+        alpha = jnp.min(jnp.sqrt(budget / jnp.maximum(energy, 1e-30)))
+        inv_alpha = 1.0 / alpha
+    else:
+        inv_alpha = jnp.asarray(1.0, jnp.float32)
+
+    keys = iter(_leaf_keys(key, signals))
+
+    from repro.optflags import enabled
+    ota_re_only = enabled("ota_re")
+
+    def leaf_global(s: Complex, hh: Complex) -> Array:
+        if ota_re_only:
+            # §Perf "ota_re": Θ only ever reads Re{y}; superpose the real
+            # plane alone (the matched-filter receiver samples I, not Q) —
+            # halves the OTA all-reduce bytes and the elementwise work.
+            rx_re = hh.re * s.re - hh.im * s.im
+            y_re = jnp.sum(rx_re, axis=0)
+            sumh2 = jnp.sum(cplx.abs2(hh), axis=0)
+            if ccfg.noisy:
+                z = awgn(next(keys), y_re.shape, ccfg.noise_var_matched)
+                y_re = y_re + z.re * inv_alpha
+            return y_re / jnp.maximum(sumh2, 1e-12)
+        y = cplx.csum(cplx.cmul(hh, s), axis=0)            # superposition
+        sumh2 = jnp.sum(cplx.abs2(hh), axis=0)
+        if ccfg.noisy:
+            z = awgn(next(keys), y.re.shape, ccfg.noise_var_matched)
+            y = Complex(y.re + z.re * inv_alpha, y.im + z.im * inv_alpha)
+        return y.re / jnp.maximum(sumh2, 1e-12)
+
+    Theta_new = _zmap(leaf_global, signals, h)
+
+    def leaf_dual(l: Complex, hh: Complex, t, T) -> Complex:
+        r = t.astype(jnp.float32) - T[None]
+        return Complex(l.re + rho * hh.re * r, l.im + rho * hh.im * r)
+
+    lam_new = _zmap(leaf_dual, lam, h, theta, Theta_new)
+    metrics = {"inv_alpha": jnp.asarray(inv_alpha)}
+    return Theta_new, lam_new, metrics

@@ -1,0 +1,2 @@
+from repro.data.federated import make_batch_fn, split_dirichlet, split_iid  # noqa: F401
+from repro.data.synthetic import image_dataset, linreg_dataset, token_dataset  # noqa: F401

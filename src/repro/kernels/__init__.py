@@ -1,0 +1,65 @@
+"""Pallas TPU kernels (ota / admm_update / linear_scan) + model-facing shims.
+
+``REPRO_USE_PALLAS=1`` routes the model's recurrences through the Pallas
+kernels (interpret mode on CPU); default is the pure-jnp reference path so
+dry-run cost analysis reflects plain XLA HLO.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref  # noqa: F401
+
+Array = jax.Array
+
+
+def use_pallas() -> bool:
+    return os.environ.get("REPRO_USE_PALLAS", "0") == "1"
+
+
+def _chunked_linear_scan(a: Array, b: Array, chunk: int) -> Array:
+    """§Perf "chunked_scan": lax.scan over sequence chunks carrying the
+    recurrence state — the pure-JAX mirror of the Pallas kernel's
+    VMEM-carried tiling.  Peak intermediates are (B, chunk, D) instead of the
+    associative scan's log-depth (B, S, D) ladders."""
+    B, S, D = a.shape
+    C = min(chunk, S)
+    n = -(-S // C)
+    Sp = n * C
+    ap = jnp.pad(a, ((0, 0), (0, Sp - S), (0, 0)), constant_values=1.0)
+    bp = jnp.pad(b, ((0, 0), (0, Sp - S), (0, 0)))
+    ac = ap.reshape(B, n, C, D).transpose(1, 0, 2, 3)
+    bc = bp.reshape(B, n, C, D).transpose(1, 0, 2, 3)
+
+    def body(carry, ab):
+        at, bt = ab                      # (B, C, D)
+        h = ref.linear_scan(at, bt)      # local associative scan
+        cum_a = jnp.cumprod(at, axis=1)
+        h = h + cum_a * carry[:, None, :]
+        return h[:, -1], h
+
+    _, hs = jax.lax.scan(body, jnp.zeros((B, D), a.dtype), (ac, bc))
+    return hs.transpose(1, 0, 2, 3).reshape(B, Sp, D)[:, :S]
+
+
+def gated_linear_scan(a: Array, b: Array) -> Array:
+    """h_t = a⊙h_{t−1} + b over axis 1 of (B, S, ...) — folds trailing dims.
+
+    Dispatches to the Pallas kernel / chunked JAX path when enabled, else
+    the jnp oracle.
+    """
+    from repro import optflags
+    shape = a.shape
+    B, S = shape[0], shape[1]
+    a2 = a.reshape(B, S, -1)
+    b2 = b.reshape(B, S, -1)
+    if use_pallas():
+        h = ops.linear_scan(a2, b2)
+    elif optflags.enabled("chunked_scan") and S > optflags.SCAN_CHUNK:
+        h = _chunked_linear_scan(a2, b2, optflags.SCAN_CHUNK)
+    else:
+        h = ref.linear_scan(a2, b2)
+    return h.reshape(shape)

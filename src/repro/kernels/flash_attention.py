@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: flash attention (online-softmax, KV-blocked).
+
+The §Perf analysis (EXPERIMENTS.md) shows ~64% of the train_4k memory term
+is the attention-score elementwise chain — (S,S) tensors crossing HBM once
+per softmax stage per pass.  Keeping the score block resident in VMEM while
+streaming KV tiles removes that traffic entirely; this kernel is the
+TPU-native fix (the pure-XLA q-chunking variant was measured and refuted:
+it reduces peak, not traffic).
+
+Layout: q (B,H,S,hd), k/v (B,H,T,hd).  Grid (B, H, S/bq, T/bk), KV tiles
+innermost; the (m, l, acc) online-softmax state lives in VMEM scratch across
+KV steps.  Causal masking by absolute indices; fully-masked KV tiles skip
+the matmuls via ``pl.when``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+DEFAULT_BQ = 256
+DEFAULT_BK = 256
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, bq: int, bk: int,
+                  n_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)           # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)           # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(cols <= rows, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:
+        # skip KV tiles strictly above the diagonal (fully masked)
+        pl.when((ki * bk) <= (qi * bq + bq - 1))(_step)
+    else:
+        _step()
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    scale: Optional[float] = None, block_q: int = DEFAULT_BQ,
+                    block_k: int = DEFAULT_BK,
+                    interpret: bool = False) -> Array:
+    """q: (B,H,S,hd); k/v: (B,H,T,hd) -> (B,H,S,hd).  S, T padded to tiles."""
+    B, H, S, hd = q.shape
+    T = k.shape[2]
+    scale = hd ** -0.5 if scale is None else scale
+    bq = min(block_q, S)
+    bk = min(block_k, T)
+    Sp = -(-S // bq) * bq
+    Tp = -(-T // bk) * bk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+    # padded keys must never win the max: leave them 0 and mask via causal
+    # (cols > rows) for causal; for non-causal pad k with 0 and mask by
+    # forcing their scores low via a large-negative additive key trick.
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+    n_k = Tp // bk
+
+    if not causal and Tp != T:
+        raise NotImplementedError("non-causal padding requires T % block_k == 0")
+
+    grid = (B, H, Sp // bq, n_k)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=float(scale), causal=causal,
+                          bq=bq, bk=bk, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, qi, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, qi, ki: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :S]

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function is the mathematical definition, written with no regard for
+tiling — tests assert the kernels match these to float tolerance across
+shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def ota_modulate(theta: Array, lam_re: Array, lam_im: Array, h_re: Array,
+                 h_im: Array, rho: float) -> Tuple[Array, Array]:
+    """s = conj(h)·θ + conj(λ)/ρ  (Alg. 1 l.14), in (re, im) planes."""
+    tf = theta.astype(jnp.float32)
+    return (h_re * tf + lam_re / rho, -h_im * tf - lam_im / rho)
+
+
+def ota_demodulate(y_re: Array, noise_re: Array, sumh2: Array,
+                   inv_alpha: float) -> Array:
+    """Θ = Re{y + z/α} / max(Σ|h|², eps)  (Eq. 24)."""
+    return (y_re + noise_re * inv_alpha) / jnp.maximum(sumh2, 1e-12)
+
+
+def admm_dual_update(lam_re: Array, lam_im: Array, h_re: Array, h_im: Array,
+                     theta: Array, Theta: Array, rho: float,
+                     noise_re: Array) -> Tuple[Array, Array]:
+    """λ' = λ + ρ·h·(θ − Θ) − ρ·Re{z}  (Eq. 11)."""
+    r = theta.astype(jnp.float32) - Theta.astype(jnp.float32)
+    return (lam_re + rho * (h_re * r - noise_re), lam_im + rho * h_im * r)
+
+
+def admm_flip_lambda(grad: Array, theta: Array, Theta_prev: Array,
+                     h_re: Array, h_im: Array, rho: float
+                     ) -> Tuple[Array, Array]:
+    """λ = t·h/|h|², t = −(∂f + ρ|h|²(θ − Θ))  (Sec. 2 flip rule)."""
+    h2 = h_re * h_re + h_im * h_im
+    t = -(grad.astype(jnp.float32)
+          + rho * h2 * (theta.astype(jnp.float32)
+                        - Theta_prev.astype(jnp.float32)))
+    s = t / jnp.maximum(h2, 1e-12)
+    return h_re * s, h_im * s
+
+
+def attention(q: Array, k: Array, v: Array, causal: bool = True,
+              scale=None) -> Array:
+    """Reference softmax attention. q: (B,H,S,hd); k/v: (B,H,T,hd)."""
+    hd = q.shape[-1]
+    scale = hd ** -0.5 if scale is None else scale
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        S, T = s.shape[-2:]
+        mask = jnp.arange(T)[None, :] <= jnp.arange(S)[:, None]
+        s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def linear_scan(a: Array, b: Array) -> Array:
+    """Gated linear recurrence h_t = a_t ⊙ h_{t−1} + b_t,  h_0 = b_0.
+
+    a, b: (B, S, D) f32.  Serves RG-LRU directly and mamba1 with the state
+    dim folded into D.  Returns h: (B, S, D).
+    """
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h

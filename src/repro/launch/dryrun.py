@@ -1,0 +1,258 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) combination
+and extract the roofline terms from the compiled artifact.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+
+The two module-level lines above MUST run before any other import (jax locks
+the device count on first init); 512 host devices back both the 16×16
+single-pod mesh and the 2×16×16 multi-pod mesh.
+"""
+import argparse   # noqa: E402
+import json       # noqa: E402
+import re         # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+from typing import Any, Dict  # noqa: E402
+
+import jax        # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import SHAPES, build_spec   # noqa: E402
+from repro.models.registry import get_config, list_archs  # noqa: E402
+from repro.models.sharding import axis_rules        # noqa: E402
+
+# --- TPU v5e hardware model (roofline constants) ---------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s+(.*?)\s+(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]*)\[([0-9,]*)\]")
+
+#: effective bytes-moved multiplier per result byte
+_COLL_MULT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+              "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def collective_bytes_from_hlo(hlo: str) -> Dict[str, Any]:
+    """Sum per-partition result bytes of every collective in the SPMD HLO."""
+    per_kind_bytes: Dict[str, float] = {}
+    per_kind_count: Dict[str, int] = {}
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        result_txt, kind = m.group(1), m.group(2)
+        nbytes = 0.0
+        for dt, dims in _SHAPE_RE.findall(result_txt):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        per_kind_bytes[kind] = per_kind_bytes.get(kind, 0.0) \
+            + nbytes * _COLL_MULT[kind]
+        per_kind_count[kind] = per_kind_count.get(kind, 0) + 1
+    return {"bytes_per_device": sum(per_kind_bytes.values()),
+            "by_kind_bytes": per_kind_bytes,
+            "by_kind_count": per_kind_count}
+
+
+def _cost(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and np.isfinite(v)}
+
+
+def _memory(compiled, args, in_shardings, mesh) -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            v = getattr(ma, attr, None)
+            if v is not None:
+                out[attr] = float(v)
+    except Exception:
+        pass
+    # analytic per-device argument bytes from the shardings (always available)
+    n_dev = mesh.size
+
+    def leaf_bytes(sds) -> float:
+        return float(np.prod(sds.shape) * np.dtype(sds.dtype).itemsize) \
+            if sds.shape else float(np.dtype(sds.dtype).itemsize)
+
+    total = sum(leaf_bytes(l) for l in jax.tree_util.tree_leaves(args))
+    out["analytic_total_arg_bytes"] = total
+    out["analytic_arg_bytes_per_device_lower_bound"] = total / n_dev
+    return out
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool,
+            reduced: bool = False, keep_hlo: bool = False) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    spec = build_spec(arch, shape_name, mesh, multi_pod=multi_pod,
+                      reduced=reduced)
+    from repro.launch.shardings import rules_for
+    cfg0 = get_config(arch)
+    if reduced:
+        cfg0 = cfg0.reduced()
+    fl_repl = (spec.meta.get("kind") == "train"
+               and spec.meta.get("fl_mode") == "replicated")
+    rules = rules_for(cfg0, mesh, multi_pod=multi_pod,
+                      fl_replicated=fl_repl)
+    from repro.launch.shardings import named
+    in_sh = named(mesh, spec.in_shardings)
+    with mesh:
+        with axis_rules(mesh, rules):
+            jitted = jax.jit(spec.fn, in_shardings=in_sh,
+                             donate_argnums=spec.donate_argnums)
+            lowered = jitted.lower(*spec.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+    # the dry-run contract: the compiled artifact's own analyses
+    try:
+        print(compiled.memory_analysis())   # proves it fits (bytes/device)
+    except Exception as e:                  # pragma: no cover
+        print(f"memory_analysis unavailable: {e}")
+    ca_raw = compiled.cost_analysis()
+    print({k: v for k, v in (ca_raw[0] if isinstance(ca_raw, (list, tuple))
+                             else ca_raw).items()
+           if k in ("flops", "bytes accessed", "transcendentals")})
+
+    hlo = compiled.as_text()
+    del lowered
+    from repro.launch import hlo_analysis
+    summary = hlo_analysis.analyze(hlo)   # loop-corrected, per partition
+    cost = _cost(compiled)                # raw XLA numbers (loop bodies x1)
+    mem = _memory(compiled, spec.args, spec.in_shardings, mesh)
+
+    chips = mesh.size
+    flops = summary.flops
+    bytes_acc = summary.mem_bytes
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_acc / HBM_BW
+    coll_s = summary.coll_bytes_total / LINK_BW
+    coll = {"bytes_per_device": summary.coll_bytes_total,
+            "by_kind_bytes": summary.coll_bytes,
+            "by_kind_count": summary.coll_count}
+
+    cfg = get_config(arch)
+    N = cfg.param_count()
+    Na = cfg.active_param_count()
+    meta = dict(spec.meta)
+    n_eff = Na if cfg.family == "moe" else N
+    if meta["kind"] == "train":
+        # fwd+bwd (6 FLOPs/param/token) x FL passes: replicated mode runs
+        # local_steps passes over the global batch; sketched mode runs
+        # n_workers scan iterations each over batch/n_workers (= 1x global).
+        model_flops = 6.0 * n_eff * meta["global_batch"] * meta["seq"]
+    elif meta["kind"] == "prefill":
+        model_flops = 2.0 * n_eff * meta["global_batch"] * meta["seq"]
+    else:  # decode: one token per sequence, forward only
+        model_flops = 2.0 * n_eff * meta["global_batch"]
+    hlo_flops_global = flops * chips
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "meta": meta,
+        "timings": {"lower_s": round(t_lower, 2),
+                    "compile_s": round(t_compile, 2)},
+        "cost_analysis_raw": {k: v for k, v in cost.items()
+                              if "{" not in k},
+        "hlo_loop_corrected": {"flops": flops, "mem_bytes": bytes_acc},
+        "memory": mem,
+        "collectives": coll,
+        "roofline": {
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "collective_s": coll_s,
+            "dominant": max(
+                [("compute", compute_s), ("memory", memory_s),
+                 ("collective", coll_s)], key=lambda kv: kv[1])[0],
+            "model_flops": model_flops,
+            "hlo_flops_global": hlo_flops_global,
+            "useful_flop_fraction": (model_flops / hlo_flops_global
+                                     if hlo_flops_global else None),
+        },
+    }
+    if keep_hlo:
+        result["hlo"] = hlo
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--reduced", action="store_true",
+                    help="tiny configs (plumbing test)")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--opt", default=None,
+                    help="comma-separated REPRO_OPT flags (§Perf variants); "
+                         "results are tagged _opt-<flags>")
+    args = ap.parse_args()
+
+    if args.opt is not None:
+        os.environ["REPRO_OPT"] = args.opt
+
+    combos = []
+    if args.all:
+        for a in list_archs():
+            for s in SHAPES:
+                combos.append((a, s))
+    else:
+        combos.append((args.arch, args.shape))
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch, shape_name in combos:
+        tag = f"{arch}_{shape_name}_{'2x16x16' if args.multi_pod else '16x16'}"
+        if args.opt:
+            tag += "_opt-" + args.opt.replace(",", "+")
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            print(f"[skip] {tag} (exists)")
+            continue
+        print(f"[run ] {tag}", flush=True)
+        try:
+            res = run_one(arch, shape_name, multi_pod=args.multi_pod,
+                          reduced=args.reduced)
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+            r = res["roofline"]
+            print(f"[ ok ] {tag}: compile={res['timings']['compile_s']}s "
+                  f"compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s "
+                  f"coll={r['collective_s']:.3e}s dom={r['dominant']}",
+                  flush=True)
+        except Exception as e:
+            print(f"[FAIL] {tag}: {type(e).__name__}: {e}", flush=True)
+            with open(path + ".err", "w") as f:
+                f.write(traceback.format_exc())
+
+
+if __name__ == "__main__":
+    main()

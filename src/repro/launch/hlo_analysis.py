@@ -1,0 +1,231 @@
+"""Loop-aware HLO cost analysis for the dry-run roofline.
+
+``compiled.cost_analysis()`` counts each ``while`` body ONCE, so any
+scan-over-layers model is undercounted by ~the layer count.  This module
+re-derives the three roofline inputs directly from the compiled SPMD HLO
+text, multiplying through ``known_trip_count`` loop metadata:
+
+* **flops**      — 2·|result|·K summed over every ``dot`` (K = product of the
+  lhs contracting dims; elementwise FLOPs are excluded — on the MXU roofline
+  they are VPU work, second-order for every assigned arch);
+* **hbm bytes**  — Σ (operand + result bytes) over top-level (post-fusion)
+  ops, i.e. buffers that actually cross HBM; fusion-internal ops excluded;
+* **collective bytes** — per-partition result bytes × a per-kind multiplier
+  (all-reduce 2×: reduce-scatter + all-gather phases), per collective kind.
+
+All numbers are PER PARTITION (the SPMD module is single-device); multiply by
+chip count for global figures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OP_RE = re.compile(r"^\s+(?:ROOT\s+)?%([\w\.\-]+)\s+=\s+(.+?)\s+"
+                    r"([a-z][a-zA-Z0-9\-]*)\((.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\{\s*$")
+_NAME_RE = re.compile(r"%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]+(\d+)')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_COLL_MULT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+              "all-to-all": 1.0, "collective-permute": 1.0}
+
+#: opcodes that don't touch HBM themselves
+_MEM_SKIP = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "while", "call", "conditional", "after-all", "partition-id",
+             "replica-id", "iota", "custom-call"}
+
+
+def shape_bytes(type_txt: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_dims(type_txt: str) -> Tuple[int, ...]:
+    m = _SHAPE_RE.search(type_txt)
+    if not m:
+        return ()
+    dims = m.group(2)
+    return tuple(int(d) for d in dims.split(",")) if dims else ()
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    mem_bytes: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_count: Dict[str, int] = dataclasses.field(default_factory=dict)
+    #: (child_name, multiplier, flops_only)
+    refs: List[Tuple[str, float, bool]] = dataclasses.field(
+        default_factory=list)
+
+
+def _parse_computations(hlo: str) -> Tuple[Dict[str, List[str]], Optional[str]]:
+    comps: Dict[str, List[str]] = {}
+    entry = None
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+        else:
+            if line.startswith("}"):
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps, entry
+
+
+def _analyze_comp(lines: List[str]) -> CompCost:
+    cost = CompCost()
+    defs: Dict[str, str] = {}
+    # first pass: result types
+    for line in lines:
+        m = _OP_RE.match(line)
+        if m:
+            defs[m.group(1)] = m.group(2)
+    for line in lines:
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, rtype, opcode, rest = m.groups()
+        if opcode.endswith("-done"):
+            continue
+        base_op = opcode[:-6] if opcode.endswith("-start") else opcode
+
+        # operands: up to the first close paren at depth 0
+        depth, args_txt = 1, []
+        for ch in rest:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            args_txt.append(ch)
+        args_txt = "".join(args_txt)
+        operands = _NAME_RE.findall(args_txt)
+
+        if base_op == "dot":
+            k = 1.0
+            cm = _CONTRACT_RE.search(line)
+            lhs_shape = shape_dims(defs.get(operands[0], "")) if operands else ()
+            if cm and lhs_shape:
+                idxs = [int(i) for i in cm.group(1).split(",") if i]
+                for i in idxs:
+                    if i < len(lhs_shape):
+                        k *= lhs_shape[i]
+            n_out = 1
+            for d in shape_dims(rtype):
+                n_out *= d
+            cost.flops += 2.0 * n_out * k
+
+        if base_op in _COLL_KINDS:
+            b = shape_bytes(rtype) * _COLL_MULT[base_op]
+            cost.coll_bytes[base_op] = cost.coll_bytes.get(base_op, 0.0) + b
+            cost.coll_count[base_op] = cost.coll_count.get(base_op, 0) + 1
+
+        if base_op not in _MEM_SKIP:
+            b = shape_bytes(rtype)
+            for o in operands:
+                if o in defs:
+                    b += shape_bytes(defs[o])
+            cost.mem_bytes += b
+
+        if base_op == "while":
+            trip = 1.0
+            tm = _TRIP_RE.search(line)
+            if tm:
+                trip = float(tm.group(1))
+            bm = re.search(r"body=%([\w\.\-]+)", line)
+            cm2 = re.search(r"condition=%([\w\.\-]+)", line)
+            if bm:
+                cost.refs.append((bm.group(1), trip, False))
+            if cm2:
+                cost.refs.append((cm2.group(1), trip + 1.0, False))
+        elif base_op == "fusion":
+            fm = re.search(r"calls=%([\w\.\-]+)", line)
+            if fm:
+                cost.refs.append((fm.group(1), 1.0, True))  # flops only
+        elif base_op in ("call", "async-start"):
+            fm = re.search(r"to_apply=%([\w\.\-]+)", line)
+            if fm:
+                cost.refs.append((fm.group(1), 1.0, False))
+        elif base_op == "conditional":
+            for bn in re.findall(r"(?:branch_computations=\{([^}]*)\}|"
+                                 r"(?:true|false)_computation=%([\w\.\-]+))",
+                                 line):
+                for piece in bn:
+                    for nm in _NAME_RE.findall(piece or ""):
+                        cost.refs.append((nm, 1.0, False))
+    return cost
+
+
+@dataclasses.dataclass
+class HloSummary:
+    flops: float
+    mem_bytes: float
+    coll_bytes: Dict[str, float]
+    coll_count: Dict[str, float]
+
+    @property
+    def coll_bytes_total(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+def analyze(hlo: str) -> HloSummary:
+    comps, entry = _parse_computations(hlo)
+    costs = {name: _analyze_comp(lines) for name, lines in comps.items()}
+    memo: Dict[Tuple[str, bool], Tuple[float, float, Dict[str, float],
+                                       Dict[str, float]]] = {}
+
+    def total(name: str, flops_only: bool):
+        key = (name, flops_only)
+        if key in memo:
+            return memo[key]
+        memo[key] = (0.0, 0.0, {}, {})  # cycle guard
+        c = costs.get(name)
+        if c is None:
+            return memo[key]
+        flops = c.flops
+        mem = 0.0 if flops_only else c.mem_bytes
+        coll = {} if flops_only else dict(c.coll_bytes)
+        cnt = {} if flops_only else {k: float(v)
+                                     for k, v in c.coll_count.items()}
+        for child, mult, f_only in c.refs:
+            cf, cm, cc, cn = total(child, flops_only or f_only)
+            flops += mult * cf
+            mem += mult * cm
+            for k, v in cc.items():
+                coll[k] = coll.get(k, 0.0) + mult * v
+            for k, v in cn.items():
+                cnt[k] = cnt.get(k, 0.0) + mult * v
+        memo[key] = (flops, mem, coll, cnt)
+        return memo[key]
+
+    if entry is None:
+        entry = next(iter(comps)) if comps else ""
+    f, m, c, n = total(entry, False)
+    return HloSummary(flops=f, mem_bytes=m, coll_bytes=c, coll_count=n)

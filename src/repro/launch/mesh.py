@@ -1,0 +1,36 @@
+"""Production meshes.
+
+Single pod: 16×16 = 256 chips, axes ("data", "model").
+Multi-pod:  2×16×16 = 512 chips, axes ("pod", "data", "model") — the "pod"
+axis carries extra FL workers (hierarchical over-the-air aggregation crosses
+the inter-pod links, which is exactly what the multi-pod dry-run must prove
+lowers).
+
+Defined as functions so importing this module never touches jax device
+state; `dryrun.py` sets XLA_FLAGS before any jax import.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(multi_pod: bool) -> Tuple[str, ...]:
+    """Mesh axes that jointly carry the batch / FL-worker dimension."""
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def axis_size(mesh: jax.sharding.Mesh, names) -> int:
+    if isinstance(names, str):
+        names = (names,)
+    n = 1
+    for a in names:
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,251 @@
+"""Sharding policy: pattern-matched PartitionSpecs for params, FL state,
+batches and caches, per (arch, shape, mesh).
+
+Conventions (DESIGN.md §5):
+* params — big matmul dims shard over ``model``; "2D" archs (per-worker or
+  per-replica copies exceed HBM: qwen1.5-110b, deepseek-v3-671b) additionally
+  shard a second dim over ``data`` (FSDP);
+* replicated-FL state — leading worker dim over the data axes;
+* decode caches — batch over data axes when divisible, sequence over
+  ``model`` (and over everything for batch-1 long-context).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.cplx import Complex
+from repro.launch.mesh import axis_size, data_axes
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+#: param names whose LAST dim shards over model
+_LAST_DIM_MODEL = (
+    "wq", "wk", "wv", "gate", "up", "fc_in", "wq_a", "wq_b", "wkv_a",
+    "in_proj", "x_proj", "w_gelu", "w_rec", "gate_a", "gate_x", "router",
+    "projector", "mtp_proj",
+)
+#: param names whose SECOND-TO-LAST dim shards over model
+_PREV_DIM_MODEL = ("wo", "down", "fc_out", "out_proj", "dt_proj", "w_out")
+#: moe expert tensors: (E, d, f) — expert dim (-3) over model
+_EXPERT = ("gate", "up", "down")
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        elif hasattr(p, "idx"):
+            out.append(f"#{p.idx}")
+    return tuple(out)
+
+
+def _is_expert_leaf(names: Tuple[str, ...]) -> bool:
+    # experts live under .../mlp/{gate,up,down} inside moe layers with an
+    # (E, d, f) trailing shape — disambiguated by ndim at the call site.
+    return names[-1] in _EXPERT
+
+
+def param_pspec(path, leaf_shape: Tuple[int, ...], cfg: ModelConfig,
+                mesh: Mesh, *, worker_dim: bool, fsdp: bool,
+                multi_pod: bool) -> P:
+    """PartitionSpec for one parameter (or like-shaped dual/channel) leaf."""
+    names = _path_names(path)
+    name = next((n for n in reversed(names) if n not in ("re", "im", "w", "b",
+                                                         "mu", "nu")), "")
+    ndim = len(leaf_shape)
+    spec: list = [None] * ndim
+    daxes = data_axes(multi_pod)
+    model_n = mesh.shape["model"]
+
+    lead = 0
+    if worker_dim:
+        spec[0] = daxes if len(daxes) > 1 else daxes[0]
+        lead = 1
+
+    def ok(dim_idx: int, axis_n: int) -> bool:
+        return (dim_idx >= lead and leaf_shape[dim_idx] % axis_n == 0
+                and leaf_shape[dim_idx] >= axis_n)
+
+    # moe expert tensors: trailing (E, d, f)
+    if name in _EXPERT and ndim - lead >= 3 and "layers" in "".join(names):
+        e_dim = ndim - 3
+        if cfg.n_experts and leaf_shape[e_dim] == cfg.n_experts and ok(e_dim, model_n):
+            spec[e_dim] = "model"
+            if fsdp and ok(ndim - 2, axis_size(mesh, daxes)):
+                spec[ndim - 2] = daxes if len(daxes) > 1 else daxes[0]
+            return P(*spec)
+
+    if name == "table":  # embedding (V, D)
+        if ok(ndim - 2, model_n):
+            spec[ndim - 2] = "model"
+        if fsdp and ok(ndim - 1, axis_size(mesh, daxes)):
+            spec[ndim - 1] = daxes if len(daxes) > 1 else daxes[0]
+        return P(*spec)
+
+    if name in ("wk_b", "wv_b"):  # MLA decompression (H, c, hd)
+        if ok(ndim - 3, model_n):
+            spec[ndim - 3] = "model"
+        return P(*spec)
+
+    if name in _LAST_DIM_MODEL and ndim - lead >= 2:
+        if ok(ndim - 1, model_n):
+            spec[ndim - 1] = "model"
+        if fsdp and ok(ndim - 2, axis_size(mesh, daxes)):
+            spec[ndim - 2] = daxes if len(daxes) > 1 else daxes[0]
+        return P(*spec)
+
+    if name in _PREV_DIM_MODEL and ndim - lead >= 2:
+        if ok(ndim - 2, model_n):
+            spec[ndim - 2] = "model"
+        if fsdp and ok(ndim - 1, axis_size(mesh, daxes)):
+            spec[ndim - 1] = daxes if len(daxes) > 1 else daxes[0]
+        return P(*spec)
+
+    # conv weights, norms, biases, scalars: replicated (bar the worker dim)
+    return P(*spec)
+
+
+def tree_pspecs(tree: PyTree, cfg: ModelConfig, mesh: Mesh, *,
+                worker_dim: bool, fsdp: bool, multi_pod: bool) -> PyTree:
+    """Map param_pspec over a (possibly Complex-leafed) pytree of
+    ShapeDtypeStructs/arrays -> pytree of PartitionSpec."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = [param_pspec(p, v.shape, cfg, mesh, worker_dim=worker_dim,
+                       fsdp=fsdp, multi_pod=multi_pod) for p, v in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# cache specs (decode shapes)
+# ---------------------------------------------------------------------------
+
+def cache_pspec(path, leaf_shape: Tuple[int, ...], cfg: ModelConfig,
+                mesh: Mesh, batch: int, *, multi_pod: bool) -> P:
+    names = _path_names(path)
+    name = names[-1]
+    ndim = len(leaf_shape)
+    daxes = data_axes(multi_pod)
+    d_n = axis_size(mesh, daxes)
+    model_n = mesh.shape["model"]
+    batch_ok = batch % d_n == 0 and batch >= d_n
+    b_spec = (daxes if len(daxes) > 1 else daxes[0]) if batch_ok else None
+    #: when batch can't shard, spread the sequence over every axis
+    seq_axes = "model" if batch_ok else (daxes + ("model",) if len(daxes) > 1
+                                         else (daxes[0], "model"))
+
+    def seq_spec(T: int):
+        n = model_n if batch_ok else model_n * d_n
+        return seq_axes if (T % n == 0 and T >= n) else (
+            "model" if T % model_n == 0 and T >= model_n else None)
+
+    # locate batch dim: caches are (L?, B, ...) or (B, ...)
+    b_dim = 1 if ndim >= 2 and leaf_shape[0] != batch else 0
+    if leaf_shape[b_dim] != batch:
+        b_dim = next((i for i, s in enumerate(leaf_shape) if s == batch), None)
+
+    spec: list = [None] * ndim
+    if b_dim is not None:
+        spec[b_dim] = b_spec
+
+    if name in ("k", "v", "self_k", "self_v", "cross_k", "cross_v"):
+        # (..., B, T, KV, hd): shard heads over `model` when they divide it
+        # (matches the activation rule), else the sequence dim
+        if leaf_shape[ndim - 2] % model_n == 0 and \
+                leaf_shape[ndim - 2] >= model_n:
+            spec[ndim - 2] = "model"
+        else:
+            spec[ndim - 3] = seq_spec(leaf_shape[ndim - 3])
+    elif name in ("c_kv", "k_rope"):
+        # (..., B, T, c)
+        spec[ndim - 2] = seq_spec(leaf_shape[ndim - 2])
+    elif name == "ssm":
+        # (L, B, di, n)
+        if leaf_shape[ndim - 2] % model_n == 0:
+            spec[ndim - 2] = "model"
+    elif name in ("conv",):
+        # (..., B, W-1, di/dw)
+        if leaf_shape[ndim - 1] % model_n == 0:
+            spec[ndim - 1] = "model"
+    elif name == "lru":
+        # (..., B, dw)
+        if leaf_shape[ndim - 1] % model_n == 0:
+            spec[ndim - 1] = "model"
+    return P(*spec)
+
+
+def cache_pspecs(cache: PyTree, cfg: ModelConfig, mesh: Mesh, batch: int,
+                 *, multi_pod: bool) -> PyTree:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    out = [cache_pspec(p, v.shape, cfg, mesh, batch, multi_pod=multi_pod)
+           for p, v in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_pspec(shape: Tuple[int, ...], mesh: Mesh, batch_dim: int,
+                multi_pod: bool) -> P:
+    daxes = data_axes(multi_pod)
+    d_n = axis_size(mesh, daxes)
+    spec: list = [None] * len(shape)
+    if shape[batch_dim] % d_n == 0 and shape[batch_dim] >= d_n:
+        spec[batch_dim] = daxes if len(daxes) > 1 else daxes[0]
+    return P(*spec)
+
+
+def named(mesh: Mesh, spec_tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def rules_for(cfg: ModelConfig, mesh: Mesh, *, multi_pod: bool,
+              decode: bool = False, fl_replicated: bool = False) -> dict:
+    """Logical-axis bindings specialised to the arch's divisibilities.
+
+    Head-type axes only bind to ``model`` when the head count divides the
+    axis; otherwise the corresponding activations stay unsharded on that dim
+    (the weight shards still carry the model axis where divisible).
+    """
+    from repro.models.sharding import DEFAULT_RULES
+    rules = dict(DEFAULT_RULES)
+    model_n = mesh.shape["model"]
+    daxes = data_axes(multi_pod)
+    batch_axes = daxes if len(daxes) > 1 else daxes[0]
+    rules["batch"] = batch_axes
+    rules["worker"] = batch_axes
+    if fl_replicated:
+        # the vmapped worker dim consumes the data axes; the inner per-worker
+        # batch must stay unsharded or constraints fight the worker sharding
+        rules["batch"] = None
+        rules["moe_group"] = None
+
+    def fits(n: int) -> bool:
+        return n >= model_n and n % model_n == 0
+
+    if not fits(cfg.n_heads):
+        rules["heads"] = None
+    if not fits(cfg.n_kv_heads):
+        rules["kv_heads"] = None
+    else:
+        # cache: head-sharding wins; seq must not also claim `model`
+        rules["kv_seq"] = None
+    if cfg.d_ff and not fits(cfg.d_ff):
+        rules["ff"] = None
+    if cfg.n_experts and not fits(cfg.n_experts):
+        rules["expert"] = None
+    if cfg.lru_width and not fits(cfg.lru_width):
+        rules["lru"] = None
+    if cfg.d_inner and not fits(cfg.d_inner):
+        rules["inner"] = None
+    if not fits(cfg.vocab_size):
+        rules["vocab"] = None
+    from repro.optflags import enabled
+    if enabled("seq_par"):
+        rules["res_seq"] = "model"
+    return rules

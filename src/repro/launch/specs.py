@@ -1,0 +1,248 @@
+"""Input specs: ShapeDtypeStruct stand-ins + shardings for every
+(architecture × input shape × mesh) combination — the dry-run contract.
+
+Shapes (assignment sheet):
+    train_4k      seq=4,096    global_batch=256   -> train_step
+    prefill_32k   seq=32,768   global_batch=32    -> prefill forward
+    decode_32k    seq=32,768   global_batch=128   -> serve_step (1 token)
+    long_500k     seq=524,288  global_batch=1     -> serve_step (1 token)
+
+long_500k uses the sub-quadratic path: native for ssm/hybrid; the
+sliding-window VARIANT (window 4096) for attention archs (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.admm import AdmmConfig
+from repro.core.channel import ChannelConfig
+from repro.launch import shardings as SH
+from repro.launch.mesh import axis_size, data_axes
+from repro.models.registry import build_model, get_config
+from repro.serve.serving import make_prefill, make_serve_step
+from repro.train.llm_trainer import FLConfig, make_fl_train
+
+PyTree = Any
+
+SHAPES: Dict[str, Dict[str, int]] = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+#: archs whose per-worker/replica copies exceed HBM -> sketched FL + 2D params
+BIG_ARCHS = ("qwen1.5-110b", "deepseek-v3-671b")
+
+SLIDING_WINDOW_LONG = 4096
+
+
+@dataclasses.dataclass
+class DryRunSpec:
+    """Everything `dryrun.py` needs to lower one combination."""
+
+    fn: Callable
+    args: Tuple                      # ShapeDtypeStructs
+    in_shardings: Tuple
+    donate_argnums: Tuple[int, ...]
+    meta: Dict[str, Any]
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _arch_cfg(arch: str, shape_name: str):
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        cfg = cfg.with_sliding_window(SLIDING_WINDOW_LONG)
+    return cfg
+
+
+def _modality_extras(cfg, W_or_B, batch_inner: Optional[int], seq: int):
+    """Extra batch fields for vlm/audio (stub frontends)."""
+    extras = {}
+    lead = (W_or_B,) if batch_inner is None else (W_or_B, batch_inner)
+    if cfg.family == "vlm":
+        extras["patches"] = _sds(lead + (cfg.frontend_tokens,
+                                         cfg.frontend_dim), jnp.float32)
+    if cfg.family == "audio":
+        extras["frames"] = _sds(lead + (max(seq // 4, 16), cfg.d_model),
+                                jnp.float32)
+    return extras
+
+
+def _text_seq(cfg, seq: int) -> int:
+    # VLM: patch embeddings occupy part of the sequence budget
+    return seq - cfg.frontend_tokens if cfg.family == "vlm" else seq
+
+
+def build_train_spec(arch: str, mesh: Mesh, *, multi_pod: bool,
+                     reduced: bool = False) -> DryRunSpec:
+    shp = SHAPES["train_4k"]
+    cfg = _arch_cfg(arch, "train_4k")
+    if reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    daxes = data_axes(multi_pod)
+    d_n = axis_size(mesh, daxes)
+    seq = 64 if reduced else shp["seq"]
+    gbatch = 2 * d_n if reduced else shp["batch"]
+
+    sketched = arch in BIG_ARCHS and not reduced
+    if sketched:
+        W = 8
+        flcfg = FLConfig(mode="sketched", n_workers=W, local_steps=1,
+                         local_lr=1e-3, sketch_ratio=256)
+        bw = gbatch // W
+    else:
+        W = d_n
+        flcfg = FLConfig(mode="replicated", n_workers=W, local_steps=1,
+                         local_lr=1e-3)
+        bw = gbatch // W
+    acfg = AdmmConfig(rho=0.5, flip_on_change=False)
+    ccfg = ChannelConfig(n_workers=W, snr_db=40.0)
+    init_fn, train_step = make_fl_train(model, flcfg, acfg, ccfg)
+
+    tseq = _text_seq(cfg, seq)
+    batch = {"tokens": _sds((W, bw, tseq), jnp.int32),
+             **_modality_extras(cfg, W, bw, seq)}
+    key = _sds((2,), jnp.uint32)
+
+    state_sds = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+
+    kw = dict(cfg=cfg, mesh=mesh, multi_pod=multi_pod)
+    if sketched:
+        # shared params FSDP 2D; sketch-space state small -> replicated
+        state_spec = type(state_sds)(
+            Theta=SH.tree_pspecs(state_sds.Theta, worker_dim=False,
+                                 fsdp=True, **kw),
+            lam=jax.tree.map(lambda _: P(), state_sds.lam),
+            chan=jax.tree.map(lambda _: P(), state_sds.chan),
+            step=P(),
+        )
+        batch_spec = {k: P(*((None, daxes if len(daxes) > 1 else daxes[0])
+                             + (None,) * (len(v.shape) - 2)))
+                      for k, v in batch.items()}
+    else:
+        worker = dict(worker_dim=True, fsdp=False, **kw)
+        state_spec = type(state_sds)(
+            theta=SH.tree_pspecs(state_sds.theta, **worker),
+            lam=SH.tree_pspecs(state_sds.lam, **worker),
+            Theta=SH.tree_pspecs(state_sds.Theta, worker_dim=False,
+                                 fsdp=False, **kw),
+            chan=type(state_sds.chan)(
+                h=SH.tree_pspecs(state_sds.chan.h, **worker),
+                age=P()),
+            opt=type(state_sds.opt)(
+                mu=SH.tree_pspecs(state_sds.opt.mu, **worker),
+                nu=SH.tree_pspecs(state_sds.opt.nu, **worker),
+                count=P()),
+            step=P(),
+        )
+        wspec = daxes if len(daxes) > 1 else daxes[0]
+        batch_spec = {k: P(*((wspec,) + (None,) * (len(v.shape) - 1)))
+                      for k, v in batch.items()}
+
+    return DryRunSpec(
+        fn=train_step,
+        args=(state_sds, batch, key),
+        in_shardings=(state_spec, batch_spec, P()),
+        donate_argnums=(0,),
+        meta=dict(kind="train", arch=arch, seq=seq, global_batch=gbatch,
+                  fl_mode=flcfg.mode, n_workers=W,
+                  sliding_window=cfg.sliding_window),
+    )
+
+
+def build_prefill_spec(arch: str, mesh: Mesh, *, multi_pod: bool,
+                       reduced: bool = False) -> DryRunSpec:
+    shp = SHAPES["prefill_32k"]
+    cfg = _arch_cfg(arch, "prefill_32k")
+    if reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    daxes = data_axes(multi_pod)
+    d_n = axis_size(mesh, daxes)
+    seq = 64 if reduced else shp["seq"]
+    B = d_n if reduced else shp["batch"]
+
+    prefill = make_prefill(model)
+    params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    fsdp = arch in BIG_ARCHS and not reduced
+    pspec = SH.tree_pspecs(params_sds, cfg=cfg, mesh=mesh, worker_dim=False,
+                           fsdp=fsdp, multi_pod=multi_pod)
+    tseq = _text_seq(cfg, seq)
+    batch = {"tokens": _sds((B, tseq), jnp.int32),
+             **_modality_extras(cfg, B, None, seq)}
+    bspec = {k: SH.batch_pspec(v.shape, mesh, 0, multi_pod)
+             for k, v in batch.items()}
+    return DryRunSpec(
+        fn=prefill, args=(params_sds, batch),
+        in_shardings=(pspec, bspec), donate_argnums=(),
+        meta=dict(kind="prefill", arch=arch, seq=seq, global_batch=B,
+                  fsdp=fsdp, sliding_window=cfg.sliding_window),
+    )
+
+
+def build_decode_spec(arch: str, shape_name: str, mesh: Mesh, *,
+                      multi_pod: bool, reduced: bool = False) -> DryRunSpec:
+    shp = SHAPES[shape_name]
+    cfg = _arch_cfg(arch, shape_name)
+    if reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    daxes = data_axes(multi_pod)
+    d_n = axis_size(mesh, daxes)
+    seq = 128 if reduced else shp["seq"]
+    B = (d_n if shp["batch"] >= d_n else shp["batch"]) if reduced else shp["batch"]
+
+    serve_step = make_serve_step(model)
+    params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    fsdp = arch in BIG_ARCHS and not reduced
+    pspec = SH.tree_pspecs(params_sds, cfg=cfg, mesh=mesh, worker_dim=False,
+                           fsdp=fsdp, multi_pod=multi_pod)
+    cache_kw = {}
+    if cfg.family == "audio":
+        cache_kw["n_frames"] = max(seq // 4, 16)
+    cache_sds = jax.eval_shape(
+        lambda: model.init_cache(B, seq, **cache_kw))
+    cspec = SH.cache_pspecs(cache_sds, cfg, mesh, B, multi_pod=multi_pod)
+    token = _sds((B,), jnp.int32)
+    tspec = SH.batch_pspec((B,), mesh, 0, multi_pod)
+    pos = _sds((), jnp.int32)
+    return DryRunSpec(
+        fn=serve_step, args=(params_sds, cache_sds, token, pos),
+        in_shardings=(pspec, cspec, tspec, P()),
+        donate_argnums=(1,),
+        meta=dict(kind="decode", arch=arch, seq=seq, global_batch=B,
+                  fsdp=fsdp, sliding_window=cfg.sliding_window),
+    )
+
+
+def input_specs(arch: str, shape_name: str = "train_4k",
+                mesh: Optional[Mesh] = None, *,
+                multi_pod: bool = False) -> Tuple:
+    """ShapeDtypeStruct stand-ins for every model input of one combination
+    (weak-type-correct, shardable, no device allocation)."""
+    from repro.launch.mesh import make_production_mesh
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    return build_spec(arch, shape_name, mesh, multi_pod=multi_pod).args
+
+
+def build_spec(arch: str, shape_name: str, mesh: Mesh, *, multi_pod: bool,
+               reduced: bool = False) -> DryRunSpec:
+    kind = SHAPES[shape_name]["kind"]
+    if kind == "train":
+        return build_train_spec(arch, mesh, multi_pod=multi_pod,
+                                reduced=reduced)
+    if kind == "prefill":
+        return build_prefill_spec(arch, mesh, multi_pod=multi_pod,
+                                  reduced=reduced)
+    return build_decode_spec(arch, shape_name, mesh, multi_pod=multi_pod,
+                             reduced=reduced)

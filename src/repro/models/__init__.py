@@ -1,0 +1,3 @@
+from repro.models.config import ModelConfig  # noqa: F401
+from repro.models.registry import (ARCHS, Model, build_model, get_config,  # noqa: F401
+                                   get_model, list_archs)

@@ -1,0 +1,214 @@
+"""Audio enc-dec family: seamless-m4t-medium backbone.
+
+Per the brief the modality frontend (mel-spectrogram + conv feature
+extractor) is a STUB — ``input_specs`` feeds precomputed frame embeddings of
+shape (B, T_frames, d_model) straight into the encoder.  The
+speech-encoder-is-a-conformer detail is therefore out of scope (it lives in
+front of the stub boundary); the text decoder and the encoder *transformer*
+stack are real: 12 bidirectional encoder layers + 12 causal decoder layers
+with cross-attention, layernorm, gelu MLPs (arXiv:2308.11596).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.sharding import shard
+
+Array = jax.Array
+Params = Dict
+
+
+
+def _remat_policy():
+    """nothing_saveable (default) or dots_saveable under §Perf "save_dots"
+    (trades peak activation memory for one fewer full recompute pass)."""
+    from repro import optflags
+    if optflags.enabled("save_dots"):
+        return jax.checkpoint_policies.dots_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+def _enc_layer_init(key: Array, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"ln1": L.layernorm_init(cfg.d_model, cfg.dtype),
+            "attn": L.attention_init(k1, cfg),
+            "ln2": L.layernorm_init(cfg.d_model, cfg.dtype),
+            "mlp": L.mlp_init(k2, cfg)}
+
+
+def _dec_layer_init(key: Array, cfg: ModelConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": L.layernorm_init(cfg.d_model, cfg.dtype),
+            "self_attn": L.attention_init(k1, cfg),
+            "ln_x": L.layernorm_init(cfg.d_model, cfg.dtype),
+            "cross_attn": L.attention_init(k2, cfg),
+            "ln2": L.layernorm_init(cfg.d_model, cfg.dtype),
+            "mlp": L.mlp_init(k3, cfg)}
+
+
+def init_params(key: Array, cfg: ModelConfig) -> Params:
+    ke, kenc, kdec = jax.random.split(key, 3)
+    ekeys = jax.random.split(kenc, cfg.n_enc_layers)
+    dkeys = jax.random.split(kdec, cfg.n_layers)
+    return {
+        "embed": L.embedding_init(ke, cfg.vocab_size, cfg.d_model, cfg.dtype),
+        "enc_layers": jax.vmap(lambda k: _enc_layer_init(k, cfg))(ekeys),
+        "enc_norm": L.layernorm_init(cfg.d_model, cfg.dtype),
+        "dec_layers": jax.vmap(lambda k: _dec_layer_init(k, cfg))(dkeys),
+        "dec_norm": L.layernorm_init(cfg.d_model, cfg.dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# encoder (bidirectional over stub frame embeddings)
+# ---------------------------------------------------------------------------
+
+def _bidir_attention(p: Params, x: Array, cfg: ModelConfig,
+                     positions: Array) -> Array:
+    hd = cfg.hd
+    B, S, _ = x.shape
+    q = L.rope(L._split_heads(L.dense(p["wq"], x), cfg.n_heads, hd),
+               positions, cfg.rope_theta)
+    k = L.rope(L._split_heads(L.dense(p["wk"], x), cfg.n_kv_heads, hd),
+               positions, cfg.rope_theta)
+    v = L._split_heads(L.dense(p["wv"], x), cfg.n_kv_heads, hd)
+    g = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, S, cfg.n_kv_heads, g, hd)
+    mask = jnp.ones((S, S), bool)
+    w = L._attn_weights(qg, k, mask)
+    o = jnp.einsum("bkgst,btkh->bskgh", w.astype(x.dtype), v)
+    return L.dense(p["wo"], o.reshape(B, S, cfg.n_heads * hd))
+
+
+def encode(params: Params, cfg: ModelConfig, frames: Array,
+           remat: bool = True) -> Array:
+    """frames: (B, T_frames, d_model) stub embeddings -> encoder memory."""
+    x = shard(frames.astype(cfg.dtype), "batch", "seq", "embed")
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(x, p):
+        h = _bidir_attention(p["attn"], L.layernorm(p["ln1"], x, cfg.norm_eps),
+                             cfg, positions)
+        x = x + h
+        x = x + L.mlp(p["mlp"], L.layernorm(p["ln2"], x, cfg.norm_eps), cfg)
+        return shard(x, "batch", "seq", "embed"), None
+
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=_remat_policy())
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.layernorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# decoder
+# ---------------------------------------------------------------------------
+
+def _cross_attention(p: Params, x: Array, cfg: ModelConfig, mem_k: Array,
+                     mem_v: Array) -> Array:
+    """x: (B,S,d); mem_[kv]: (B,T,KV,hd) precomputed from encoder memory."""
+    hd = cfg.hd
+    B, S, _ = x.shape
+    q = L._split_heads(L.dense(p["wq"], x), cfg.n_heads, hd)
+    g = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, S, cfg.n_kv_heads, g, hd)
+    mask = jnp.ones((S, mem_k.shape[1]), bool)
+    w = L._attn_weights(qg, mem_k, mask)
+    o = jnp.einsum("bkgst,btkh->bskgh", w.astype(x.dtype), mem_v)
+    return L.dense(p["wo"], o.reshape(B, S, cfg.n_heads * hd))
+
+
+def _cross_kv(p: Params, cfg: ModelConfig, memory: Array) -> Tuple[Array, Array]:
+    k = L._split_heads(L.dense(p["wk"], memory), cfg.n_kv_heads, cfg.hd)
+    v = L._split_heads(L.dense(p["wv"], memory), cfg.n_kv_heads, cfg.hd)
+    return k, v
+
+
+def decode_forward(params: Params, cfg: ModelConfig, tokens: Array,
+                   memory: Array, remat: bool = True) -> Array:
+    """Teacher-forced decoder pass (training). tokens: (B,S)."""
+    x = L.embed(params["embed"], tokens)
+    x = shard(x, "batch", "seq", "embed")
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(x, p):
+        h = L.layernorm(p["ln1"], x, cfg.norm_eps)
+        a, _ = L.attention_fwd(p["self_attn"], h, cfg, positions,
+                               cfg.sliding_window)
+        x = x + a
+        mk, mv = _cross_kv(p["cross_attn"], cfg, memory)
+        x = x + _cross_attention(p["cross_attn"],
+                                 L.layernorm(p["ln_x"], x, cfg.norm_eps),
+                                 cfg, mk, mv)
+        x = x + L.mlp(p["mlp"], L.layernorm(p["ln2"], x, cfg.norm_eps), cfg)
+        return shard(x, "batch", "seq", "embed"), None
+
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=_remat_policy())
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = L.layernorm(params["dec_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def lm_forward(params: Params, cfg: ModelConfig, tokens: Array,
+               frames: Array, remat: bool = True) -> Array:
+    memory = encode(params, cfg, frames, remat=remat)
+    return decode_forward(params, cfg, tokens, memory, remat=remat)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               n_frames: Optional[int] = None, dtype=None) -> Dict:
+    dtype = dtype or cfg.dtype
+    T = max_seq if cfg.sliding_window is None else min(max_seq, cfg.sliding_window)
+    n_frames = n_frames or cfg.frontend_tokens
+    Ld = cfg.n_layers
+    return {
+        "self_k": jnp.zeros((Ld, batch, T, cfg.n_kv_heads, cfg.hd), dtype),
+        "self_v": jnp.zeros((Ld, batch, T, cfg.n_kv_heads, cfg.hd), dtype),
+        "cross_k": jnp.zeros((Ld, batch, n_frames, cfg.n_kv_heads, cfg.hd), dtype),
+        "cross_v": jnp.zeros((Ld, batch, n_frames, cfg.n_kv_heads, cfg.hd), dtype),
+    }
+
+
+def prefill_cross(params: Params, cfg: ModelConfig, memory: Array) -> Tuple[Array, Array]:
+    """Precompute per-layer cross KV from encoder memory (scan-stacked)."""
+    def body(_, p):
+        return None, _cross_kv(p["cross_attn"], cfg, memory)
+    _, (ks, vs) = jax.lax.scan(body, None, params["dec_layers"])
+    return ks, vs
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Dict, token: Array,
+                pos: Array) -> Tuple[Array, Dict]:
+    x = L.embed(params["embed"], token[:, None])
+    x = shard(x, "batch", "seq", "embed")
+    T = cache["self_k"].shape[2]
+    write_pos = pos % T if cfg.sliding_window is not None else pos
+
+    def body(x, xs):
+        p, sk, sv, xk, xv = xs
+        h = L.layernorm(p["ln1"], x, cfg.norm_eps)
+        a, sk, sv = L.attention_decode(p["self_attn"], h, cfg, sk, sv,
+                                       write_pos, pos)
+        x = x + a
+        x = x + _cross_attention(p["cross_attn"],
+                                 L.layernorm(p["ln_x"], x, cfg.norm_eps),
+                                 cfg, xk, xv)
+        x = x + L.mlp(p["mlp"], L.layernorm(p["ln2"], x, cfg.norm_eps), cfg)
+        return x, (sk, sv)
+
+    x, (nsk, nsv) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["self_k"], cache["self_v"],
+                  cache["cross_k"], cache["cross_v"]))
+    x = L.layernorm(params["dec_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x)[:, 0]
+    return shard(logits, "batch", "vocab"), dict(cache, self_k=nsk, self_v=nsv)

@@ -1,0 +1,293 @@
+"""Hybrid family: recurrentgemma-2b (Griffin) — RG-LRU recurrent blocks
+interleaved 2:1 with local (sliding-window) MQA attention blocks.
+
+Block pattern ("rec","rec","attn") repeats; 26 layers = 8 scanned
+super-blocks of 3 + 2 unrolled tail layers (rec, rec).
+
+Recurrent (temporal-mixing) block, Griffin §2:
+    y = W_out( gelu(W_1 x)  ⊙  RG-LRU(conv1d(W_2 x)) )
+RG-LRU:
+    r = σ(W_a x + b_a);  i = σ(W_x x + b_x);  log a = −c·softplus(Λ)·r (c=8)
+    h_t = a ⊙ h_{t−1} + sqrt(1 − a²) ⊙ (i ⊙ x_t)
+
+Both the recurrence and the attention window are O(S·w) — this family runs
+``long_500k`` natively (state + 2048-slot rotating KV).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.sharding import shard
+
+Array = jax.Array
+Params = Dict
+
+LRU_C = 8.0
+
+
+
+def _remat_policy():
+    """nothing_saveable (default) or dots_saveable under §Perf "save_dots"
+    (trades peak activation memory for one fewer full recompute pass)."""
+    from repro import optflags
+    if optflags.enabled("save_dots"):
+        return jax.checkpoint_policies.dots_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+def _attn_cfg(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(cfg, sliding_window=cfg.attn_window)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block
+# ---------------------------------------------------------------------------
+
+def rec_block_init(key: Array, cfg: ModelConfig) -> Params:
+    d, dw = cfg.d_model, cfg.lru_width
+    dt = cfg.dtype
+    k = jax.random.split(key, 6)
+    # Λ init so that a^c·softplus ∈ [0.9, 0.999] regime (Griffin appendix)
+    lam = jnp.log(jnp.expm1(
+        jax.random.uniform(k[0], (dw,), jnp.float32, 0.1, 0.9)))
+    return {
+        "norm": L.rmsnorm_init(d, dt),
+        "w_gelu": L.dense_init(k[1], d, dw, dt),
+        "w_rec": L.dense_init(k[2], d, dw, dt),
+        "conv_w": (jax.random.normal(k[3], (cfg.conv1d_width, dw),
+                                     jnp.float32) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((dw,), dt),
+        "gate_a": L.dense_init(k[4], dw, dw, dt, bias=True),
+        "gate_x": L.dense_init(k[5], dw, dw, dt, bias=True),
+        "lam": lam,
+        "w_out": L.dense_init(jax.random.fold_in(k[0], 7), dw, d, dt),
+    }
+
+
+def _conv1d_causal(w: Array, b: Array, x: Array) -> Array:
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    return sum(xp[:, i:i + x.shape[1], :] * w[i][None, None]
+               for i in range(W)) + b[None, None]
+
+
+def _rglru_coeffs(p: Params, x: Array):
+    """x: (..., dw) -> (a, gated_in) in f32."""
+    r = jax.nn.sigmoid(L.dense(p["gate_a"], x).astype(jnp.float32))
+    i = jax.nn.sigmoid(L.dense(p["gate_x"], x).astype(jnp.float32))
+    log_a = -LRU_C * r * jax.nn.softplus(p["lam"])[..., :]
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x.astype(jnp.float32))
+    return a, b
+
+
+def rec_block_fwd(p: Params, u: Array, cfg: ModelConfig) -> Array:
+    x = L.rmsnorm(p["norm"], u, cfg.norm_eps)
+    g = jax.nn.gelu(L.dense(p["w_gelu"], x))
+    y = L.dense(p["w_rec"], x)
+    y = shard(y, "batch", "seq", "lru")
+    y = _conv1d_causal(p["conv_w"], p["conv_b"], y)
+    a, b = _rglru_coeffs(p, y)
+
+    from repro.kernels import gated_linear_scan
+    h = gated_linear_scan(a, b)
+    y = (h.astype(u.dtype)) * g
+    y = shard(y, "batch", "seq", "lru")
+    return u + L.dense(p["w_out"], y)
+
+
+def rec_block_decode(p: Params, u: Array, cfg: ModelConfig, lru_state: Array,
+                     conv_state: Array):
+    """u: (B,1,d); lru_state: (B,dw) f32; conv_state: (B,W-1,dw)."""
+    x = L.rmsnorm(p["norm"], u, cfg.norm_eps)
+    g = jax.nn.gelu(L.dense(p["w_gelu"], x))
+    y = L.dense(p["w_rec"], x)                          # (B,1,dw)
+    window = jnp.concatenate([conv_state, y], axis=1)
+    conv_new = window[:, 1:]
+    y = (jnp.einsum("bwd,wd->bd", window, p["conv_w"]) + p["conv_b"])[:, None]
+    a, b = _rglru_coeffs(p, y)
+    h = a[:, 0] * lru_state + b[:, 0]
+    y = (h[:, None].astype(u.dtype)) * g
+    return u + L.dense(p["w_out"], y), h, conv_new
+
+
+# ---------------------------------------------------------------------------
+# attention + mlp sub-blocks
+# ---------------------------------------------------------------------------
+
+def attn_block_init(key: Array, cfg: ModelConfig) -> Params:
+    return {"ln": L.rmsnorm_init(cfg.d_model, cfg.dtype),
+            "attn": L.attention_init(key, _attn_cfg(cfg))}
+
+
+def attn_block_fwd(p: Params, x: Array, cfg: ModelConfig,
+                   positions: Array) -> Array:
+    a, _ = L.attention_fwd(p["attn"], L.rmsnorm(p["ln"], x, cfg.norm_eps),
+                           _attn_cfg(cfg), positions, cfg.attn_window)
+    return x + a
+
+
+def mlp_block_init(key: Array, cfg: ModelConfig) -> Params:
+    return {"ln": L.rmsnorm_init(cfg.d_model, cfg.dtype),
+            "mlp": L.mlp_init(key, cfg)}
+
+
+def mlp_block_fwd(p: Params, x: Array, cfg: ModelConfig) -> Array:
+    return x + L.mlp(p["mlp"], L.rmsnorm(p["ln"], x, cfg.norm_eps), cfg)
+
+
+# ---------------------------------------------------------------------------
+# full model: scanned super-blocks + tail
+# ---------------------------------------------------------------------------
+
+def _layer_init(key: Array, cfg: ModelConfig, kind: str) -> Params:
+    k1, k2 = jax.random.split(key)
+    tm = rec_block_init(k1, cfg) if kind == "rec" else attn_block_init(k1, cfg)
+    return {"temporal": tm, "mlp_blk": mlp_block_init(k2, cfg)}
+
+
+def _layer_fwd(p: Params, x: Array, cfg: ModelConfig, positions: Array,
+               kind: str) -> Array:
+    if kind == "rec":
+        x = rec_block_fwd(p["temporal"], x, cfg)
+    else:
+        x = attn_block_fwd(p["temporal"], x, cfg, positions)
+    x = mlp_block_fwd(p["mlp_blk"], x, cfg)
+    return shard(x, "batch", "seq", "embed")
+
+
+def _split_pattern(cfg: ModelConfig) -> Tuple[int, Tuple[str, ...]]:
+    pat = cfg.block_pattern
+    n_super = cfg.n_layers // len(pat)
+    tail = tuple(pat[: cfg.n_layers - n_super * len(pat)])
+    return n_super, tail
+
+
+def init_params(key: Array, cfg: ModelConfig) -> Params:
+    pat = cfg.block_pattern
+    n_super, tail = _split_pattern(cfg)
+    ke, ks, kt = jax.random.split(key, 3)
+    skeys = jax.random.split(ks, n_super)
+
+    def init_super(k):
+        kk = jax.random.split(k, len(pat))
+        return {f"b{i}": _layer_init(kk[i], cfg, kind)
+                for i, kind in enumerate(pat)}
+
+    params = {
+        "embed": L.embedding_init(ke, cfg.vocab_size, cfg.d_model, cfg.dtype),
+        "super": jax.vmap(init_super)(skeys),
+        "final_norm": L.rmsnorm_init(cfg.d_model, cfg.dtype),
+    }
+    tkeys = jax.random.split(kt, max(len(tail), 1))
+    params["tail"] = [_layer_init(tkeys[i], cfg, kind)
+                      for i, kind in enumerate(tail)]
+    return params
+
+
+def lm_forward(params: Params, cfg: ModelConfig, tokens: Array,
+               remat: bool = True) -> Array:
+    pat = cfg.block_pattern
+    _, tail = _split_pattern(cfg)
+    x = L.embed(params["embed"], tokens) * jnp.asarray(
+        cfg.d_model ** 0.5, cfg.dtype)  # gemma-style embed scaling
+    x = shard(x, "batch", "seq", "embed")
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(x, super_p):
+        for i, kind in enumerate(pat):
+            x = _layer_fwd(super_p[f"b{i}"], x, cfg, positions, kind)
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=_remat_policy())
+    x, _ = jax.lax.scan(body, x, params["super"])
+    for p_l, kind in zip(params["tail"], tail):
+        x = _layer_fwd(p_l, x, cfg, positions, kind)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def _layer_cache(cfg: ModelConfig, batch: int, kind: str, dtype) -> Dict:
+    if kind == "rec":
+        return {"lru": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+                "conv": jnp.zeros((batch, cfg.conv1d_width - 1,
+                                   cfg.lru_width), dtype)}
+    acfg = _attn_cfg(cfg)
+    return {"k": jnp.zeros((batch, cfg.attn_window, acfg.n_kv_heads,
+                            acfg.hd), dtype),
+            "v": jnp.zeros((batch, cfg.attn_window, acfg.n_kv_heads,
+                            acfg.hd), dtype)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None) -> Dict:
+    del max_seq  # recurrence state + rotating window: seq-independent
+    dtype = dtype or cfg.dtype
+    pat = cfg.block_pattern
+    n_super, tail = _split_pattern(cfg)
+
+    def one_super(_):
+        return {f"b{i}": _layer_cache(cfg, batch, kind, dtype)
+                for i, kind in enumerate(pat)}
+
+    stacked = jax.tree.map(lambda x: jnp.broadcast_to(x, (n_super,) + x.shape),
+                           one_super(0))
+    return {"super": stacked,
+            "tail": [_layer_cache(cfg, batch, kind, dtype) for kind in tail]}
+
+
+def _layer_decode(p: Params, x: Array, cfg: ModelConfig, cache: Dict,
+                  kind: str, write_pos: Array, abs_pos: Array):
+    if kind == "rec":
+        y, lru, conv = rec_block_decode(p["temporal"], x, cfg, cache["lru"],
+                                        cache["conv"])
+        new_cache = {"lru": lru, "conv": conv}
+    else:
+        h = L.rmsnorm(p["temporal"]["ln"], x, cfg.norm_eps)
+        a, ck, cv = L.attention_decode(p["temporal"]["attn"], h, _attn_cfg(cfg),
+                                       cache["k"], cache["v"], write_pos,
+                                       abs_pos)
+        y = x + a
+        new_cache = {"k": ck, "v": cv}
+    y = mlp_block_fwd(p["mlp_blk"], y, cfg)
+    return y, new_cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Dict, token: Array,
+                pos: Array) -> Tuple[Array, Dict]:
+    pat = cfg.block_pattern
+    _, tail = _split_pattern(cfg)
+    x = L.embed(params["embed"], token[:, None]) * jnp.asarray(
+        cfg.d_model ** 0.5, cfg.dtype)
+    write_pos = pos % cfg.attn_window
+
+    def body(x, xs):
+        super_p, super_c = xs
+        new_c = {}
+        for i, kind in enumerate(pat):
+            x, new_c[f"b{i}"] = _layer_decode(super_p[f"b{i}"], x, cfg,
+                                              super_c[f"b{i}"], kind,
+                                              write_pos, pos)
+        return x, new_c
+
+    x, new_super = jax.lax.scan(body, x, (params["super"], cache["super"]))
+    new_tail = []
+    for p_l, c_l, kind in zip(params["tail"], cache["tail"], tail):
+        x, nc = _layer_decode(p_l, x, cfg, c_l, kind, write_pos, pos)
+        new_tail.append(nc)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x)[:, 0]
+    return shard(logits, "batch", "vocab"), {"super": new_super,
+                                             "tail": new_tail}

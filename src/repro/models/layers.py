@@ -1,0 +1,285 @@
+"""Shared transformer building blocks: norms, RoPE, GQA attention, MLPs.
+
+Conventions:
+* params are nested dicts of ``jnp`` arrays; init functions mirror forward
+  functions 1:1;
+* activations flow in the config dtype (bf16), softmax/norm statistics in f32;
+* every matmul uses ``einsum`` with explicit axes; activation tensors carry
+  logical sharding annotations (:mod:`repro.models.sharding`);
+* attention supports three modes: full causal (train / prefill), sliding
+  window, and single-token decode against a (possibly seq-sharded) KV cache.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.sharding import shard
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """Rotary embedding. x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense / embedding
+# ---------------------------------------------------------------------------
+
+def dense_init(key: Array, d_in: int, d_out: int, dtype,
+               bias: bool = False, scale: Optional[float] = None) -> Params:
+    s = scale if scale is not None else d_in ** -0.5
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Params, x: Array) -> Array:
+    y = jnp.einsum("...i,io->...o", x, p["w"])
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def embedding_init(key: Array, vocab: int, d: int, dtype) -> Params:
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32)
+                      * d ** -0.5).astype(dtype)}
+
+
+def embed(p: Params, ids: Array) -> Array:
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def unembed(p: Params, x: Array) -> Array:
+    return jnp.einsum("...d,vd->...v", x, p["table"])
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, optional sliding window, KV cache decode)
+# ---------------------------------------------------------------------------
+
+def attention_init(key: Array, cfg: ModelConfig) -> Params:
+    hd = cfg.hd
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, cfg.d_model, cfg.n_heads * hd, cfg.dtype,
+                         bias=cfg.qkv_bias),
+        "wk": dense_init(kk, cfg.d_model, cfg.n_kv_heads * hd, cfg.dtype,
+                         bias=cfg.qkv_bias),
+        "wv": dense_init(kv, cfg.d_model, cfg.n_kv_heads * hd, cfg.dtype,
+                         bias=cfg.qkv_bias),
+        "wo": dense_init(ko, cfg.n_heads * hd, cfg.d_model, cfg.dtype),
+    }
+
+
+def _split_heads(x: Array, n: int, hd: int) -> Array:
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _attn_weights(q: Array, k: Array, mask: Array) -> Array:
+    """q: (B,S,KV,G,hd)  k: (B,T,KV,hd)  mask: (S,T) or (B,S,T) -> (B,KV,G,S,T)."""
+    scores = jnp.einsum("bskgh,btkh->bkgst", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores * (q.shape[-1] ** -0.5)
+    if mask.ndim == 2:
+        mask = mask[None]
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    return jax.nn.softmax(scores, axis=-1)
+
+
+def causal_mask(s: int, window: Optional[int]) -> Array:
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    m = j <= i
+    if window is not None:
+        m = jnp.logical_and(m, j > i - window)
+    return m
+
+
+def _attention_chunked(qg: Array, k: Array, v: Array, window: Optional[int],
+                       chunk: int) -> Array:
+    """Query-chunked causal attention: peak score tensor is (chunk, S), not
+    (S, S) — the §Perf memory-term optimization. Exact softmax (full row per
+    query chunk), scanned over query blocks."""
+    B, S, KV, G, hd = qg.shape
+    C = min(chunk, S)
+    n = -(-S // C)
+    Sp = n * C
+    if Sp != S:
+        qg = jnp.pad(qg, ((0, 0), (0, Sp - S), (0, 0), (0, 0), (0, 0)))
+    qs = qg.reshape(B, n, C, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    t = jnp.arange(S)
+
+    def body(_, args):
+        ci, qc = args                          # qc: (B, C, KV, G, hd)
+        i = ci * C + jnp.arange(C)[:, None]    # absolute query rows
+        m = t[None, :] <= i
+        if window is not None:
+            m = jnp.logical_and(m, t[None, :] > i - window)
+        w = _attn_weights(qc, k, m)
+        oc = jnp.einsum("bkgst,btkh->bskgh", w.astype(v.dtype), v)
+        return None, oc
+
+    _, ocs = jax.lax.scan(body, None, (jnp.arange(n), qs))
+    o = ocs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sp, KV, G, hd)
+    return o[:, :S]
+
+
+def attention_fwd(p: Params, x: Array, cfg: ModelConfig, positions: Array,
+                  window: Optional[int]) -> Tuple[Array, Dict[str, Array]]:
+    """Full-sequence causal attention. Returns (out, kv) — kv for prefill."""
+    from repro import optflags
+    hd = cfg.hd
+    B, S, _ = x.shape
+    q = _split_heads(dense(p["wq"], x), cfg.n_heads, hd)
+    k = _split_heads(dense(p["wk"], x), cfg.n_kv_heads, hd)
+    v = _split_heads(dense(p["wv"], x), cfg.n_kv_heads, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+
+    g = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, S, cfg.n_kv_heads, g, hd)
+    from repro.kernels import use_pallas
+    if use_pallas() and window is None and S >= 16:
+        # TPU path: VMEM-resident flash attention (kernels/flash_attention).
+        # GQA handled by broadcasting KV over the group dim.
+        from repro.kernels import ops as kops
+        qf = qg.transpose(0, 2, 3, 1, 4).reshape(
+            B, cfg.n_heads, S, hd)                     # (B, H, S, hd)
+        kf = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1)
+        vf = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1)
+        of = kops.flash_attention(qf, kf, vf, causal=True,
+                                  block_q=min(256, S), block_k=min(256, S))
+        o = of.reshape(B, cfg.n_kv_heads, g, S, hd).transpose(0, 3, 1, 2, 4)
+    elif optflags.enabled("chunked_attn") and S > optflags.ATTN_CHUNK:
+        o = _attention_chunked(qg, k, v, window, optflags.ATTN_CHUNK)
+    else:
+        w = _attn_weights(qg, k, causal_mask(S, window))
+        o = jnp.einsum("bkgst,btkh->bskgh", w.astype(x.dtype), v)
+    o = o.reshape(B, S, cfg.n_heads * hd)
+    return dense(p["wo"], o), {"k": k, "v": v}
+
+
+def attention_decode(p: Params, x: Array, cfg: ModelConfig, cache_k: Array,
+                     cache_v: Array, write_pos: Array,
+                     abs_pos: Array) -> Tuple[Array, Array, Array]:
+    """One-token decode. x: (B,1,d); cache_[kv]: (B,T,KV,hd).
+
+    ``write_pos`` is the cache slot (== abs_pos for a full cache; ``abs_pos %
+    window`` for a rotating sliding-window buffer), ``abs_pos`` the absolute
+    sequence position (RoPE + validity mask: slot t is attendable iff it has
+    been written, i.e. t <= abs_pos — for rotating buffers t < T <= abs_pos+1
+    once warm, so every slot participates, which is exactly the window).
+
+    The cache may be sequence-sharded over the ``model`` mesh axis
+    ("kv_seq"); the softmax/PV contraction over T then lowers to a
+    flash-decoding-style partial-reduce + psum, which XLA schedules from the
+    einsum. Returns (out, new_k, new_v).
+    """
+    hd = cfg.hd
+    B = x.shape[0]
+    T = cache_k.shape[1]
+    q = _split_heads(dense(p["wq"], x), cfg.n_heads, hd)
+    k = _split_heads(dense(p["wk"], x), cfg.n_kv_heads, hd)
+    v = _split_heads(dense(p["wv"], x), cfg.n_kv_heads, hd)
+    posv = jnp.full((B, 1), abs_pos, jnp.int32)
+    q = rope(q, posv, cfg.rope_theta)
+    k = rope(k, posv, cfg.rope_theta)
+
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), write_pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), write_pos, axis=1)
+    cache_k = shard(cache_k, "batch", "kv_seq", "kv_heads", None)
+    cache_v = shard(cache_v, "batch", "kv_seq", "kv_heads", None)
+
+    m = jnp.arange(T) <= abs_pos  # (T,)
+    g = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, 1, cfg.n_kv_heads, g, hd)
+    w = _attn_weights(qg, cache_k, m[None, :])  # (1,T) mask
+    o = jnp.einsum("bkgst,btkh->bskgh", w.astype(x.dtype), cache_v)
+    o = o.reshape(B, 1, cfg.n_heads * hd)
+    return dense(p["wo"], o), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key: Array, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    """mlp_act: "silu" (swiglu) | "geglu" | "gelu_mlp" (plain 2-matrix)."""
+    d_ff = d_ff or cfg.d_ff
+    if cfg.mlp_act in ("silu", "geglu"):  # gated: gate/up/down
+        kg, ku, kd = jax.random.split(key, 3)
+        return {
+            "gate": dense_init(kg, cfg.d_model, d_ff, cfg.dtype),
+            "up": dense_init(ku, cfg.d_model, d_ff, cfg.dtype),
+            "down": dense_init(kd, d_ff, cfg.d_model, cfg.dtype),
+        }
+    ki, ko = jax.random.split(key)
+    return {
+        "fc_in": dense_init(ki, cfg.d_model, d_ff, cfg.dtype, bias=True),
+        "fc_out": dense_init(ko, d_ff, cfg.d_model, cfg.dtype, bias=True),
+    }
+
+
+def mlp(p: Params, x: Array, cfg: ModelConfig) -> Array:
+    if "gate" in p:
+        act = jax.nn.silu if cfg.mlp_act == "silu" else jax.nn.gelu
+        h = act(dense(p["gate"], x)) * dense(p["up"], x)
+        h = shard(h, "batch", "seq", "ff")
+        return dense(p["down"], h)
+    h = jax.nn.gelu(dense(p["fc_in"], x))
+    h = shard(h, "batch", "seq", "ff")
+    return dense(p["fc_out"], h)

@@ -1,0 +1,63 @@
+"""The paper's DNN: a 784-128-64-10 ReLU MLP operated as a *flat parameter
+vector* (the representation A-FADMM transmits on subcarriers).
+
+Sec. 5 / Appendix H: ReLU hidden layers, softmax output, cross-entropy loss,
+d = 109,184 weights (+ biases in our implementation).
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def init_mlp_flat(key: Array, sizes: Sequence[int]) -> Tuple[Array, Callable]:
+    """Returns (flat_params (d,), unflatten(flat) -> [(W, b), ...])."""
+    parts = []
+    shapes = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        kw = jax.random.fold_in(key, i)
+        w = jax.random.normal(kw, (a, b)) * jnp.sqrt(2.0 / a)
+        parts += [w.reshape(-1), jnp.zeros((b,))]
+        shapes += [(a, b), (b,)]
+    flat = jnp.concatenate(parts)
+
+    def unflatten(vec: Array):
+        import math
+        out, off = [], 0
+        for shp in shapes:
+            n = math.prod(shp)
+            out.append(vec[off:off + n].reshape(shp))
+            off += n
+        return [(out[2 * i], out[2 * i + 1]) for i in range(len(sizes) - 1)]
+
+    return flat, unflatten
+
+
+def mlp_apply(vec: Array, x: Array, unflatten: Callable) -> Array:
+    layers = unflatten(vec)
+    h = x
+    for w, b in layers[:-1]:
+        h = jax.nn.relu(h @ w + b)
+    w, b = layers[-1]
+    return h @ w + b
+
+
+def make_loss_fns(unflatten: Callable):
+    """Returns (loss(vec, x, y), grad(vec, x, y), accuracy(vec, x, y))."""
+
+    def loss(vec: Array, x: Array, y: Array) -> Array:
+        logits = mlp_apply(vec, x, unflatten)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], 1))
+
+    grad = jax.grad(loss)
+
+    def accuracy(vec: Array, x: Array, y: Array) -> Array:
+        logits = mlp_apply(vec, x, unflatten)
+        return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+
+    return loss, grad, accuracy

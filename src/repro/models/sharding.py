@@ -1,0 +1,70 @@
+"""Logical-axis sharding: MaxText-style named activation constraints.
+
+Model code annotates activations with *logical* axis names
+(``shard(x, "batch", "seq", "embed")``); the launcher binds logical names to
+mesh axes via :func:`axis_rules`.  Outside any binding the annotations are
+no-ops, so the same model code runs single-device (smoke tests) and on the
+512-chip production mesh unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxis = Union[str, Sequence[str], None]
+
+_ACTIVE: dict = {"mesh": None, "rules": None}
+
+#: default logical->mesh bindings used by the production launcher.
+DEFAULT_RULES: Dict[str, MeshAxis] = {
+    "batch": "data",        # (joined with "pod" by the multi-pod launcher)
+    "worker": "data",       # FL worker axis (replicated mode)
+    "seq": None,
+    "res_seq": None,        # layer-boundary residual seq dim (§Perf seq_par)
+    "kv_seq": "model",      # decode caches: sequence sharded over model
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "vocab": "model",
+    "expert": "model",
+    "moe_group": "data",    # grouped-dispatch token groups (§Perf)
+    "lru": "model",
+    "inner": "model",       # mamba d_inner
+    "state": None,
+    "fsdp": "data",         # param dim for 2D-sharded (sketched-mode) archs
+}
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, rules: Optional[Dict[str, MeshAxis]] = None):
+    """Bind logical axis names to mesh axes for the enclosed trace."""
+    prev = dict(_ACTIVE)
+    _ACTIVE["mesh"] = mesh
+    _ACTIVE["rules"] = dict(DEFAULT_RULES if rules is None else rules)
+    try:
+        yield
+    finally:
+        _ACTIVE.update(prev)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _ACTIVE["mesh"]
+
+
+def spec_for(*names: Optional[str]) -> P:
+    rules = _ACTIVE["rules"] or {}
+    return P(*(rules.get(n) if n else None for n in names))
+
+
+def shard(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Constrain activation ``x`` (one logical name per dim; None = any)."""
+    mesh = _ACTIVE["mesh"]
+    if mesh is None:
+        return x
+    assert len(names) == x.ndim, (names, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec_for(*names)))

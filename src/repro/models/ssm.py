@@ -1,0 +1,224 @@
+"""SSM family: mamba1 (falcon-mamba-7b) — attention-free selective state space.
+
+Per-layer:  x,z = in_proj(u);  x = silu(causal_conv1d(x));
+            dt,B,C = x_proj(x);  dt = softplus(dt_proj(dt)+bias);
+            h_t = exp(dt·A)⊙h_{t-1} + (dt·B_t)·x_t ;  y_t = C_t·h_t + D⊙x_t;
+            out = out_proj(y ⊙ silu(z)).
+
+Training uses an associative scan over the sequence (O(log S) depth); the
+Pallas ``linear_scan`` kernel provides the blocked TPU implementation (state
+carried in VMEM across sequence tiles) and is validated against the same
+recurrence.  Decode is the O(1)-per-token state update — this is why the SSM
+archs run the ``long_500k`` shape natively.
+
+Falcon-Mamba note: the HF model adds RMS normalisation to (B, C, dt) for
+stability at 7B scale; we include it (``bcdt_rms=True``) as in the model card.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.sharding import shard
+
+Array = jax.Array
+Params = Dict
+
+
+
+def _remat_policy():
+    """nothing_saveable (default) or dots_saveable under §Perf "save_dots"
+    (trades peak activation memory for one fewer full recompute pass)."""
+    from repro import optflags
+    if optflags.enabled("save_dots"):
+        return jax.checkpoint_policies.dots_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+def block_init(key: Array, cfg: ModelConfig) -> Params:
+    d, di, n, r = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    dt = cfg.dtype
+    k = jax.random.split(key, 6)
+    # S4D-real initialisation for A; dt bias for softplus init in [1e-3, 1e-1]
+    a_init = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None], (di, 1))
+    return {
+        "norm": L.rmsnorm_init(d, dt),
+        "in_proj": L.dense_init(k[0], d, 2 * di, dt),
+        "conv_w": (jax.random.normal(k[1], (cfg.conv1d_width, di),
+                                     jnp.float32) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": L.dense_init(k[2], di, r + 2 * n, dt),
+        "dt_proj": L.dense_init(k[3], r, di, dt, bias=True),
+        "A_log": jnp.log(a_init),                      # f32: dynamics in f32
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": L.dense_init(k[4], di, d, dt),
+        "b_norm": L.rmsnorm_init(n, dt),
+        "c_norm": L.rmsnorm_init(n, dt),
+        "dt_norm": L.rmsnorm_init(r, dt),
+    }
+
+
+def _conv1d_causal(w: Array, b: Array, x: Array) -> Array:
+    """Depthwise causal conv. x: (B,S,di); w: (W,di)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None] for i in range(W))
+    return out + b[None, None]
+
+
+def _ssm_inputs(p: Params, x: Array, cfg: ModelConfig):
+    """Shared pre-scan computation. x: (B,S,di) post-conv."""
+    n, r = cfg.ssm_state, cfg.dt_rank
+    proj = L.dense(p["x_proj"], x)
+    dt_r, Bc, Cc = jnp.split(proj, [r, r + n], axis=-1)
+    dt_r = L.rmsnorm(p["dt_norm"], dt_r, cfg.norm_eps)
+    Bc = L.rmsnorm(p["b_norm"], Bc, cfg.norm_eps).astype(jnp.float32)
+    Cc = L.rmsnorm(p["c_norm"], Cc, cfg.norm_eps).astype(jnp.float32)
+    dt = jax.nn.softplus(L.dense(p["dt_proj"], dt_r).astype(jnp.float32))
+    A = -jnp.exp(p["A_log"])                            # (di, n)
+    return dt, Bc, Cc, A
+
+
+def _scan_full(dt, Bc, Cc, A, xf):
+    """Baseline: materialise (B,S,di,n) a/b, associative scan, contract."""
+    a = jnp.exp(dt[..., None] * A[None, None])          # (B,S,di,n)
+    b = (dt * xf)[..., None] * Bc[:, :, None, :]        # (B,S,di,n)
+    from repro.kernels import gated_linear_scan
+    hs = gated_linear_scan(a, b)
+    return jnp.einsum("bsdn,bsn->bsd", hs, Cc)
+
+
+def _scan_chunked_fused(dt, Bc, Cc, A, xf, chunk: int):
+    """§Perf "chunked_scan" v2: the whole per-chunk pipeline fused — a/b are
+    built per chunk, the state tensor h is contracted with C_t per chunk and
+    DISCARDED (only the (B,S,di) output leaves the loop).  This is the pure
+    JAX mirror of what the Pallas kernel does in VMEM: the (B,S,di,n)
+    tensors never exist at full sequence length."""
+    B, S, di = xf.shape
+    n = A.shape[-1]
+    C = min(chunk, S)
+    n_chunks = -(-S // C)
+    Sp = n_chunks * C
+    pad = lambda v: jnp.pad(v, ((0, 0), (0, Sp - S)) + ((0, 0),) * (v.ndim - 2))
+    dtp, Bp, Cp, xp = pad(dt), pad(Bc), pad(Cc), pad(xf)
+
+    def body(carry, ci):
+        h0 = carry                                       # (B,di,n)
+        sl = lambda v: jax.lax.dynamic_slice_in_dim(v, ci * C, C, axis=1)
+        dtc, bcc, ccc, xc = sl(dtp), sl(Bp), sl(Cp), sl(xp)
+        a = jnp.exp(dtc[..., None] * A[None, None])      # (B,C,di,n)
+        b = (dtc * xc)[..., None] * bcc[:, :, None, :]
+        # fold the carry into step 0: h_0 = a_0 h_init + b_0
+        b = b.at[:, 0].add(a[:, 0] * h0)
+        from repro.kernels import ref as kref
+        hs = kref.linear_scan(a.reshape(B, C, di * n),
+                              b.reshape(B, C, di * n)).reshape(B, C, di, n)
+        y = jnp.einsum("bsdn,bsn->bsd", hs, ccc)
+        return hs[:, -1], y
+
+    _, ys = jax.lax.scan(body, jnp.zeros((B, di, n), jnp.float32),
+                         jnp.arange(n_chunks))
+    return ys.transpose(1, 0, 2, 3).reshape(B, Sp, di)[:, :S]
+
+
+def block_fwd(p: Params, u: Array, cfg: ModelConfig) -> Array:
+    """Full-sequence forward. u: (B,S,d)."""
+    from repro import optflags
+    di, n = cfg.d_inner, cfg.ssm_state
+    h = L.rmsnorm(p["norm"], u, cfg.norm_eps)
+    xz = L.dense(p["in_proj"], h)
+    x, z = jnp.split(xz, 2, axis=-1)
+    x = shard(x, "batch", "seq", "inner")
+    x = jax.nn.silu(_conv1d_causal(p["conv_w"], p["conv_b"], x))
+    dt, Bc, Cc, A = _ssm_inputs(p, x, cfg)
+
+    xf = x.astype(jnp.float32)
+    if optflags.enabled("chunked_scan") and x.shape[1] > optflags.SCAN_CHUNK:
+        y = _scan_chunked_fused(dt, Bc, Cc, A, xf, optflags.SCAN_CHUNK)
+    else:
+        y = _scan_full(dt, Bc, Cc, A, xf)
+    y = y + p["D"][None, None] * xf
+    y = (y.astype(u.dtype)) * jax.nn.silu(z)
+    y = shard(y, "batch", "seq", "inner")
+    return u + L.dense(p["out_proj"], y)
+
+
+def init_params(key: Array, cfg: ModelConfig) -> Params:
+    ke, kl = jax.random.split(key)
+    lkeys = jax.random.split(kl, cfg.n_layers)
+    return {
+        "embed": L.embedding_init(ke, cfg.vocab_size, cfg.d_model, cfg.dtype),
+        "layers": jax.vmap(lambda k: block_init(k, cfg))(lkeys),
+        "final_norm": L.rmsnorm_init(cfg.d_model, cfg.dtype),
+    }
+
+
+def lm_forward(params: Params, cfg: ModelConfig, tokens: Array,
+               remat: bool = True) -> Array:
+    x = L.embed(params["embed"], tokens)
+    x = shard(x, "batch", "seq", "embed")
+
+    def body(x, layer_p):
+        return block_fwd(layer_p, x, cfg), None
+
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=_remat_policy())
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+# ---------------------------------------------------------------------------
+# decode: O(1) state update per token
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None) -> Dict:
+    del max_seq  # state size is sequence-independent — the SSM advantage
+    return {
+        "ssm": jnp.zeros((cfg.n_layers, batch, cfg.d_inner, cfg.ssm_state),
+                         jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.conv1d_width - 1,
+                           cfg.d_inner), cfg.dtype),
+    }
+
+
+def block_decode(p: Params, u: Array, cfg: ModelConfig, ssm_state: Array,
+                 conv_state: Array):
+    """u: (B,1,d); ssm_state: (B,di,n); conv_state: (B,W-1,di)."""
+    h = L.rmsnorm(p["norm"], u, cfg.norm_eps)
+    xz = L.dense(p["in_proj"], h)
+    x, z = jnp.split(xz, 2, axis=-1)                    # (B,1,di)
+    window = jnp.concatenate([conv_state, x], axis=1)   # (B,W,di)
+    conv_state_new = window[:, 1:]
+    x = jnp.einsum("bwd,wd->bd", window, p["conv_w"]) + p["conv_b"]
+    x = jax.nn.silu(x)[:, None]                         # (B,1,di)
+    dt, Bc, Cc, A = _ssm_inputs(p, x, cfg)
+    dt, Bc, Cc = dt[:, 0], Bc[:, 0], Cc[:, 0]           # (B,di)/(B,n)
+    xf = x[:, 0].astype(jnp.float32)
+    a = jnp.exp(dt[..., None] * A[None])                # (B,di,n)
+    hnew = a * ssm_state + (dt * xf)[..., None] * Bc[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", hnew, Cc) + p["D"][None] * xf
+    y = (y.astype(u.dtype) * jax.nn.silu(z[:, 0]))[:, None]
+    return u + L.dense(p["out_proj"], y), hnew, conv_state_new
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Dict, token: Array,
+                pos: Array) -> Tuple[Array, Dict]:
+    del pos  # SSMs have no positional state beyond h
+    x = L.embed(params["embed"], token[:, None])
+
+    def body(x, xs):
+        layer_p, s, c = xs
+        y, s2, c2 = block_decode(layer_p, x, cfg, s, c)
+        return y, (s2, c2)
+
+    x, (ns, nc) = jax.lax.scan(body, x, (params["layers"], cache["ssm"],
+                                         cache["conv"]))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x)[:, 0]
+    return shard(logits, "batch", "vocab"), {"ssm": ns, "conv": nc}

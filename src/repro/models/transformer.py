@@ -1,0 +1,148 @@
+"""Dense decoder-only transformer (qwen1.5 / codeqwen / starcoder2 / granite /
+pixtral-backbone), with lax.scan-rolled layers, prefill and decode paths.
+
+The layer stack is a single scanned block (small HLO, fast multi-arch
+compiles); remat is applied per-layer when requested.  The same module serves
+the VLM arch: :func:`lm_forward` accepts pre-built ``inputs_embeds`` so the
+stub vision frontend can splice projected patch embeddings in front of the
+token embeddings (per the brief, frontends are stubs; the backbone is real).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.sharding import shard
+
+Array = jax.Array
+Params = Dict
+
+
+
+def _remat_policy():
+    """nothing_saveable (default) or dots_saveable under §Perf "save_dots"
+    (trades peak activation memory for one fewer full recompute pass)."""
+    from repro import optflags
+    if optflags.enabled("save_dots"):
+        return jax.checkpoint_policies.dots_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+def init_block(key: Array, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model, cfg.dtype),
+        "attn": L.attention_init(k1, cfg),
+        "ln2": L.rmsnorm_init(cfg.d_model, cfg.dtype),
+        "mlp": L.mlp_init(k2, cfg),
+    }
+
+
+def block_fwd(p: Params, x: Array, cfg: ModelConfig, positions: Array,
+              window: Optional[int]) -> Tuple[Array, Dict[str, Array]]:
+    a, kv = L.attention_fwd(p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps),
+                            cfg, positions, window)
+    x = x + a
+    x = x + L.mlp(p["mlp"], L.rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+    # "res_seq" binds to `model` under §Perf "seq_par" (Megatron-style
+    # sequence parallelism): layer-boundary residuals are stored
+    # model-sharded on the sequence dim, shrinking the remat-saved
+    # activations by the TP degree; GSPMD turns the TP all-reduces into the
+    # equivalent reduce-scatter + all-gather pair.
+    x = shard(x, "batch", "res_seq", "embed")
+    return x, kv
+
+
+def block_decode(p: Params, x: Array, cfg: ModelConfig, ck: Array, cv: Array,
+                 write_pos: Array, abs_pos: Array):
+    a, ck, cv = L.attention_decode(p["attn"],
+                                   L.rmsnorm(p["ln1"], x, cfg.norm_eps),
+                                   cfg, ck, cv, write_pos, abs_pos)
+    x = x + a
+    x = x + L.mlp(p["mlp"], L.rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+    return x, ck, cv
+
+
+def init_params(key: Array, cfg: ModelConfig) -> Params:
+    ke, kl, kp = jax.random.split(key, 3)
+    lkeys = jax.random.split(kl, cfg.n_layers)
+    params = {
+        "embed": L.embedding_init(ke, cfg.vocab_size, cfg.d_model, cfg.dtype),
+        "layers": jax.vmap(lambda k: init_block(k, cfg))(lkeys),
+        "final_norm": L.rmsnorm_init(cfg.d_model, cfg.dtype),
+    }
+    if cfg.modality == "vision":
+        params["projector"] = L.dense_init(kp, cfg.frontend_dim, cfg.d_model,
+                                           cfg.dtype)
+    return params
+
+
+def _embed_inputs(params: Params, cfg: ModelConfig, tokens: Array,
+                  frontend_embeds: Optional[Array]) -> Array:
+    x = L.embed(params["embed"], tokens)
+    if frontend_embeds is not None:
+        patches = L.dense(params["projector"],
+                          frontend_embeds.astype(cfg.dtype))
+        x = jnp.concatenate([patches, x], axis=1)
+    return shard(x, "batch", "seq", "embed")
+
+
+def lm_forward(params: Params, cfg: ModelConfig, tokens: Array,
+               frontend_embeds: Optional[Array] = None,
+               remat: bool = True,
+               return_cache: bool = False):
+    """Full-sequence forward. Returns logits (and stacked KV on prefill)."""
+    x = _embed_inputs(params, cfg, tokens, frontend_embeds)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(x, layer_p):
+        y, kv = block_fwd(layer_p, x, cfg, positions, cfg.sliding_window)
+        return y, (kv if return_cache else None)
+
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=_remat_policy())
+    x, kvs = jax.lax.scan(body, x, params["layers"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x)
+    logits = shard(logits, "batch", "seq", "vocab")
+    if return_cache:
+        return logits, kvs
+    return logits
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=None) -> Dict[str, Array]:
+    dtype = dtype or cfg.dtype
+    kvs = max_seq if cfg.sliding_window is None else min(max_seq, cfg.sliding_window)
+    shape = (cfg.n_layers, batch, kvs, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Dict[str, Array],
+                token: Array, pos: Array) -> Tuple[Array, Dict[str, Array]]:
+    """One greedy decode step. token: (B,) int32; pos: scalar int32.
+
+    With a sliding-window config the cache is a rotating buffer of
+    ``window`` slots; writes land at ``pos % window``.
+    """
+    x = L.embed(params["embed"], token[:, None])
+    x = shard(x, "batch", "seq", "embed")
+    T = cache["k"].shape[2]
+    write_pos = pos % T if cfg.sliding_window is not None else pos
+
+    def body(x, xs):
+        layer_p, ck, cv = xs
+        y, ck, cv = block_decode(layer_p, x, cfg, ck, cv, write_pos, pos)
+        return y, (ck, cv)
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x)[:, 0]
+    logits = shard(logits, "batch", "vocab")
+    return logits, {"k": nk, "v": nv}

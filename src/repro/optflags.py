@@ -1,0 +1,26 @@
+"""Beyond-paper optimization flags (EXPERIMENTS.md §Perf).
+
+Read at trace time from ``REPRO_OPT`` (comma-separated), so the dry-run can
+lower baseline and optimized variants of the same code path:
+
+* ``chunked_attn``  — query-chunked attention (no (S,S) score tensor).
+* ``ota_re``        — superpose only the REAL plane of the OTA uplink
+                      (Θ = Re{y}/Σ|h|² never reads Im{y}); halves the OTA
+                      all-reduce bytes and drops the imag elementwise work.
+* ``chunked_scan``  — sequence-chunked gated linear recurrence (mirrors the
+                      Pallas kernel's VMEM-carried structure in pure JAX).
+* ``rs_grads``      — constrain per-worker grads to the parameter sharding
+                      before sketching (reduce-scatter instead of all-reduce
+                      in the sketched-mode worker loop).
+"""
+from __future__ import annotations
+
+import os
+
+#: default chunk sizes (tuned in §Perf iterations)
+ATTN_CHUNK = int(os.environ.get("REPRO_ATTN_CHUNK", "512"))
+SCAN_CHUNK = int(os.environ.get("REPRO_SCAN_CHUNK", "512"))
+
+
+def enabled(name: str) -> bool:
+    return name in os.environ.get("REPRO_OPT", "").split(",")

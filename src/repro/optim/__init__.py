@@ -1,0 +1,3 @@
+from repro.optim.local_solvers import (exact_quadratic_solver,  # noqa: F401
+                                       prox_adam_solver, prox_sgd_solver)
+from repro.optim.optimizers import adam, sgd  # noqa: F401

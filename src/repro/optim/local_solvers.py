@@ -1,0 +1,90 @@
+"""Local primal-step solvers for the ADMM subproblem (Eq. 6 / Eq. 20).
+
+Every solver has the uniform ``LocalSolve`` signature used by
+``core.aggregators``:
+
+    local_solve(theta, lam, h, Theta) -> theta'      # all (W, d) / Complex
+
+and minimises (per worker n, elementwise penalty weights from the channel)
+
+    f_n(θ) + Σ_i Re{λ*_{n,i} h_{n,i}} θ_i + (ρ/2) Σ_i |h_{n,i}|² (θ_i − Θ_i)².
+
+Digital D-FADMM passes h ≡ 1 so the same solvers serve both transports.
+
+* :func:`exact_quadratic_solver` — closed form for f_n(θ)=‖y−Xθ‖² (the
+  paper's linear-regression task); per-worker d×d solve.
+* :func:`prox_sgd_solver` / :func:`prox_adam_solver` — the stochastic
+  variants (paper: 20 local Adam iterations, lr 0.01, batch 100).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cplx
+from repro.core.admm import penalty_grad
+from repro.core.cplx import Complex
+from repro.optim.optimizers import Optimizer
+
+Array = jax.Array
+
+
+def exact_quadratic_solver(X: Array, y: Array, rho: float) -> Callable:
+    """Closed-form primal for f_n(θ) = ‖y_n − X_n θ‖².
+
+    Stationarity: 2XᵀXθ − 2Xᵀy + Re{λ*h} + ρ|h|²(θ−Θ) = 0
+      ⇒ (2XᵀX + ρ diag(|h|²)) θ = 2Xᵀy − Re{λ*h} + ρ|h|²Θ.
+
+    X: (W, m, d), y: (W, m) — per-worker data shards.
+    """
+    XtX2 = 2.0 * jnp.einsum("wmi,wmj->wij", X, X)     # (W, d, d)
+    Xty2 = 2.0 * jnp.einsum("wmi,wm->wi", X, y)       # (W, d)
+
+    def solve(theta: Array, lam: Complex, h: Complex, Theta: Array) -> Array:
+        h2 = cplx.abs2(h)                              # (W, d)
+        mu = cplx.cmul_conj(h, lam).re                 # Re{λ* h}
+        A = XtX2 + rho * jax.vmap(jnp.diag)(h2)        # (W, d, d)
+        b = Xty2 - mu + rho * h2 * Theta[None, :]      # (W, d)
+        return jax.vmap(jnp.linalg.solve)(A, b)
+
+    return solve
+
+
+def _prox_loop(loss_grad_fn, opt: Optimizer, n_steps: int, rho: float,
+               theta0: Array, lam: Complex, h: Complex, Theta: Array,
+               batch_fn: Optional[Callable[[int], tuple]] = None) -> Array:
+    """Run ``n_steps`` of a first-order optimizer on the augmented local loss."""
+
+    def body(carry, step):
+        theta, opt_state = carry
+        if batch_fn is None:
+            g_f = loss_grad_fn(theta)
+        else:
+            g_f = loss_grad_fn(theta, batch_fn(step))
+        g = g_f + penalty_grad(theta, lam, h, Theta, rho)
+        theta, opt_state = opt.update(g, opt_state, theta)
+        return (theta, opt_state), None
+
+    (theta, _), _ = jax.lax.scan(body, (theta0, opt.init(theta0)),
+                                 jnp.arange(n_steps))
+    return theta
+
+
+def prox_sgd_solver(loss_grad_fn: Callable[[Array], Array], opt: Optimizer,
+                    n_steps: int, rho: float) -> Callable:
+    """First-order approximate primal: n_steps of opt on f_n + penalty."""
+    def solve(theta, lam, h, Theta):
+        return _prox_loop(loss_grad_fn, opt, n_steps, rho, theta, lam, h, Theta)
+    return solve
+
+
+def prox_adam_solver(loss_grad_fn, opt: Optimizer, n_steps: int, rho: float,
+                     batch_fn=None) -> Callable:
+    """Paper's stochastic variant: local Adam steps with minibatch draws."""
+    def solve(theta, lam, h, Theta):
+        return _prox_loop(loss_grad_fn, opt, n_steps, rho, theta, lam, h,
+                          Theta, batch_fn=batch_fn)
+    return solve

@@ -1,0 +1,1 @@
+from repro.serve.serving import generate, make_prefill, make_serve_step  # noqa: F401

@@ -1,0 +1,71 @@
+"""Serving layer: prefill + batched greedy decode over the model API.
+
+``make_serve_step`` produces the function the decode-shape dry-runs lower:
+ONE new token for every sequence in the batch against a KV/state cache of
+``max_seq`` — cache donated, so the compiled step updates in place.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+
+Array = jax.Array
+
+
+def make_prefill(model: Model):
+    """prefill(params, batch) -> (last_logits, cache_like_outputs).
+
+    For attention families the prefill KV comes back from the full forward;
+    for state families (ssm/hybrid) prefill is the forward itself (the state
+    would be produced by a scan — served models re-ingest via decode).
+    """
+    cfg = model.cfg
+
+    def prefill(params, batch):
+        logits, _aux = model.forward(params, batch, remat=True)
+        return logits[:, -1]
+
+    return prefill
+
+
+def make_serve_step(model: Model):
+    """serve_step(params, cache, token, pos) -> (next_token, cache)."""
+
+    def serve_step(params, cache, token: Array, pos: Array):
+        logits, cache = model.decode_step(params, cache, token, pos)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return serve_step
+
+
+def generate(model: Model, params, prompt_tokens: Array, n_steps: int,
+             max_seq: Optional[int] = None,
+             extra_batch: Optional[Dict[str, Array]] = None) -> Array:
+    """Greedy generation: teacher-forced prompt ingest + n_steps decode.
+
+    prompt_tokens: (B, S0).  Returns (B, n_steps) generated ids.
+    Prompt ingestion runs through decode_step token-by-token so the same
+    cache layout serves both phases (prefill-via-decode; the batched-matmul
+    prefill path is exercised by the prefill dry-run shape instead).
+    """
+    B, S0 = prompt_tokens.shape
+    max_seq = max_seq or (S0 + n_steps)
+    cache = model.init_cache(B, max_seq)
+    step = jax.jit(make_serve_step(model), donate_argnums=(1,))
+
+    tok = prompt_tokens[:, 0]
+    for i in range(1, S0):  # ingest prompt
+        _, cache = step(params, cache, tok, jnp.int32(i - 1))
+        tok = prompt_tokens[:, i]
+
+    out = []
+    pos = S0 - 1
+    for i in range(n_steps):
+        tok, cache = step(params, cache, tok, jnp.int32(pos + i))
+        out.append(tok)
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,2 @@
+from repro.train.fl_trainer import History, train  # noqa: F401
+from repro.train.llm_trainer import FLConfig, make_fl_train  # noqa: F401

@@ -1,0 +1,295 @@
+"""Federated LLM training: A-FADMM integrated as the aggregation layer.
+
+Two execution modes (DESIGN.md §4):
+
+* ``replicated`` — paper-faithful.  Every FL worker owns a full (θ_n, λ_n)
+  copy; per-worker tensors carry a leading worker dim sharded over the mesh
+  ``data`` axis.  Local prox steps run vmapped over workers; one analog OTA
+  round (superposition = all-reduce over the worker axis) produces the new
+  global model; duals update locally.  Per the paper's Appendix H the
+  stochastic variant skips the time-varying flip rule (primal-only updates).
+
+* ``sketched`` — A-FADMM-CS for archs whose per-worker copies exceed HBM
+  (qwen1.5-110b, deepseek-v3-671b; the paper's §6 "Large Models" extension).
+  One FSDP-sharded global model; workers are time-multiplexed via a
+  ``lax.scan`` (faithful to FL semantics: each worker's local delta is
+  computed from its own shard of data), deltas are hash-count-sketched to
+  ``d/d_sketch_ratio`` coordinates, and the full A-FADMM pipeline (modulate,
+  superpose, power-scale, demodulate, dual update) runs in sketch space.
+
+Both modes expose the same ``(init_fn, train_step)`` pair; ``train_step`` is
+a pure function of ``(state, batch, key)`` suitable for jit / pjit lowering
+on the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cplx
+from repro.core.admm import AdmmConfig
+from repro.core.channel import ChannelConfig, awgn, rayleigh
+from repro.core.cplx import Complex
+from repro.core.sketch import decode_hashed, encode_hashed
+from repro.core.tree_ota import (TreeChannel, TreeFLState, _zmap,
+                                 init_channel_tree, ota_tree_round,
+                                 step_channel_tree, tree_penalty_grad)
+from repro.models.registry import Model
+from repro.models.sharding import shard
+from repro.optim.optimizers import adam, sgd
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class FLConfig:
+    mode: str = "replicated"        # replicated | sketched
+    n_workers: int = 4
+    local_steps: int = 1
+    local_lr: float = 1e-3
+    local_optimizer: str = "sgd"    # sgd | adam (adam = 2 extra per-worker copies)
+    #: sketched mode: d_s = ceil(leaf_size / ratio)
+    sketch_ratio: int = 256
+    #: step size applied to the decoded global sketch delta
+    sketch_lr: float = 1.0
+
+
+def _local_opt(flcfg: FLConfig):
+    if flcfg.local_optimizer == "adam":
+        return adam(flcfg.local_lr)
+    return sgd(flcfg.local_lr)
+
+
+# ---------------------------------------------------------------------------
+# replicated mode
+# ---------------------------------------------------------------------------
+
+def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
+                    ccfg: ChannelConfig):
+    W = flcfg.n_workers
+    opt = _local_opt(flcfg)
+
+    def init_fn(key: Array) -> TreeFLState:
+        kp, kc = jax.random.split(key)
+        pkeys = jax.random.split(kp, W)
+        theta = jax.vmap(model.init)(pkeys)                 # leaves (W, ...)
+        theta = jax.tree.map(lambda l: shard(
+            l, *(["worker"] + [None] * (l.ndim - 1))), theta)
+        lam = jax.tree.map(
+            lambda l: cplx.czero(l.shape, jnp.float32), theta)
+        Theta = jax.tree.map(
+            lambda l: jnp.mean(l.astype(jnp.float32), 0).astype(l.dtype),
+            theta)
+        chan = init_channel_tree(kc, theta)
+        return TreeFLState(theta=theta, lam=lam, Theta=Theta, chan=chan,
+                           opt=opt.init(theta), step=jnp.zeros((), jnp.int32))
+
+    def loss_w(p: PyTree, b: PyTree) -> Array:
+        l, _ = model.loss(p, b)
+        return l
+
+    def train_step(state: TreeFLState, batch: PyTree, key: Array
+                   ) -> Tuple[TreeFLState, dict]:
+        """batch leaves: (W, B_local, ...) — worker-major, sharded w->data."""
+        kc, kn = jax.random.split(key)
+        chan, _changed = step_channel_tree(kc, state.chan, ccfg)
+
+        def local_body(carry, _):
+            theta, opt_state = carry
+            losses, grads = jax.vmap(jax.value_and_grad(loss_w))(theta, batch)
+            pen = tree_penalty_grad(theta, state.lam, chan.h, state.Theta,
+                                    acfg.rho)
+            g = jax.tree.map(lambda a, b_: a + b_.astype(a.dtype), grads, pen)
+            theta, opt_state = opt.update(g, opt_state, theta)
+            return (theta, opt_state), jnp.mean(losses)
+
+        (theta, opt_state), losses = jax.lax.scan(
+            local_body, (state.theta, state.opt), None,
+            length=flcfg.local_steps)
+
+        Theta_f32, lam_new, m = ota_tree_round(theta, state.lam, chan.h, kn,
+                                               acfg, ccfg)
+        Theta_new = _zmap(lambda T, t: T.astype(t.dtype), Theta_f32, state.Theta)
+        new_state = TreeFLState(theta=theta, lam=lam_new, Theta=Theta_new,
+                                chan=chan, opt=opt_state,
+                                step=state.step + 1)
+        metrics = {"loss": losses[-1], **m,
+                   "theta_drift": _tree_rms_gap(theta, Theta_new)}
+        return new_state, metrics
+
+    return init_fn, train_step
+
+
+def _tree_rms_gap(theta_w: PyTree, Theta: PyTree) -> Array:
+    def leaf(t, T):
+        d = t.astype(jnp.float32) - T[None].astype(jnp.float32)
+        return jnp.sum(d * d), d.size
+
+    parts = jax.tree_util.tree_leaves(
+        jax.tree.map(leaf, theta_w, Theta), is_leaf=lambda x: isinstance(x, tuple))
+    num = sum(p[0] for p in parts)
+    den = float(sum(p[1] for p in parts))
+    return jnp.sqrt(num / den)
+
+
+# ---------------------------------------------------------------------------
+# sketched mode (A-FADMM-CS)
+# ---------------------------------------------------------------------------
+
+class SketchFLState(NamedTuple):
+    Theta: PyTree       # shared global params (FSDP-sharded)
+    lam: PyTree         # Complex leaves (W, d_s_leaf) f32
+    chan: TreeChannel   # h: Complex (W, d_s_leaf)
+    step: Array
+
+
+def _leaf_ds(leaf_size: int, ratio: int) -> int:
+    return max(8, -(-leaf_size // ratio))
+
+
+def make_sketched(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
+                  ccfg: ChannelConfig):
+    W = flcfg.n_workers
+    ratio = flcfg.sketch_ratio
+
+    def sketch_shapes(Theta: PyTree) -> PyTree:
+        return jax.tree.map(
+            lambda l: jnp.zeros((W, _leaf_ds(l.size, ratio)), jnp.float32),
+            Theta)
+
+    def init_fn(key: Array) -> SketchFLState:
+        kp, kc = jax.random.split(key)
+        Theta = model.init(kp)
+        proto = sketch_shapes(Theta)
+        lam = jax.tree.map(lambda l: cplx.czero(l.shape, jnp.float32), proto)
+        chan = init_channel_tree(kc, proto)
+        return SketchFLState(Theta=Theta, lam=lam, chan=chan,
+                             step=jnp.zeros((), jnp.int32))
+
+    def loss_fn(p: PyTree, b: PyTree) -> Array:
+        l, _ = model.loss(p, b)
+        return l
+
+    def constrain_grads(g: PyTree) -> PyTree:
+        """§Perf "rs_grads": pin per-worker grads to the parameter sharding
+        so GSPMD reduces them with reduce-scatter (result = one shard) rather
+        than all-reducing replicated full gradients."""
+        from repro.models.sharding import current_mesh
+        from repro.optflags import enabled
+        mesh = current_mesh()
+        if mesh is None or not enabled("rs_grads"):
+            return g
+        from repro.launch.shardings import named, tree_pspecs
+        specs = tree_pspecs(g, cfg=model.cfg, mesh=mesh, worker_dim=False,
+                            fsdp=True, multi_pod="pod" in mesh.axis_names)
+        return jax.lax.with_sharding_constraint(g, named(mesh, specs))
+
+    def worker_delta(Theta: PyTree, batch_w: PyTree) -> Tuple[PyTree, Array]:
+        """H local steps from the shared global model -> (delta, last_loss)."""
+        def body(carry, _):
+            theta = carry
+            l, g = jax.value_and_grad(loss_fn)(theta, batch_w)
+            g = constrain_grads(g)
+            theta = jax.tree.map(
+                lambda p, gg: p - flcfg.local_lr * gg.astype(p.dtype), theta, g)
+            return theta, l
+
+        theta, losses = jax.lax.scan(body, Theta, None,
+                                     length=flcfg.local_steps)
+        delta = jax.tree.map(
+            lambda a, b_: (a - b_).astype(jnp.float32), theta, Theta)
+        return delta, losses[-1]
+
+    def encode_tree(delta: PyTree) -> PyTree:
+        leaves, treedef = jax.tree_util.tree_flatten(delta)
+        return jax.tree_util.tree_unflatten(
+            treedef, [encode_hashed(l, _leaf_ds(l.size, ratio), seed=17 + i)
+                      for i, l in enumerate(leaves)])
+
+    def decode_tree(sk: PyTree, like: PyTree) -> PyTree:
+        leaves_s, _ = jax.tree_util.tree_flatten(sk)
+        leaves_l, treedef = jax.tree_util.tree_flatten(like)
+        out = [decode_hashed(s, l.shape, seed=17 + i)
+               for i, (s, l) in enumerate(zip(leaves_s, leaves_l))]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def train_step(state: SketchFLState, batch: PyTree, key: Array
+                   ) -> Tuple[SketchFLState, dict]:
+        """batch leaves: (W, B_w, ...) — workers time-multiplexed via scan."""
+        kc, kn = jax.random.split(key)
+        chan, _ = step_channel_tree(kc, state.chan, ccfg)
+        rho = acfg.rho
+
+        def per_worker(carry, xs):
+            batch_w, h_w, lam_w = xs     # h_w/lam_w: Complex (d_s,) per leaf
+            delta, l = worker_delta(state.Theta, batch_w)
+            s_tilde = encode_tree(delta)                    # (d_s,) per leaf
+            # modulate: h*·θ̃ + λ*/ρ ; superpose: y += h ⊙ s
+            def leaf_tx(st, hh, lm):
+                sig = Complex(hh.re * st + lm.re / rho,
+                              -hh.im * st - lm.im / rho)
+                rx = cplx.cmul(hh, sig)
+                return rx, jnp.sum(cplx.abs2(sig))
+            tx = _zmap(leaf_tx, s_tilde, h_w, lam_w)
+            rx = jax.tree.map(lambda t: t[0], tx,
+                              is_leaf=lambda x: isinstance(x, tuple))
+            energy = sum(t[1] for t in jax.tree_util.tree_leaves(
+                tx, is_leaf=lambda x: isinstance(x, tuple)))
+            return carry, (rx, energy, s_tilde, l)
+
+        h_stacked = chan.h               # Complex leaves (W, d_s)
+        lam_stacked = state.lam
+        _, (rx_w, energy_w, s_w, losses) = jax.lax.scan(
+            per_worker, None, (batch, h_stacked, lam_stacked))
+
+        # aggregate over workers (the single analog channel use)
+        y = _zmap(lambda r: cplx.csum(r, axis=0), rx_w)
+        sumh2 = _zmap(lambda hh: jnp.sum(cplx.abs2(hh), axis=0), h_stacked)
+        d_total = sum(l.shape[-1] for l in jax.tree_util.tree_leaves(
+            sumh2))
+        budget = ccfg.transmit_power * d_total
+        alpha = jnp.min(jnp.sqrt(budget / jnp.maximum(energy_w, 1e-30)))
+        inv_alpha = 1.0 / alpha
+
+        from repro.core.tree_ota import _leaf_keys
+        keys = iter(_leaf_keys(kn, y))
+
+        def leaf_demod(yy: Complex, p2: Array) -> Array:
+            re = yy.re
+            if ccfg.noisy:
+                z = awgn(next(keys), re.shape, ccfg.noise_var_matched)
+                re = re + z.re * inv_alpha
+            return re / jnp.maximum(p2, 1e-12)
+
+        Theta_s = _zmap(leaf_demod, y, sumh2)               # global sketch
+
+        def leaf_dual(lm: Complex, hh: Complex, sw: Array, Ts: Array) -> Complex:
+            r = sw - Ts[None]
+            return Complex(lm.re + rho * hh.re * r, lm.im + rho * hh.im * r)
+
+        lam_new = _zmap(leaf_dual, lam_stacked, h_stacked, s_w, Theta_s)
+
+        g_delta = decode_tree(Theta_s, state.Theta)
+        Theta_new = jax.tree.map(
+            lambda p, dg: p + flcfg.sketch_lr * dg.astype(p.dtype),
+            state.Theta, g_delta)
+
+        new_state = SketchFLState(Theta=Theta_new, lam=lam_new, chan=chan,
+                                  step=state.step + 1)
+        metrics = {"loss": jnp.mean(losses), "inv_alpha": inv_alpha}
+        return new_state, metrics
+
+    return init_fn, train_step
+
+
+def make_fl_train(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
+                  ccfg: ChannelConfig):
+    if flcfg.mode == "replicated":
+        return make_replicated(model, flcfg, acfg, ccfg)
+    if flcfg.mode == "sketched":
+        return make_sketched(model, flcfg, acfg, ccfg)
+    raise ValueError(f"unknown FL mode {flcfg.mode!r}")

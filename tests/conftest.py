@@ -1,0 +1,9 @@
+import os
+
+# Keep tests on the single real CPU device (the 512-device override is
+# strictly for launch/dryrun.py, which sets it before its own jax import).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_default_matmul_precision", "highest")

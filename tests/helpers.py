@@ -1,0 +1,46 @@
+"""Shared test fixtures: a small federated linear-regression problem."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import AdmmConfig, ChannelConfig, SubcarrierPlan
+from repro.optim import exact_quadratic_solver
+
+
+def make_linreg(key, W=8, d=6, m=64, noise=0.01):
+    kx, ky, kt, ki = jax.random.split(key, 4)
+    X = jax.random.normal(kx, (W, m, d)) / jnp.sqrt(m)
+    theta_true = jax.random.normal(kt, (d,))
+    y = jnp.einsum("wmd,d->wm", X, theta_true) \
+        + noise * jax.random.normal(ky, (W, m)) / jnp.sqrt(m)
+    Xf, yf = X.reshape(-1, d), y.reshape(-1)
+    theta_star = jnp.linalg.solve(Xf.T @ Xf + 1e-8 * jnp.eye(d), Xf.T @ yf)
+
+    def f_total(th):
+        r = yf - Xf @ th
+        return jnp.sum(r * r)
+
+    def grad_fn(theta):  # (W,d) -> (W,d), per-worker grad of ||y - X th||^2
+        r = jnp.einsum("wmd,wd->wm", X, theta) - y
+        return 2.0 * jnp.einsum("wmd,wm->wd", X, r)
+
+    theta0 = jax.random.normal(ki, (W, d))
+    return dict(X=X, y=y, theta_star=theta_star, f_total=f_total,
+                grad_fn=grad_fn, theta0=theta0, W=W, d=d)
+
+
+def default_cfgs(W, d, *, snr_db=40.0, noisy=False, coherence=10,
+                 n_sub=None, rho=0.5, power_control=False,
+                 flip=True):
+    acfg = AdmmConfig(rho=rho, flip_on_change=flip,
+                      power_control=power_control)
+    ccfg = ChannelConfig(n_workers=W, n_subcarriers=n_sub or d,
+                         coherence_iters=coherence, snr_db=snr_db,
+                         noisy=noisy)
+    plan = SubcarrierPlan.build(d, ccfg.n_subcarriers)
+    return acfg, ccfg, plan
+
+
+def make_solver(prob, rho):
+    return exact_quadratic_solver(prob["X"], prob["y"], rho)

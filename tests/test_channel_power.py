@@ -1,0 +1,62 @@
+"""Channel model statistics and the min-α power-control protocol."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import cplx
+from repro.core.channel import (ChannelConfig, awgn, init_channel, rayleigh,
+                                shannon_rate, step_channel)
+from repro.core.power import min_alpha, per_worker_alpha, tx_energy
+
+
+def test_rayleigh_unit_variance():
+    h = rayleigh(jax.random.PRNGKey(0), (2000, 16))
+    var = float(jnp.mean(cplx.abs2(h)))
+    assert abs(var - 1.0) < 0.05
+    assert abs(float(jnp.mean(h.re))) < 0.05
+
+
+def test_coherence_block_redraw():
+    cfg = ChannelConfig(n_workers=2, n_subcarriers=8, coherence_iters=3)
+    blk = init_channel(jax.random.PRNGKey(0), cfg)
+    changes = []
+    for i in range(9):
+        new = step_channel(jax.random.fold_in(jax.random.PRNGKey(1), i),
+                           blk, cfg)
+        changes.append(bool(jnp.any(new.changed)))
+        blk = new
+    # redraw every 3rd iteration exactly
+    assert changes == [False, False, True] * 3
+
+
+def test_matched_filter_noise_variance():
+    cfg = ChannelConfig(n_workers=1, slot_seconds=1e-3, noise_psd=1e-9)
+    z = awgn(jax.random.PRNGKey(0), (200_000,), cfg.noise_var_matched)
+    var = float(jnp.mean(cplx.abs2(z)))
+    assert abs(var - 1e-6) < 1e-7  # N0/T = 1e-9/1e-3
+
+
+def test_shannon_rate_monotone_in_gain():
+    cfg = ChannelConfig(n_workers=1, snr_db=10.0)
+    h_small = cplx.Complex(jnp.array([[0.1]]), jnp.array([[0.0]]))
+    h_big = cplx.Complex(jnp.array([[2.0]]), jnp.array([[0.0]]))
+    assert float(shannon_rate(h_big, cfg)[0, 0]) \
+        > float(shannon_rate(h_small, cfg)[0, 0])
+
+
+def test_power_budget_enforced():
+    key = jax.random.PRNGKey(0)
+    W, d, P = 5, 64, 0.25
+    s = cplx.Complex(jax.random.normal(key, (W, d)) * 3.0,
+                     jax.random.normal(jax.random.fold_in(key, 1), (W, d)))
+    alpha = min_alpha(s, P)
+    energy = tx_energy(s, alpha)
+    assert float(jnp.max(energy)) <= P * 1.0001
+    # the binding worker transmits at exactly the budget
+    assert float(jnp.max(energy)) >= P * 0.99
+
+
+def test_min_alpha_is_min_of_per_worker():
+    key = jax.random.PRNGKey(1)
+    s = cplx.Complex(jax.random.normal(key, (4, 32)),
+                     jax.random.normal(jax.random.fold_in(key, 2), (4, 32)))
+    assert float(min_alpha(s, 1.0)) == float(jnp.min(per_worker_alpha(s, 1.0)))

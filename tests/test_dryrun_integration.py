@@ -1,0 +1,35 @@
+"""Integration: the dry-run pipeline end-to-end (reduced configs, subprocess
+because the 512-device XLA flag must be set before jax initialises)."""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("arch,shape", [("recurrentgemma-2b", "train_4k"),
+                                        ("falcon-mamba-7b", "long_500k")])
+def test_dryrun_reduced(arch, shape):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("JAX_PLATFORMS", None)
+    with tempfile.TemporaryDirectory() as tmp:
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+             "--shape", shape, "--reduced", "--out", tmp],
+            env=env, capture_output=True, text=True, timeout=560,
+            cwd=REPO)
+        assert "[ ok ]" in proc.stdout, proc.stdout + proc.stderr
+        path = os.path.join(tmp, f"{arch}_{shape}_16x16.json")
+        assert os.path.exists(path)
+        r = json.load(open(path))
+        rf = r["roofline"]
+        for key in ("compute_s", "memory_s", "collective_s", "dominant"):
+            assert key in rf
+        assert rf["compute_s"] >= 0 and rf["memory_s"] > 0
+        assert r["collectives"]["bytes_per_device"] >= 0
+        assert r["hlo_loop_corrected"]["flops"] > 0

@@ -1,0 +1,106 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _r(shape, i, dtype=jnp.float32):
+    return jax.random.normal(jax.random.fold_in(KEY, i), shape, dtype)
+
+
+@pytest.mark.parametrize("n", [5, 1000, 1024, 4096 + 7, 200_000])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ota_modulate(n, dtype):
+    theta = _r((n,), 1, dtype)
+    lre, lim, hre, him = (_r((n,), i) for i in range(2, 6))
+    got = ops.ota_modulate(theta, lre, lim, hre, him, 0.5)
+    want = ref.ota_modulate(theta, lre, lim, hre, him, 0.5)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(got[0], want[0], rtol=tol, atol=tol)
+    np.testing.assert_allclose(got[1], want[1], rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("n", [17, 2048, 70_001])
+def test_ota_demodulate(n):
+    y, nz = _r((n,), 1), _r((n,), 2)
+    p2 = jnp.abs(_r((n,), 3)) + 0.05
+    got = ops.ota_demodulate(y, nz, p2, 1.7)
+    want = ref.ota_demodulate(y, nz, p2, 1.7)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [33, 5000, 123_456])
+def test_admm_dual_update(n):
+    args = [_r((n,), i) for i in range(7)]
+    got = ops.admm_dual_update(*args[:6], 0.5, args[6])
+    want = ref.admm_dual_update(*args[:6], 0.5, args[6])
+    np.testing.assert_allclose(got[0], want[0], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(got[1], want[1], rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [33, 5000])
+def test_admm_flip_lambda(n):
+    g, th, Th, hre, him = (_r((n,), i) for i in range(5))
+    got = ops.admm_flip_lambda(g, th, Th, hre, him, 0.5)
+    want = ref.admm_flip_lambda(g, th, Th, hre, him, 0.5)
+    np.testing.assert_allclose(got[0], want[0], rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(got[1], want[1], rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(1, 8, 8), (2, 37, 19), (1, 256, 128),
+                                   (2, 300, 65), (3, 128, 256)])
+@pytest.mark.parametrize("blocks", [(64, 64), (128, 128)])
+def test_linear_scan(shape, blocks):
+    B, S, D = shape
+    a = jax.nn.sigmoid(_r(shape, 1))
+    b = _r(shape, 2)
+    got = ops.linear_scan(a, b, block_s=blocks[0], block_d=blocks[1])
+    want = ref.linear_scan(a, b)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("shape", [(1, 2, 64, 64, 32), (2, 1, 100, 100, 32),
+                                   (1, 2, 257, 257, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(shape, causal):
+    B, H, S, T, hd = shape
+    if not causal and S % 32:
+        pytest.skip("non-causal requires aligned T")
+    q = _r((B, H, S, hd), 50)
+    k = _r((B, H, T, hd), 51)
+    v = _r((B, H, T, hd), 52)
+    got = ops.flash_attention(q, k, v, causal=causal, block_q=32, block_k=32)
+    want = ref.attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    q = _r((1, 2, 96, 32), 53, jnp.bfloat16)
+    k = _r((1, 2, 96, 32), 54, jnp.bfloat16)
+    v = _r((1, 2, 96, 32), 55, jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, block_q=32, block_k=32)
+    want = ref.attention(q, k, v)
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32), rtol=5e-2, atol=5e-2)
+
+
+def test_linear_scan_matches_sequential():
+    """Oracle-of-the-oracle: associative scan == plain loop recurrence."""
+    B, S, D = 1, 23, 7
+    a = jax.nn.sigmoid(_r((B, S, D), 5))
+    b = _r((B, S, D), 6)
+    h = np.zeros((B, D), np.float32)
+    seq = []
+    for t in range(S):
+        h = np.asarray(a[:, t]) * h + np.asarray(b[:, t])
+        seq.append(h.copy())
+    want = np.stack(seq, axis=1)
+    np.testing.assert_allclose(ref.linear_scan(a, b), want, rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(ops.linear_scan(a, b, block_s=8, block_d=8),
+                               want, rtol=1e-4, atol=1e-5)

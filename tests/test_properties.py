@@ -1,0 +1,100 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cplx
+from repro.core.admm import demodulate, modulate, superpose
+from repro.core.channel import rayleigh
+from repro.core.power import min_alpha, per_worker_alpha, tx_energy
+from repro.core.sketch import decode_hashed, encode_hashed
+from repro.core.subcarrier import SubcarrierPlan, flatten
+
+SET = dict(max_examples=15, deadline=None)
+
+
+@given(W=st.integers(1, 8), d=st.integers(1, 40), seed=st.integers(0, 2**16))
+@settings(**SET)
+def test_ota_pipeline_identity_under_ideal_channel(W, d, seed):
+    """h ≡ 1, λ ≡ 0, no noise  ⇒  OTA aggregation == exact mean
+    (the paper's protocol degenerates to FedAvg on an ideal channel)."""
+    theta = jax.random.normal(jax.random.PRNGKey(seed), (W, d))
+    ones = cplx.Complex(jnp.ones((W, d)), jnp.zeros((W, d)))
+    lam = cplx.czero((W, d))
+    s = modulate(theta, lam, ones, rho=0.5)
+    y, sumh2 = superpose(s, ones)
+    Theta = demodulate(y, sumh2, cplx.czero((d,)))
+    np.testing.assert_allclose(Theta, jnp.mean(theta, 0), rtol=1e-5,
+                               atol=1e-6)
+
+
+@given(W=st.integers(1, 6), d=st.integers(2, 64), seed=st.integers(0, 2**16),
+       p=st.floats(0.01, 10.0))
+@settings(**SET)
+def test_power_never_exceeds_budget(W, d, seed, p):
+    k = jax.random.PRNGKey(seed)
+    s = cplx.Complex(jax.random.normal(k, (W, d)) * 5.0,
+                     jax.random.normal(jax.random.fold_in(k, 1), (W, d)) * 5.0)
+    alpha = min_alpha(s, p)
+    assert float(jnp.max(tx_energy(s, alpha))) <= p * (1 + 1e-4)
+    assert float(alpha) <= float(jnp.min(per_worker_alpha(s, p))) * (1 + 1e-6)
+
+
+@given(seed=st.integers(0, 2**16), d=st.integers(1, 300),
+       n_sub=st.integers(1, 64))
+@settings(**SET)
+def test_subcarrier_plan_invariants(seed, d, n_sub):
+    plan = SubcarrierPlan.build(d, n_sub)
+    assert plan.d_padded >= d
+    assert plan.d_padded % n_sub == 0
+    assert plan.n_slots == -(-d // n_sub)
+    idx = plan.subcarrier_index()
+    assert int(idx.max()) < n_sub
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(**SET)
+def test_flatten_roundtrip(seed):
+    k = jax.random.PRNGKey(seed)
+    tree = {"a": jax.random.normal(k, (3, 4)),
+            "b": [jax.random.normal(jax.random.fold_in(k, 1), (7,)),
+                  {"c": jax.random.normal(jax.random.fold_in(k, 2), (2, 2, 2))}]}
+    flat, unflatten = flatten(tree)
+    back = unflatten(flat)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_allclose(x, y, rtol=1e-6)
+
+
+@given(seed=st.integers(0, 2**16), d=st.integers(4, 256),
+       ratio=st.integers(1, 8))
+@settings(**SET)
+def test_sketch_linearity_and_scale(seed, d, ratio):
+    """Count sketch: linear, and decode∘encode preserves the inner product
+    direction (positive correlation with the input)."""
+    k = jax.random.PRNGKey(seed)
+    v = jax.random.normal(k, (d,))
+    d_s = max(4, d // ratio)
+    s1 = encode_hashed(v, d_s, seed=5)
+    s2 = encode_hashed(3.0 * v, d_s, seed=5)
+    np.testing.assert_allclose(3.0 * s1, s2, rtol=1e-4, atol=1e-4)
+    vh = decode_hashed(s1, v.shape, seed=5)
+    assert float(jnp.vdot(v, vh)) > 0.0
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_superposition_linearity(seed):
+    """The air is linear: superpose(s+t) == superpose(s) + superpose(t)."""
+    k = jax.random.PRNGKey(seed)
+    W, d = 4, 16
+    h = rayleigh(jax.random.fold_in(k, 0), (W, d))
+    s = cplx.Complex(jax.random.normal(jax.random.fold_in(k, 1), (W, d)),
+                     jax.random.normal(jax.random.fold_in(k, 2), (W, d)))
+    t = cplx.Complex(jax.random.normal(jax.random.fold_in(k, 3), (W, d)),
+                     jax.random.normal(jax.random.fold_in(k, 4), (W, d)))
+    y1, _ = superpose(s, h)
+    y2, _ = superpose(t, h)
+    y12, _ = superpose(s + t, h)
+    np.testing.assert_allclose(y12.re, (y1 + y2).re, rtol=2e-4, atol=1e-5)
+    np.testing.assert_allclose(y12.im, (y1 + y2).im, rtol=2e-4, atol=1e-5)
