@@ -18,7 +18,7 @@ from repro.data.synthetic import image_dataset
 from repro.models.mlp import init_mlp_flat, make_loss_fns
 from repro.optim import adam
 from repro.optim.local_solvers import prox_adam_solver
-from repro.train import train
+from benchmarks.common import run_train as train  # scan/loop via env knob
 
 KEY = jax.random.PRNGKey(7)
 

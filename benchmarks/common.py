@@ -10,6 +10,7 @@ ratio, coherence).
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Callable, Dict, List, Optional
 
@@ -26,6 +27,14 @@ from repro.train import History, train
 
 FAST = True
 
+#: OTA transport backend for the A-FADMM runs: "jnp" | "pallas" | unset
+#: (unset defers to REPRO_USE_PALLAS, i.e. the same switch the model
+#: kernels use).  The figure benchmarks exercise whichever path is selected.
+OTA_BACKEND = os.environ.get("REPRO_OTA_BACKEND") or None
+#: round driver for every ``train`` call: "scan" (compiled coherence
+#: blocks, the default) or "loop" (reference, one dispatch per round).
+TRAIN_DRIVER = os.environ.get("REPRO_TRAIN_DRIVER", "scan")
+
 LINREG_WORKERS = 10 if FAST else 100
 LINREG_ROUNDS = 300
 MLP_WORKERS = 10 if FAST else 100
@@ -33,6 +42,15 @@ MLP_SIZES = (64, 32, 16, 10) if FAST else (784, 128, 64, 10)
 MLP_IMG_DIM = MLP_SIZES[0]
 MLP_SUBCARRIERS = 512 if FAST else 4096
 MLP_ROUNDS = 25 if FAST else 200
+
+
+def _with_ota_backend(name: str, extra: Optional[dict]) -> dict:
+    """Algorithm kwargs with the OTA_BACKEND knob applied (afadmm only —
+    the other algorithms don't take a transport backend)."""
+    kw = dict(extra or {})
+    if name == "afadmm" and OTA_BACKEND and "backend" not in kw:
+        kw["backend"] = OTA_BACKEND
+    return kw
 
 
 @dataclasses.dataclass
@@ -81,7 +99,7 @@ def linreg_algorithm(name: str, task: LinregTask, *, snr_db=40.0,
     ccfg = ChannelConfig(n_workers=W, n_subcarriers=n_sub, snr_db=snr_db,
                          noisy=noisy)
     plan = SubcarrierPlan.build(task.d, n_sub)
-    alg = make(name, acfg, ccfg, plan, **(extra or {}))
+    alg = make(name, acfg, ccfg, plan, **_with_ota_backend(name, extra))
     solver = exact_quadratic_solver(task.X, task.y, rho)
     return alg, solver
 
@@ -139,7 +157,14 @@ def mlp_algorithm(name: str, task: MlpTask, *, snr_db=40.0, noisy=True,
     ccfg = ChannelConfig(n_workers=W, n_subcarriers=n_sub, snr_db=snr_db,
                          noisy=noisy)
     plan = SubcarrierPlan.build(task.d, n_sub)
-    return make(name, acfg, ccfg, plan, **(extra or {}))
+    return make(name, acfg, ccfg, plan, **_with_ota_backend(name, extra))
+
+
+def run_train(alg, theta0, solver, grad_fn, rounds, key, **kw) -> History:
+    """``repro.train.train`` with the benchmark-wide driver knob applied
+    (REPRO_TRAIN_DRIVER=loop reproduces the pre-scan dispatch behaviour)."""
+    kw.setdefault("driver", TRAIN_DRIVER)
+    return train(alg, theta0, solver, grad_fn, rounds, key, **kw)
 
 
 def timed(fn: Callable) -> Dict:

@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 
 from benchmarks.common import (MLP_ROUNDS, make_mlp_task, mlp_algorithm)
-from repro.train import train
+from benchmarks.common import run_train as train  # scan/loop via env knob
 
 KEY = jax.random.PRNGKey(1)
 

@@ -5,7 +5,7 @@ import jax
 
 from benchmarks.common import (LINREG_ROUNDS, linreg_algorithm,
                                make_linreg_task)
-from repro.train import train
+from benchmarks.common import run_train as train  # scan/loop via env knob
 
 KEY = jax.random.PRNGKey(2)
 

@@ -1,12 +1,20 @@
-"""Microbenchmark: Pallas kernels (interpret mode) vs jnp reference.
+"""Microbenchmark: Pallas kernels (interpret mode) vs jnp reference, plus
+the transport-layer benchmarks (fused OTA uplink, loop-vs-scan trainer).
 
 On CPU this measures the *reference* path's wall time (the kernels execute
 interpreted, so wall time is not meaningful for them); the derived numbers
 report correctness deltas + the per-element HBM-traffic model that motivates
-the fusion (DESIGN.md §6).
+the fusion (DESIGN.md §6).  The loop-vs-scan trainer numbers ARE meaningful
+on CPU: they measure the Python-dispatch + host-sync overhead the scan
+driver removes, which is backend-independent.
+
+    PYTHONPATH=src python -m benchmarks.kernels_microbench \
+        --out BENCH_transport.json
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -16,6 +24,15 @@ import numpy as np
 from repro.kernels import ops, ref
 
 N = 1 << 20
+
+
+def _time(fn, iters: int = 10) -> float:
+    """Wall time per call in µs (post-warmup)."""
+    fn()
+    t0 = time.time()
+    for _ in range(iters):
+        fn()
+    return (time.time() - t0) / iters * 1e6
 
 
 def microbench():
@@ -28,11 +45,7 @@ def microbench():
     mod_err = float(jnp.max(jnp.abs(got[0] - want[0])))
 
     ref_j = jax.jit(lambda *a: ref.ota_modulate(*a, 0.5))
-    ref_j(*args)[0].block_until_ready()
-    t0 = time.time()
-    for _ in range(10):
-        ref_j(*args)[0].block_until_ready()
-    ref_us = (time.time() - t0) / 10 * 1e6
+    ref_us = _time(lambda: ref_j(*args)[0].block_until_ready())
 
     # HBM-traffic model (bytes/element): naive = 5 reads + 2 writes per plane
     # with ~3 intermediate materialisations; fused = 5 reads + 2 writes.
@@ -46,3 +59,147 @@ def microbench():
         "traffic_bytes_per_elem_fused": fused_traffic,
         "predicted_fusion_speedup": naive_traffic / fused_traffic,
     }
+
+
+# ---------------------------------------------------------------------------
+# transport layer: fused uplink + loop-vs-scan round driver
+# ---------------------------------------------------------------------------
+
+def _uplink_case(W: int, d: int, label: str) -> dict:
+    """Fused-OTA round time, jnp vs pallas backend, at one model scale."""
+    from repro.core import cplx, transport
+    from repro.core.channel import ChannelConfig, rayleigh
+
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    theta = jax.random.normal(k1, (W, d))
+    lam = cplx.Complex(0.3 * jax.random.normal(k2, (W, d)),
+                       0.3 * jax.random.normal(k3, (W, d)))
+    h = rayleigh(k4, (W, d))
+    ccfg = ChannelConfig(n_workers=W, noisy=True)
+
+    def up(backend):
+        return jax.jit(lambda t, l, hh, kk: transport.ota_uplink(
+            t, l, hh, kk, 0.5, ccfg, backend=backend)[0])
+
+    out = {"label": label, "W": W, "d": d}
+    ref_theta = None
+    for backend in ("jnp", "pallas"):
+        f = up(backend)
+        theta_out = f(theta, lam, h, key)
+        if ref_theta is None:
+            ref_theta = theta_out
+        else:
+            out["max_abs_err_vs_jnp"] = float(
+                jnp.max(jnp.abs(theta_out - ref_theta)))
+        out[f"{backend}_us_per_round"] = _time(
+            lambda f=f: f(theta, lam, h, key).block_until_ready())
+    # elementwise HLO count the fusion collapses (modulate, scale, mul, sum,
+    # noise-add, div, eps-max -> one kernel): traffic model as above.
+    out["hbm_passes_unfused"] = 5
+    out["hbm_passes_fused"] = 1
+    return out
+
+
+def _trainer_case(n_rounds: int, eval_every: int) -> dict:
+    """Python-loop vs scan-compiled driver on the paper's linreg task.
+
+    Two numbers per driver:
+
+    * ``*_seconds_end_to_end`` — one cold ``train`` call (includes trace +
+      compile: what a one-shot figure run actually pays).
+    * ``compiled_dispatch`` — the already-compiled round/chunk functions
+      dispatched back-to-back with no Python re-tracing and no host pulls:
+      isolates the per-round dispatch overhead the scan driver removes
+      (n dispatches vs n/coherence).
+    """
+    from benchmarks.common import (LINREG_WORKERS, linreg_algorithm,
+                                   make_linreg_task)
+    from repro.train import train
+
+    key = jax.random.PRNGKey(0)
+    task = make_linreg_task(key)
+    alg, solver = linreg_algorithm("afadmm", task)
+    block = alg.ccfg.coherence_iters
+
+    out = {"n_rounds": n_rounds, "workers": LINREG_WORKERS,
+           "coherence_iters": block}
+    hist = {}
+    for driver in ("loop", "scan"):
+        t0 = time.time()
+        hist[driver] = train(alg, task.theta0, solver, task.grad_fn,
+                             n_rounds, jax.random.PRNGKey(1),
+                             eval_fn=task.eval_fn, eval_every=eval_every,
+                             driver=driver)
+        out[f"{driver}_seconds_end_to_end"] = time.time() - t0
+    out["speedup_scan_over_loop_end_to_end"] = \
+        out["loop_seconds_end_to_end"] / out["scan_seconds_end_to_end"]
+
+    st = alg.init(jax.random.PRNGKey(1), task.theta0)
+    round_j = jax.jit(lambda s, k: alg.round(k, s, solver, task.grad_fn))
+    chunk_j = jax.jit(lambda s, rs: alg.scan_rounds(
+        jax.random.PRNGKey(1), s, solver, task.grad_fn, rs))
+    rs = jnp.arange(block, dtype=jnp.int32)
+    jax.block_until_ready(round_j(st, key))           # compile
+    jax.block_until_ready(chunk_j(st, rs))
+
+    # both branches execute exactly n_eff rounds so the speedup compares
+    # equal work even when the coherence block doesn't divide n_rounds
+    n_chunks = n_rounds // block
+    n_eff = n_chunks * block
+    t0 = time.time()
+    s = st
+    for r in range(n_eff):
+        s, _ = round_j(s, jax.random.fold_in(key, r))
+    jax.block_until_ready(s)
+    t_loop = time.time() - t0
+    t0 = time.time()
+    s = st
+    for c in range(n_chunks):
+        s, _ = chunk_j(s, rs + c * block)
+    jax.block_until_ready(s)
+    t_scan = time.time() - t0
+    out["compiled_dispatch"] = {
+        "n_rounds_timed": n_eff,
+        "loop_n_dispatches": n_eff, "loop_seconds": t_loop,
+        "scan_n_dispatches": n_chunks, "scan_seconds": t_scan,
+        "speedup_scan_over_loop": t_loop / t_scan,
+    }
+
+    out["history_bitwise_equal"] = bool(
+        hist["loop"].loss == hist["scan"].loss
+        and hist["loop"].channel_uses == hist["scan"].channel_uses)
+    return out
+
+
+def transport_microbench():
+    from benchmarks.common import MLP_WORKERS, make_mlp_task
+
+    d_mlp = int(make_mlp_task(jax.random.PRNGKey(0)).d)
+    return {
+        "uplink_linreg": _uplink_case(10, 6, "linreg (paper Sec. 5)"),
+        "uplink_mlp": _uplink_case(MLP_WORKERS, d_mlp, "MLP (FAST scale)"),
+        # eval_every=1 is the figure benchmarks' cadence (one eval host
+        # sync per round in the loop driver — the worst case scan removes).
+        # One trainer case only: a second one in the same process would
+        # have its end-to-end timing skewed by XLA executable-cache hits
+        # from the first.
+        "trainer_linreg_300r": _trainer_case(300, eval_every=1),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help="write transport benchmark JSON to this path")
+    args = ap.parse_args()
+    derived = {"kernels": microbench(), "transport": transport_microbench()}
+    text = json.dumps(derived, indent=2, default=str)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+
+
+if __name__ == "__main__":
+    main()

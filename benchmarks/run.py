@@ -29,6 +29,7 @@ def _benchmarks():
         "fig3c_scalability": fig3_classification.fig3c_scalability,
         "fig5_rho_sensitivity": fig5_rho.fig5_rho_sensitivity,
         "kernels_microbench": kernels_microbench.microbench,
+        "transport_microbench": kernels_microbench.transport_microbench,
         "roofline_summary": roofline.roofline_summary,
     }
 

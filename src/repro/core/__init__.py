@@ -8,3 +8,4 @@ from repro.core.channel import (ChannelBlock, ChannelConfig, awgn,  # noqa: F401
 from repro.core.cplx import Complex  # noqa: F401
 from repro.core.sketch import SketchPlan, decode, encode  # noqa: F401
 from repro.core.subcarrier import SubcarrierPlan, flatten  # noqa: F401
+from repro.core.transport import ota_uplink, resolve_backend  # noqa: F401

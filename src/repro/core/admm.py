@@ -30,6 +30,11 @@ import jax.numpy as jnp
 from repro.core import cplx
 from repro.core.channel import ChannelBlock, ChannelConfig, matched_filter_noise
 from repro.core.cplx import Complex
+# The signal math lives in the unified transport layer (backend-dispatched
+# jnp/pallas); re-exported here so ``core.admm`` stays the paper-equation API.
+from repro.core.transport import (demodulate, dual_update,  # noqa: F401
+                                  flip_lambda, modulate, ota_uplink,
+                                  penalty_grad, superpose)
 
 Array = jax.Array
 ReduceFn = Callable[[Array], Array]
@@ -69,73 +74,6 @@ def init_state(key: Array, theta0: Array, blk: ChannelBlock) -> AFadmmState:
     )
 
 
-# ---------------------------------------------------------------------------
-# Signal-level primitives (the over-the-air pipeline)
-# ---------------------------------------------------------------------------
-
-def modulate(theta: Array, lam: Complex, h: Complex, rho: float) -> Complex:
-    """Worker TX signal s = h*·θ + λ*/ρ  (Alg. 1 line 14)."""
-    hc = cplx.conj(h)
-    lc = cplx.conj(lam)
-    return Complex(hc.re * theta + lc.re / rho, hc.im * theta + lc.im / rho)
-
-
-def superpose(signals: Complex, h: Complex,
-              reduce_fn: Optional[ReduceFn] = None) -> Tuple[Complex, Array]:
-    """The air: y = Σ_n h_n ⊙ s_n ; also the pilot aggregate Σ_n |h_n|².
-
-    ``signals``/``h``: (W, d).  Returns ((d,) Complex, (d,) Array) under the
-    default reducer; under shard_map the caller passes a psum reducer and the
-    local W slice is partial.
-    """
-    rx = cplx.cmul(h, signals)  # (W, d)
-    sumh2 = cplx.abs2(h)
-    if reduce_fn is None:
-        reduce_fn = lambda x: jnp.sum(x, axis=0)
-    return Complex(reduce_fn(rx.re), reduce_fn(rx.im)), reduce_fn(sumh2)
-
-
-def demodulate(y: Complex, sumh2: Array, noise: Complex,
-               inv_alpha: Array | float = 1.0) -> Array:
-    """PS global update Θ = Re{y + z/α} / Σ|h|²  (Eq. 24)."""
-    re = y.re + noise.re * inv_alpha
-    return re / jnp.maximum(sumh2, 1e-12)
-
-
-# ---------------------------------------------------------------------------
-# ADMM update rules
-# ---------------------------------------------------------------------------
-
-def penalty_grad(theta: Array, lam: Complex, h: Complex, Theta: Array,
-                 rho: float) -> Array:
-    """∇ of the augmented-Lagrangian terms added to f_n (for prox local steps).
-
-    d/dθ [ Re{λ* h} θ + ρ/2 |h|² (θ − Θ)² ] = Re{λ* h} + ρ|h|²(θ − Θ).
-    """
-    mu = cplx.cmul_conj(h, lam).re  # Re{λ* h} == Re{h λ*}
-    return mu + rho * cplx.abs2(h) * (theta - Theta)
-
-
-def flip_lambda(grad_f: Array, theta: Array, Theta_prev: Array, h: Complex,
-                rho: float) -> Complex:
-    """Re-solve stationarity (Eq. 6) for λ when the channel changed.
-
-    Target: λ* h = t := −(∂f(θ) + ρ|h|²(θ − Θ^k)).  The minimum-norm complex
-    solution is λ = t · h / |h|²  (then λ* h = t, real, exactly).
-    """
-    t = -(grad_f + rho * cplx.abs2(h) * (theta - Theta_prev))
-    scale = t / jnp.maximum(cplx.abs2(h), 1e-12)
-    return Complex(h.re * scale, h.im * scale)
-
-
-def dual_update(lam: Complex, h: Complex, theta: Array, Theta: Array,
-                rho: float, noise_re: Array | float = 0.0) -> Complex:
-    """Eq. (11): λ' = λ + ρ h (θ − Θ) − ρ Re{z} (noise term only if the
-    downlink is analog; the default digital downlink is error-free)."""
-    r = theta - Theta
-    return Complex(lam.re + rho * (h.re * r - noise_re), lam.im + rho * h.im * r)
-
-
 def residuals(state: AFadmmState, Theta_prev: Array) -> Tuple[Array, Array]:
     """(primal, dual) residual norms of Theorem 1: r = θ−Θ, S = ρ|h|²(Θ'−Θ)."""
     r = state.theta - state.Theta[None, :]
@@ -162,6 +100,7 @@ def afadmm_round(
     key: Array,
     reduce_fn: Optional[ReduceFn] = None,
     min_reduce_fn: Optional[Callable[[Array], Array]] = None,
+    backend: Optional[str] = None,
 ) -> Tuple[AFadmmState, dict]:
     """One synchronous round of Algorithm 1 (with Appendix-B noise handling).
 
@@ -172,6 +111,7 @@ def afadmm_round(
         the primal problem (Eq. 6/10) *ignoring* the flip mask (applied here).
       grad_fn: ``theta -> ∂f(θ)`` per worker, used by the flip rule. Shapes
         (W, d) -> (W, d).
+      backend: OTA transport backend ("jnp"/"pallas"/None = REPRO_USE_PALLAS).
     """
     h = blk_next.h
     changed = blk_next.changed
@@ -181,34 +121,28 @@ def afadmm_round(
     theta_solved = local_solve(state.theta, state.lam, h, state.Theta)
     if acfg.flip_on_change:
         theta_new = jnp.where(changed, state.theta, theta_solved)
-        lam_flip = flip_lambda(grad_fn(state.theta), state.theta, state.Theta, h, rho)
+        lam_flip = flip_lambda(grad_fn(state.theta), state.theta, state.Theta,
+                               h, rho, backend=backend)
         lam_pre = cplx.cwhere(changed, lam_flip, state.lam)
     else:
         theta_new = theta_solved
         lam_pre = state.lam
 
     # --- uplink: modulate, power-scale, superpose, matched-filter ---------
-    signals = modulate(theta_new, lam_pre, h, rho)
-    if acfg.power_control:
-        from repro.core.power import min_alpha  # local import: avoid cycle
-        # Budget: per-subcarrier power P (the paper's SNR definition is
-        # per-subcarrier: SNR = P|h|^2/(N0 W)) times the elements uploaded.
-        budget = ccfg.transmit_power * signals.re.shape[-1]
-        inv_alpha = 1.0 / min_alpha(signals, budget,
-                                    min_reduce_fn=min_reduce_fn)
-    else:
-        inv_alpha = jnp.asarray(1.0, theta_new.dtype)
-    y, sumh2 = superpose(signals, h, reduce_fn)
-    noise = matched_filter_noise(key, y.re.shape, ccfg)
-    Theta_new = demodulate(y, sumh2, noise, inv_alpha)
+    Theta_new, inv_alpha = ota_uplink(
+        theta_new, lam_pre, h, key, rho, ccfg,
+        power_control=acfg.power_control, reduce_fn=reduce_fn,
+        min_reduce_fn=min_reduce_fn, backend=backend)
 
     # --- downlink + dual ---------------------------------------------------
     if ccfg.analog_downlink:
         kd = jax.random.fold_in(key, 1)
         dn = matched_filter_noise(kd, state.theta.shape, ccfg)
-        lam_new = dual_update(lam_pre, h, theta_new, Theta_new, rho, dn.re)
+        lam_new = dual_update(lam_pre, h, theta_new, Theta_new, rho, dn.re,
+                              backend=backend)
     else:
-        lam_new = dual_update(lam_pre, h, theta_new, Theta_new, rho)
+        lam_new = dual_update(lam_pre, h, theta_new, Theta_new, rho,
+                              backend=backend)
 
     new_state = AFadmmState(theta=theta_new, lam=lam_new, Theta=Theta_new,
                             blk=blk_next, step=state.step + 1)

@@ -43,17 +43,72 @@ LocalSolve = Callable[[Array, Complex, Complex, Array], Array]
 GradFn = Callable[[Array], Array]
 
 
+class ScanRounds:
+    """``scan_rounds`` entry point shared by every algorithm.
+
+    Compiles ``n`` rounds into ONE ``lax.scan`` so a whole coherence block
+    dispatches as a single XLA computation (vs one dispatch + host sync per
+    round in a Python loop).  Key folding matches the Python-loop trainer
+    exactly — round ``r`` (global index) uses ``fold_in(key, r + 1)`` — so
+    scan-driven histories are bit-for-bit reproductions of loop-driven ones.
+    """
+
+    def scan_rounds(self, key: Array, st, local_solve: LocalSolve,
+                    grad_fn: GradFn, rounds: Array | int,
+                    eval_fn: Optional[Callable[[Array], dict]] = None,
+                    eval_mask: Optional[Array] = None):
+        """Run ``rounds`` (an int ``n`` -> 0..n-1, or an int32 array of
+        global round indices) under one scan.
+
+        Returns ``(state, metrics)`` with metrics leaves stacked to (T, ...);
+        with ``eval_fn``, returns ``(state, metrics, evals)`` where evals are
+        computed on the post-round global model at positions where
+        ``eval_mask`` is True (zeros elsewhere — ``lax.cond`` skips the work).
+        """
+        if isinstance(rounds, int):
+            rounds = jnp.arange(rounds, dtype=jnp.int32)
+        rounds = jnp.asarray(rounds, jnp.int32)
+        if eval_fn is not None:
+            ev_shapes = jax.eval_shape(
+                lambda s: eval_fn(self.global_model(s)), st)
+            zeros_ev = jax.tree.map(
+                lambda sd: jnp.zeros(sd.shape, sd.dtype), ev_shapes)
+            if eval_mask is None:
+                eval_mask = jnp.ones(rounds.shape, bool)
+            eval_mask = jnp.asarray(eval_mask, bool)
+
+        def body(carry, xs):
+            r, do_ev = xs
+            k = jax.random.fold_in(key, r + 1)
+            carry, m = self.round(k, carry, local_solve, grad_fn)
+            if eval_fn is None:
+                return carry, (m, ())
+            ev = jax.lax.cond(
+                do_ev, lambda s: eval_fn(self.global_model(s)),
+                lambda s: zeros_ev, carry)
+            return carry, (m, ev)
+
+        mask = eval_mask if eval_fn is not None else jnp.zeros(rounds.shape,
+                                                               bool)
+        st, (metrics, evals) = jax.lax.scan(body, st, (rounds, mask))
+        if eval_fn is None:
+            return st, metrics
+        return st, metrics, evals
+
+
 # ---------------------------------------------------------------------------
 # A-FADMM (the paper)
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
-class AFadmm:
+class AFadmm(ScanRounds):
     acfg: AdmmConfig
     ccfg: ChannelConfig
     plan: SubcarrierPlan
     reduce_fn: Optional[Callable[[Array], Array]] = None
     min_reduce_fn: Optional[Callable[[Array], Array]] = None
+    #: OTA transport backend ("jnp" | "pallas" | None = REPRO_USE_PALLAS)
+    backend: Optional[str] = None
 
     name = "afadmm"
 
@@ -68,7 +123,8 @@ class AFadmm:
         blk_next = step_channel(kc, st.blk, self.ccfg)
         st, metrics = admm.afadmm_round(
             st, blk_next, local_solve, grad_fn, self.acfg, self.ccfg, kn,
-            reduce_fn=self.reduce_fn, min_reduce_fn=self.min_reduce_fn)
+            reduce_fn=self.reduce_fn, min_reduce_fn=self.min_reduce_fn,
+            backend=self.backend)
         metrics["channel_uses"] = jnp.asarray(
             float(subcarrier.analog_channel_uses(self.plan)))
         return st, metrics
@@ -90,7 +146,7 @@ class DFadmmState(NamedTuple):
 
 
 @dataclasses.dataclass(frozen=True)
-class DFadmm:
+class DFadmm(ScanRounds):
     acfg: AdmmConfig
     ccfg: ChannelConfig
     plan: SubcarrierPlan
@@ -148,7 +204,7 @@ class AnalogGDState(NamedTuple):
 
 
 @dataclasses.dataclass(frozen=True)
-class AnalogGD:
+class AnalogGD(ScanRounds):
     ccfg: ChannelConfig
     plan: SubcarrierPlan
     learning_rate: float = 1e-4
@@ -201,7 +257,7 @@ class FedAvgState(NamedTuple):
 
 
 @dataclasses.dataclass(frozen=True)
-class FedAvg:
+class FedAvg(ScanRounds):
     ccfg: ChannelConfig
     plan: SubcarrierPlan
     reduce_fn: Optional[Callable[[Array], Array]] = None

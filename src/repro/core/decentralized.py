@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cplx
+from repro.core.aggregators import ScanRounds
 from repro.core.channel import ChannelConfig, awgn, rayleigh
 from repro.core.subcarrier import SubcarrierPlan
 
@@ -35,7 +36,7 @@ class GadmmState(NamedTuple):
 
 
 @dataclasses.dataclass(frozen=True)
-class AnalogGadmm:
+class AnalogGadmm(ScanRounds):
     """Decentralized chain ADMM with analog neighbour links."""
 
     ccfg: ChannelConfig

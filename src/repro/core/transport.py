@@ -1,0 +1,258 @@
+"""Unified OTA transport layer — ONE implementation of the paper's analog
+signal path (Alg. 1: modulate → power-scale → superpose → matched-filter →
+demodulate), shared by the flat ``(W, d)`` path (``core.admm``), the pytree
+path (``core.tree_ota``), and the sketched LLM trainer.
+
+Backend dispatch
+----------------
+Every signal primitive takes ``backend=`` ∈ {``None``, ``"jnp"``,
+``"pallas"``}:
+
+* ``"jnp"``    — pure-jnp reference (the correctness contract; bit-identical
+                 to the historical ``core.admm`` / ``core.tree_ota`` math).
+* ``"pallas"`` — fused kernels from ``kernels/ota.py`` /
+                 ``kernels/admm_update.py``: one HBM pass per primitive, and
+                 the whole superpose→filter→demodulate receive chain in a
+                 single kernel (interpret mode off-TPU, Mosaic on TPU).
+* ``None``     — resolve from the ``REPRO_USE_PALLAS`` env var at trace
+                 time (same switch the model kernels use); default jnp.
+
+Worker-axis reductions stay pluggable: ``reduce_fn`` (superposition — the
+single analog "channel use", a psum under shard_map) and ``min_reduce_fn``
+(the power-control min-α consensus, a pmin under shard_map).  When a
+cross-device ``reduce_fn`` is supplied the pallas backend composes the
+modulate/demodulate kernels around it; when the reduction is local the whole
+receive chain runs fused.
+
+All OTA arithmetic runs in f32 regardless of parameter dtype (the analog
+signal path); duals are f32.  The matched-filter receiver only ever samples
+the REAL plane (Θ = Re{y}/Σ|h|², Eq. 24), so :func:`receive` superposes the
+real plane alone — what ``optflags`` used to gate behind ``ota_re`` is now
+simply how the transport works (it is bit-identical to taking Re{y} of the
+full complex superposition).
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cplx
+from repro.core.channel import ChannelConfig, matched_filter_noise
+from repro.core.cplx import Complex
+
+Array = jax.Array
+ReduceFn = Callable[[Array], Array]
+
+BACKENDS = ("jnp", "pallas")
+
+
+def resolve_backend(backend: Optional[str] = None) -> str:
+    """Explicit ``backend=`` wins; else the ``REPRO_USE_PALLAS`` env var."""
+    if backend is None:
+        backend = "pallas" if os.environ.get("REPRO_USE_PALLAS", "0") == "1" \
+            else "jnp"
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown OTA backend {backend!r}; want one of {BACKENDS}")
+    return backend
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _f32(x: Array) -> Array:
+    return x.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Signal primitives (backend-dispatched)
+# ---------------------------------------------------------------------------
+
+def modulate(theta: Array, lam: Complex, h: Complex, rho: float,
+             *, backend: Optional[str] = None) -> Complex:
+    """Worker TX signal s = h*·θ + λ*/ρ  (Alg. 1 line 14).  Shapes (W, ...)."""
+    if resolve_backend(backend) == "pallas":
+        from repro.kernels import ota as _k
+        shape = theta.shape
+        sre, sim = _k.ota_modulate(
+            theta.reshape(-1), lam.re.reshape(-1), lam.im.reshape(-1),
+            h.re.reshape(-1), h.im.reshape(-1), float(rho),
+            interpret=_interpret())
+        return Complex(sre.reshape(shape), sim.reshape(shape))
+    tf = _f32(theta)
+    return Complex(h.re * tf + lam.re / rho, -h.im * tf - lam.im / rho)
+
+
+def superpose(signals: Complex, h: Complex,
+              reduce_fn: Optional[ReduceFn] = None) -> Tuple[Complex, Array]:
+    """The air: y = Σ_n h_n ⊙ s_n ; also the pilot aggregate Σ_n |h_n|².
+
+    Both complex planes, for callers that inspect the full observation (the
+    privacy harness).  The hot path (:func:`receive`) superposes Re only.
+    """
+    rx = cplx.cmul(h, signals)
+    sumh2 = cplx.abs2(h)
+    if reduce_fn is None:
+        reduce_fn = lambda x: jnp.sum(x, axis=0)
+    return Complex(reduce_fn(rx.re), reduce_fn(rx.im)), reduce_fn(sumh2)
+
+
+def demodulate(y: Complex, sumh2: Array, noise: Complex,
+               inv_alpha: Array | float = 1.0,
+               *, backend: Optional[str] = None) -> Array:
+    """PS global update Θ = Re{y + z/α} / Σ|h|²  (Eq. 24)."""
+    y_re = y.re if isinstance(y, Complex) else y
+    n_re = noise.re if isinstance(noise, Complex) else noise
+    if resolve_backend(backend) == "pallas":
+        from repro.kernels import ota as _k
+        shape = y_re.shape
+        out = _k.ota_demodulate_dyn(
+            y_re.reshape(-1), jnp.broadcast_to(n_re, shape).reshape(-1),
+            sumh2.reshape(-1), inv_alpha, interpret=_interpret())
+        return out.reshape(shape)
+    return (y_re + n_re * inv_alpha) / jnp.maximum(sumh2, 1e-12)
+
+
+def receive(signals: Complex, h: Complex, key: Array, ccfg: ChannelConfig,
+            inv_alpha: Array | float = 1.0, *,
+            reduce_fn: Optional[ReduceFn] = None,
+            backend: Optional[str] = None) -> Array:
+    """Fused superpose → matched-filter → demodulate.  (W, ...) -> (...).
+
+    Only the real plane is superposed: Θ never reads Im{y} (Eq. 24), and
+    Re{Σ h⊙s} is computed with the same elementwise expression either way,
+    so this is bit-identical to the full complex superposition — but halves
+    the reduce bytes (the all-reduce the roofline counts as the channel use).
+    """
+    backend = resolve_backend(backend)
+    out_shape = signals.re.shape[1:]
+    noise = matched_filter_noise(key, out_shape, ccfg)
+    if backend == "pallas" and reduce_fn is None:
+        from repro.kernels import ota as _k
+        W = signals.re.shape[0]
+        out = _k.ota_receive(
+            signals.re.reshape(W, -1), signals.im.reshape(W, -1),
+            h.re.reshape(W, -1), h.im.reshape(W, -1),
+            noise.re.reshape(-1), inv_alpha, interpret=_interpret())
+        return out.reshape(out_shape)
+    rx_re = h.re * signals.re - h.im * signals.im
+    sumh2 = cplx.abs2(h)
+    red = reduce_fn or (lambda x: jnp.sum(x, axis=0))
+    y_re, p2 = red(rx_re), red(sumh2)
+    return demodulate(y_re, p2, noise.re, inv_alpha, backend=backend)
+
+
+def dual_update(lam: Complex, h: Complex, theta: Array, Theta: Array,
+                rho: float, noise_re: Array | float = 0.0,
+                *, backend: Optional[str] = None) -> Complex:
+    """Eq. (11): λ' = λ + ρ h (θ − Θ) − ρ Re{z}  (noise only under analog
+    downlink).  Θ broadcasts over the leading worker dim."""
+    if resolve_backend(backend) == "pallas":
+        from repro.kernels import admm_update as _k
+        shape = lam.re.shape
+        th = jnp.broadcast_to(_f32(theta), shape)
+        Th = jnp.broadcast_to(_f32(Theta), shape)
+        nz = jnp.broadcast_to(jnp.asarray(noise_re, jnp.float32), shape)
+        ore, oim = _k.admm_dual_update(
+            lam.re.reshape(-1), lam.im.reshape(-1),
+            h.re.reshape(-1), h.im.reshape(-1),
+            th.reshape(-1), Th.reshape(-1), float(rho), nz.reshape(-1),
+            interpret=_interpret())
+        return Complex(ore.reshape(shape), oim.reshape(shape))
+    r = _f32(theta) - _f32(Theta)
+    return Complex(lam.re + rho * (h.re * r - noise_re),
+                   lam.im + rho * h.im * r)
+
+
+def flip_lambda(grad_f: Array, theta: Array, Theta_prev: Array, h: Complex,
+                rho: float, *, backend: Optional[str] = None) -> Complex:
+    """Re-solve stationarity (Eq. 6) for λ when the channel changed.
+
+    Target: λ* h = t := −(∂f(θ) + ρ|h|²(θ − Θ^k)).  The minimum-norm complex
+    solution is λ = t · h / |h|²  (then λ* h = t, real, exactly).
+    """
+    if resolve_backend(backend) == "pallas":
+        from repro.kernels import admm_update as _k
+        shape = theta.shape
+        Th = jnp.broadcast_to(_f32(Theta_prev), shape)
+        ore, oim = _k.admm_flip_lambda(
+            grad_f.reshape(-1), theta.reshape(-1), Th.reshape(-1),
+            h.re.reshape(-1), h.im.reshape(-1), float(rho),
+            interpret=_interpret())
+        return Complex(ore.reshape(shape), oim.reshape(shape))
+    t = -(grad_f + rho * cplx.abs2(h) * (_f32(theta) - _f32(Theta_prev)))
+    scale = t / jnp.maximum(cplx.abs2(h), 1e-12)
+    return Complex(h.re * scale, h.im * scale)
+
+
+def penalty_grad(theta: Array, lam: Complex, h: Complex, Theta: Array,
+                 rho: float) -> Array:
+    """∇ of the augmented-Lagrangian terms added to f_n (prox local steps):
+    Re{λ* h} + ρ|h|²(θ − Θ).  Returns theta's dtype (leafwise-safe)."""
+    mu = cplx.cmul_conj(h, lam).re  # Re{λ* h} == Re{h λ*}
+    g = mu + rho * cplx.abs2(h) * (_f32(theta) - _f32(Theta))
+    return g.astype(theta.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Power control (min-α protocol, paper Sec. 2)
+# ---------------------------------------------------------------------------
+
+def worker_energy(signals: Complex) -> Array:
+    """Σ over all elements of |s|² per worker: (W, ...) -> (W,)."""
+    e = cplx.abs2(signals)
+    return jnp.sum(e.reshape(e.shape[0], -1), axis=1)
+
+
+def inv_alpha_from_energy(energy: Array, budget: float,
+                          min_reduce_fn: Optional[ReduceFn] = None) -> Array:
+    """1/α with α = min_n sqrt(P_budget / E_n).  Under shard_map pass pmin."""
+    alphas = jnp.sqrt(budget / jnp.maximum(energy, 1e-30))
+    a = jnp.min(alphas)
+    if min_reduce_fn is not None:
+        a = min_reduce_fn(a)
+    return 1.0 / a
+
+
+def power_scale(signals: Complex, ccfg: ChannelConfig,
+                min_reduce_fn: Optional[ReduceFn] = None) -> Array:
+    """inv_alpha for a single-leaf uplink.  Budget: per-subcarrier power P
+    (the paper's SNR is per-subcarrier: SNR = P|h|²/(N0 W)) × elements
+    uploaded per worker."""
+    d = int(signals.re.size // signals.re.shape[0])
+    budget = ccfg.transmit_power * d
+    return inv_alpha_from_energy(worker_energy(signals), budget,
+                                 min_reduce_fn=min_reduce_fn)
+
+
+# ---------------------------------------------------------------------------
+# The full uplink (Alg. 1, the "transport" entry point)
+# ---------------------------------------------------------------------------
+
+def ota_uplink(theta: Array, lam: Complex, h: Complex, key: Array,
+               rho: float, ccfg: ChannelConfig, *,
+               power_control: bool = True,
+               reduce_fn: Optional[ReduceFn] = None,
+               min_reduce_fn: Optional[ReduceFn] = None,
+               backend: Optional[str] = None) -> Tuple[Array, Array]:
+    """modulate → power-scale → superpose → matched-filter → demodulate.
+
+    Args:
+      theta/lam/h: (W, ...) worker-major; Θ returned with the worker dim
+        reduced away.
+      key: PRNG key for the matched-filter AWGN (ignored if noise-free).
+
+    Returns (Theta, inv_alpha).
+    """
+    backend = resolve_backend(backend)
+    signals = modulate(theta, lam, h, rho, backend=backend)
+    if power_control:
+        inv_alpha = power_scale(signals, ccfg, min_reduce_fn=min_reduce_fn)
+    else:
+        inv_alpha = jnp.asarray(1.0, theta.dtype)
+    Theta = receive(signals, h, key, ccfg, inv_alpha,
+                    reduce_fn=reduce_fn, backend=backend)
+    return Theta, inv_alpha

@@ -3,7 +3,9 @@
 ``core.admm`` works on flat ``(W, d)`` vectors (the paper's own scale);
 LLM-scale parameters are pytrees whose leaves carry a leading worker dim
 ``W`` sharded over the mesh ``data`` axis.  The OTA math is elementwise, so
-it generalises leafwise; only two reductions cross leaves/workers:
+it generalises leafwise — every leaf goes through the SAME backend-dispatched
+:mod:`repro.core.transport` primitives the flat path uses; only two
+reductions cross leaves/workers:
 
 * the **superposition** Σ_n h⊙s (a per-leaf sum over the worker axis — XLA
   lowers it to the all-reduce the roofline accounts as the single "channel
@@ -17,15 +19,14 @@ regardless of param dtype (the analog signal path), duals are f32.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import cplx
+from repro.core import cplx, transport
 from repro.core.admm import AdmmConfig
-from repro.core.channel import ChannelConfig, awgn, rayleigh
+from repro.core.channel import ChannelConfig, rayleigh
 from repro.core.cplx import Complex
 
 Array = jax.Array
@@ -92,38 +93,25 @@ def step_channel_tree(key: Array, chan: TreeChannel,
 def tree_penalty_grad(theta: PyTree, lam: PyTree, h: PyTree, Theta: PyTree,
                       rho: float) -> PyTree:
     """Leafwise Re{λ*h} + ρ|h|²(θ − Θ), broadcasting Θ over the worker dim."""
-    def leaf(t, l, hh, T):
-        mu = cplx.cmul_conj(hh, l).re
-        g = mu + rho * cplx.abs2(hh) * (t.astype(jnp.float32) - T[None].astype(jnp.float32))
-        return g.astype(t.dtype)
-
-    return _zmap(leaf, theta, lam, h, Theta)
+    return _zmap(lambda t, l, hh, T: transport.penalty_grad(t, l, hh, T, rho),
+                 theta, lam, h, Theta)
 
 
-def _modulate_tree(theta: PyTree, lam: PyTree, h: PyTree, rho: float) -> PyTree:
-    def leaf(t, l, hh) -> Complex:
-        tf = t.astype(jnp.float32)
-        hc = cplx.conj(hh)
-        lc = cplx.conj(l)
-        return Complex(hc.re * tf + lc.re / rho, hc.im * tf + lc.im / rho)
-
-    return _zmap(leaf, theta, lam, h)
+def _modulate_tree(theta: PyTree, lam: PyTree, h: PyTree, rho: float,
+                   backend: Optional[str] = None) -> PyTree:
+    return _zmap(lambda t, l, hh: transport.modulate(t, l, hh, rho,
+                                                     backend=backend),
+                 theta, lam, h)
 
 
 def _tree_energy_per_worker(signals: PyTree) -> Array:
     """Σ over all leaves/elements of |s|² per worker -> (W,)."""
-    def leaf(s: Complex) -> Array:
-        e = cplx.abs2(s)
-        return jnp.sum(e.reshape(e.shape[0], -1), axis=1)
-
-    energies = [leaf(s) for s in jax.tree_util.tree_leaves(
-        signals, is_leaf=lambda x: isinstance(x, Complex))]
-    return sum(energies)
+    leaves = jax.tree_util.tree_leaves(signals, is_leaf=_is_cplx)
+    return sum(transport.worker_energy(s) for s in leaves)
 
 
 def _tree_size(tree: PyTree) -> int:
-    leaves = jax.tree_util.tree_leaves(
-        tree, is_leaf=lambda x: isinstance(x, Complex))
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=_is_cplx)
     total = 0
     for l in leaves:
         shape = l.re.shape if isinstance(l, Complex) else l.shape
@@ -135,54 +123,39 @@ def _tree_size(tree: PyTree) -> int:
 
 
 def ota_tree_round(theta: PyTree, lam: PyTree, h: PyTree, key: Array,
-                   acfg: AdmmConfig, ccfg: ChannelConfig
+                   acfg: AdmmConfig, ccfg: ChannelConfig,
+                   backend: Optional[str] = None,
+                   reduce_fn: Optional[Callable[[Array], Array]] = None,
+                   min_reduce_fn: Optional[Callable[[Array], Array]] = None,
                    ) -> Tuple[PyTree, PyTree, dict]:
     """Uplink + global + dual for one round (post-local-steps).
 
-    Returns (Theta_new, lam_new, metrics).  theta leaves: (W, ...).
+    Returns (Theta_new, lam_new, metrics).  theta leaves: (W, ...).  The
+    whole signal chain is the shared transport layer; power control couples
+    the leaves (energy budget spans the full parameter vector).
     """
     rho = acfg.rho
-    signals = _modulate_tree(theta, lam, h, rho)
+    signals = _modulate_tree(theta, lam, h, rho, backend)
 
     if acfg.power_control:
-        d_total = _tree_size(signals)
-        budget = ccfg.transmit_power * d_total
-        energy = _tree_energy_per_worker(signals)          # (W,)
-        alpha = jnp.min(jnp.sqrt(budget / jnp.maximum(energy, 1e-30)))
-        inv_alpha = 1.0 / alpha
+        budget = ccfg.transmit_power * _tree_size(signals)
+        inv_alpha = transport.inv_alpha_from_energy(
+            _tree_energy_per_worker(signals), budget,
+            min_reduce_fn=min_reduce_fn)
     else:
         inv_alpha = jnp.asarray(1.0, jnp.float32)
 
-    keys = iter(_leaf_keys(key, signals))
+    s_leaves, treedef = jax.tree_util.tree_flatten(signals, is_leaf=_is_cplx)
+    h_leaves = jax.tree_util.tree_flatten(h, is_leaf=_is_cplx)[0]
+    keys = _leaf_keys(key, signals)
+    Theta_new = jax.tree_util.tree_unflatten(treedef, [
+        transport.receive(s, hh, k, ccfg, inv_alpha,
+                          reduce_fn=reduce_fn, backend=backend)
+        for s, hh, k in zip(s_leaves, h_leaves, keys)])
 
-    from repro.optflags import enabled
-    ota_re_only = enabled("ota_re")
-
-    def leaf_global(s: Complex, hh: Complex) -> Array:
-        if ota_re_only:
-            # §Perf "ota_re": Θ only ever reads Re{y}; superpose the real
-            # plane alone (the matched-filter receiver samples I, not Q) —
-            # halves the OTA all-reduce bytes and the elementwise work.
-            rx_re = hh.re * s.re - hh.im * s.im
-            y_re = jnp.sum(rx_re, axis=0)
-            sumh2 = jnp.sum(cplx.abs2(hh), axis=0)
-            if ccfg.noisy:
-                z = awgn(next(keys), y_re.shape, ccfg.noise_var_matched)
-                y_re = y_re + z.re * inv_alpha
-            return y_re / jnp.maximum(sumh2, 1e-12)
-        y = cplx.csum(cplx.cmul(hh, s), axis=0)            # superposition
-        sumh2 = jnp.sum(cplx.abs2(hh), axis=0)
-        if ccfg.noisy:
-            z = awgn(next(keys), y.re.shape, ccfg.noise_var_matched)
-            y = Complex(y.re + z.re * inv_alpha, y.im + z.im * inv_alpha)
-        return y.re / jnp.maximum(sumh2, 1e-12)
-
-    Theta_new = _zmap(leaf_global, signals, h)
-
-    def leaf_dual(l: Complex, hh: Complex, t, T) -> Complex:
-        r = t.astype(jnp.float32) - T[None]
-        return Complex(l.re + rho * hh.re * r, l.im + rho * hh.im * r)
-
-    lam_new = _zmap(leaf_dual, lam, h, theta, Theta_new)
+    lam_new = _zmap(
+        lambda l, hh, t, T: transport.dual_update(l, hh, t, T, rho,
+                                                  backend=backend),
+        lam, h, theta, Theta_new)
     metrics = {"inv_alpha": jnp.asarray(inv_alpha)}
     return Theta_new, lam_new, metrics

@@ -19,6 +19,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 Array = jax.Array
 
@@ -36,6 +37,22 @@ def _mod_kernel(theta_ref, lre_ref, lim_ref, hre_ref, him_ref,
 def _demod_kernel(yre_ref, nre_ref, p2_ref, out_ref, *, inv_alpha: float):
     y = yre_ref[...] + nre_ref[...] * inv_alpha
     out_ref[...] = y / jnp.maximum(p2_ref[...], 1e-12)
+
+
+def _demod_dyn_kernel(ia_ref, yre_ref, nre_ref, p2_ref, out_ref):
+    y = yre_ref[...] + nre_ref[...] * ia_ref[0]
+    out_ref[...] = y / jnp.maximum(p2_ref[...], 1e-12)
+
+
+def _receive_kernel(ia_ref, sre_ref, sim_ref, hre_ref, him_ref, nre_ref,
+                    out_ref):
+    hre = hre_ref[...]
+    him = him_ref[...]
+    rx_re = hre * sre_ref[...] - him * sim_ref[...]   # Re{h ⊙ s}
+    y = jnp.sum(rx_re, axis=0, keepdims=True)         # superposition (the air)
+    p2 = jnp.sum(hre * hre + him * him, axis=0, keepdims=True)
+    y = y + nre_ref[...] * ia_ref[0]                  # matched-filter noise/α
+    out_ref[...] = y / jnp.maximum(p2, 1e-12)         # Θ (Eq. 24)
 
 
 def _grid_spec(n_inputs: int, rows: int, block_rows: int):
@@ -92,4 +109,65 @@ def ota_demodulate(y_re: Array, noise_re: Array, sumh2: Array,
         out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
         interpret=interpret,
     )(*args)
+    return out.reshape(-1)[:n]
+
+
+def _scalar_spec():
+    """(1,) runtime scalar operand, kept in SMEM on TPU."""
+    return pl.BlockSpec((1,), lambda i: (0,), memory_space=pltpu.SMEM)
+
+
+def ota_demodulate_dyn(y_re: Array, noise_re: Array, sumh2: Array,
+                       inv_alpha: Array | float,
+                       *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                       interpret: bool = False) -> Array:
+    """Fused Θ = (y_re + z_re·inv_alpha) / max(Σ|h|², eps) with a *traced*
+    inv_alpha scalar (the power-control α is data-dependent per round)."""
+    n = y_re.size
+    rows = _rows_for(n, block_rows)
+    args = [_pad_2d(a.astype(jnp.float32), rows)
+            for a in (y_re, noise_re, sumh2)]
+    ia = jnp.asarray(inv_alpha, jnp.float32).reshape(1)
+    grid, in_specs, out_spec = _grid_spec(3, rows, block_rows)
+    out = pl.pallas_call(
+        _demod_dyn_kernel,
+        grid=grid,
+        in_specs=[_scalar_spec()] + in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+        interpret=interpret,
+    )(ia, *args)
+    return out.reshape(-1)[:n]
+
+
+def ota_receive(s_re: Array, s_im: Array, h_re: Array, h_im: Array,
+                noise_re: Array, inv_alpha: Array | float,
+                *, block_cols: int = LANE, interpret: bool = False) -> Array:
+    """Fully fused receive chain: Θ = (Re{Σ_n h_n⊙s_n} + z·α⁻¹)/max(Σ|h|²,eps).
+
+    One pass over the (W, d) signal/fading planes — the superposition (worker
+    reduction), matched-filter noise scaling, and demodulation never
+    materialise y/Σ|h|² in HBM.  s/h: (W, d) planes; noise_re: (d,);
+    inv_alpha: traced scalar.  Returns (d,) f32.
+    """
+    W, n = s_re.shape
+    cols = -(-n // block_cols) * block_cols
+
+    def padw(x: Array) -> Array:
+        return jnp.pad(x.astype(jnp.float32), ((0, 0), (0, cols - n)))
+
+    args = [padw(a) for a in (s_re, s_im, h_re, h_im)]
+    nz = jnp.pad(noise_re.astype(jnp.float32), (0, cols - n)).reshape(1, cols)
+    ia = jnp.asarray(inv_alpha, jnp.float32).reshape(1)
+    grid = (cols // block_cols,)
+    wspec = pl.BlockSpec((W, block_cols), lambda i: (0, i))
+    rspec = pl.BlockSpec((1, block_cols), lambda i: (0, i))
+    out = pl.pallas_call(
+        _receive_kernel,
+        grid=grid,
+        in_specs=[_scalar_spec()] + [wspec] * 4 + [rspec],
+        out_specs=rspec,
+        out_shape=jax.ShapeDtypeStruct((1, cols), jnp.float32),
+        interpret=interpret,
+    )(ia, *args, nz)
     return out.reshape(-1)[:n]

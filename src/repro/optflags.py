@@ -4,9 +4,11 @@ Read at trace time from ``REPRO_OPT`` (comma-separated), so the dry-run can
 lower baseline and optimized variants of the same code path:
 
 * ``chunked_attn``  — query-chunked attention (no (S,S) score tensor).
-* ``ota_re``        — superpose only the REAL plane of the OTA uplink
-                      (Θ = Re{y}/Σ|h|² never reads Im{y}); halves the OTA
-                      all-reduce bytes and drops the imag elementwise work.
+* ``ota_re``        — (retired; now always on) superpose only the REAL plane
+                      of the OTA uplink (Θ = Re{y}/Σ|h|² never reads Im{y}).
+                      ``core.transport.receive`` does this unconditionally —
+                      it is bit-identical to Re{} of the full superposition —
+                      so the flag remains only for dry-run CLI compat.
 * ``chunked_scan``  — sequence-chunked gated linear recurrence (mirrors the
                       Pallas kernel's VMEM-carried structure in pure JAX).
 * ``rs_grads``      — constrain per-worker grads to the parameter sharding

@@ -1,2 +1,3 @@
-from repro.train.fl_trainer import History, train  # noqa: F401
+from repro.train.fl_trainer import (History, train, train_loop,  # noqa: F401
+                                    train_scan)
 from repro.train.llm_trainer import FLConfig, make_fl_train  # noqa: F401

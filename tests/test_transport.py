@@ -1,0 +1,262 @@
+"""Transport-layer contract: jnp and Pallas backends agree to fp32
+tolerance on random shapes (including non-LANE-aligned tails), the flat and
+tree paths share one implementation, and the scan-compiled trainer
+reproduces the Python-loop trainer's history bit-for-bit."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cplx, make, transport
+from repro.core.admm import AdmmConfig
+from repro.core.channel import ChannelConfig, rayleigh
+from repro.train import train
+
+from helpers import default_cfgs, make_linreg, make_solver
+
+KEY = jax.random.PRNGKey(0)
+TOL = dict(rtol=1e-4, atol=1e-5)
+
+
+def _problem(W, d, seed=0):
+    k = jax.random.fold_in(KEY, seed)
+    k1, k2, k3, k4 = jax.random.split(k, 4)
+    theta = jax.random.normal(k1, (W, d))
+    lam = cplx.Complex(0.3 * jax.random.normal(k2, (W, d)),
+                       0.3 * jax.random.normal(k3, (W, d)))
+    h = rayleigh(k4, (W, d))
+    return theta, lam, h
+
+
+# ---------------------------------------------------------------------------
+# backend resolution
+# ---------------------------------------------------------------------------
+
+def test_resolve_backend(monkeypatch):
+    monkeypatch.delenv("REPRO_USE_PALLAS", raising=False)
+    assert transport.resolve_backend() == "jnp"
+    assert transport.resolve_backend("pallas") == "pallas"
+    monkeypatch.setenv("REPRO_USE_PALLAS", "1")
+    assert transport.resolve_backend() == "pallas"
+    assert transport.resolve_backend("jnp") == "jnp"  # explicit wins
+    with pytest.raises(ValueError):
+        transport.resolve_backend("cuda")
+
+
+def test_env_flag_reaches_uplink(monkeypatch):
+    """REPRO_USE_PALLAS=1 with backend=None must route through the kernels
+    and still match the jnp reference."""
+    theta, lam, h = _problem(4, 200)
+    ccfg = ChannelConfig(n_workers=4, noisy=False)
+    T_jnp, _ = transport.ota_uplink(theta, lam, h, KEY, 0.5, ccfg,
+                                    backend="jnp")
+    monkeypatch.setenv("REPRO_USE_PALLAS", "1")
+    T_env, _ = transport.ota_uplink(theta, lam, h, KEY, 0.5, ccfg)
+    np.testing.assert_allclose(T_env, T_jnp, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# jnp vs pallas parity (fp32 tolerance, incl. non-LANE-aligned tails)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("W,d", [(1, 5), (3, 1024), (7, 1024 + 37),
+                                 (4, 6), (10, 4096 + 3)])
+@pytest.mark.parametrize("noisy", [False, True])
+@pytest.mark.parametrize("power_control", [False, True])
+def test_uplink_backend_parity(W, d, noisy, power_control):
+    theta, lam, h = _problem(W, d, seed=d + W)
+    ccfg = ChannelConfig(n_workers=W, noisy=noisy, snr_db=20.0)
+    kn = jax.random.fold_in(KEY, 42)
+    T_j, ia_j = transport.ota_uplink(theta, lam, h, kn, 0.5, ccfg,
+                                     power_control=power_control,
+                                     backend="jnp")
+    T_p, ia_p = transport.ota_uplink(theta, lam, h, kn, 0.5, ccfg,
+                                     power_control=power_control,
+                                     backend="pallas")
+    np.testing.assert_allclose(T_p, T_j, **TOL)
+    np.testing.assert_allclose(np.asarray(ia_p), np.asarray(ia_j), **TOL)
+
+
+@pytest.mark.parametrize("W,d", [(2, 33), (5, 2048 + 9)])
+def test_primitive_backend_parity(W, d):
+    theta, lam, h = _problem(W, d, seed=7)
+    Theta = jax.random.normal(jax.random.fold_in(KEY, 8), (d,))
+    grad = jax.random.normal(jax.random.fold_in(KEY, 9), (W, d))
+
+    s_j = transport.modulate(theta, lam, h, 0.5, backend="jnp")
+    s_p = transport.modulate(theta, lam, h, 0.5, backend="pallas")
+    np.testing.assert_allclose(s_p.re, s_j.re, **TOL)
+    np.testing.assert_allclose(s_p.im, s_j.im, **TOL)
+
+    l_j = transport.dual_update(lam, h, theta, Theta, 0.5, backend="jnp")
+    l_p = transport.dual_update(lam, h, theta, Theta, 0.5, backend="pallas")
+    np.testing.assert_allclose(l_p.re, l_j.re, **TOL)
+    np.testing.assert_allclose(l_p.im, l_j.im, **TOL)
+
+    f_j = transport.flip_lambda(grad, theta, Theta, h, 0.5, backend="jnp")
+    f_p = transport.flip_lambda(grad, theta, Theta, h, 0.5, backend="pallas")
+    np.testing.assert_allclose(f_p.re, f_j.re, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(f_p.im, f_j.im, rtol=1e-3, atol=1e-4)
+
+
+def test_uplink_parity_under_jit_with_traced_alpha():
+    """inv_alpha is data-dependent (power control) — the pallas receive path
+    must accept it traced, inside jit."""
+    theta, lam, h = _problem(6, 500)
+    ccfg = ChannelConfig(n_workers=6, noisy=True)
+
+    def up(backend):  # backend is trace-time static
+        return jax.jit(lambda theta, lam, h, k: transport.ota_uplink(
+            theta, lam, h, k, 0.5, ccfg, backend=backend)[0])
+
+    kn = jax.random.fold_in(KEY, 3)
+    np.testing.assert_allclose(up("pallas")(theta, lam, h, kn),
+                               up("jnp")(theta, lam, h, kn), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# flat path == tree path == transport (one implementation)
+# ---------------------------------------------------------------------------
+
+def test_afadmm_round_uses_transport_uplink():
+    """The flat round's uplink equals a direct transport.ota_uplink call."""
+    from repro.core import admm
+    from repro.core.channel import init_channel
+
+    prob = make_linreg(KEY)
+    acfg, ccfg, plan = default_cfgs(prob["W"], prob["d"], noisy=True,
+                                    power_control=True, flip=False)
+    solver = make_solver(prob, acfg.rho)
+    blk = init_channel(KEY, ccfg, n_coeffs=prob["d"])
+    st = admm.init_state(KEY, prob["theta0"], blk)
+    kn = jax.random.fold_in(KEY, 5)
+    st2, m = admm.afadmm_round(st, blk, solver, prob["grad_fn"], acfg, ccfg,
+                               kn)
+    theta_new = solver(st.theta, st.lam, blk.h, st.Theta)
+    T_direct, ia = transport.ota_uplink(theta_new, st.lam, blk.h, kn,
+                                        acfg.rho, ccfg)
+    np.testing.assert_array_equal(np.asarray(st2.Theta),
+                                  np.asarray(T_direct))
+    np.testing.assert_array_equal(np.asarray(m["inv_alpha"]),
+                                  np.asarray(ia))
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_tree_round_matches_flat_round_per_backend(backend):
+    """Both paths call the same transport — results agree per backend."""
+    from repro.core.admm import demodulate, dual_update, modulate, superpose
+    from repro.core.tree_ota import ota_tree_round
+
+    W, d, rho = 5, 48, 0.5
+    theta, lam, h = _problem(W, d, seed=11)
+    acfg = AdmmConfig(rho=rho, power_control=False)
+    ccfg = ChannelConfig(n_workers=W, noisy=False)
+
+    s = modulate(theta, lam, h, rho)
+    y, sumh2 = superpose(s, h)
+    Theta_flat = demodulate(y, sumh2, cplx.czero((d,)))
+    lam_flat = dual_update(lam, h, theta, Theta_flat, rho)
+
+    Theta_tree, lam_tree, _ = ota_tree_round(
+        {"w": theta}, {"w": lam}, {"w": h}, KEY, acfg, ccfg, backend=backend)
+    np.testing.assert_allclose(Theta_tree["w"], Theta_flat, **TOL)
+    np.testing.assert_allclose(lam_tree["w"].re, lam_flat.re, **TOL)
+    np.testing.assert_allclose(lam_tree["w"].im, lam_flat.im, **TOL)
+
+
+def test_pluggable_reductions():
+    """reduce_fn / min_reduce_fn hooks see the superposition and the min-α
+    consensus (the shard_map seams)."""
+    theta, lam, h = _problem(4, 64)
+    ccfg = ChannelConfig(n_workers=4, noisy=False)
+    calls = {"red": 0, "min": 0}
+
+    def red(x):
+        calls["red"] += 1
+        return jnp.sum(x, axis=0)
+
+    def mred(x):
+        calls["min"] += 1
+        return x
+
+    T_hook, _ = transport.ota_uplink(theta, lam, h, KEY, 0.5, ccfg,
+                                     reduce_fn=red, min_reduce_fn=mred,
+                                     backend="jnp")
+    T_ref, _ = transport.ota_uplink(theta, lam, h, KEY, 0.5, ccfg,
+                                    backend="jnp")
+    assert calls["red"] >= 1 and calls["min"] == 1
+    np.testing.assert_allclose(T_hook, T_ref, rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# scan driver ≡ python loop driver (bit-for-bit)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["afadmm", "dfadmm", "analog_gd", "fedavg"])
+def test_scan_trainer_bitwise_equals_loop_trainer(name):
+    prob = make_linreg(KEY)
+    acfg, ccfg, plan = default_cfgs(prob["W"], prob["d"], noisy=True,
+                                    snr_db=30.0, power_control=True,
+                                    coherence=5)
+    alg = make(name, acfg, ccfg, plan)
+    solver = make_solver(prob, acfg.rho)
+    eval_fn = lambda th: {"loss": prob["f_total"](th)}
+    kw = dict(eval_fn=eval_fn, eval_every=3)
+
+    h_loop = train(alg, prob["theta0"], solver, prob["grad_fn"], 17,
+                   jax.random.PRNGKey(1), driver="loop", **kw)
+    h_scan = train(alg, prob["theta0"], solver, prob["grad_fn"], 17,
+                   jax.random.PRNGKey(1), driver="scan", **kw)
+
+    assert h_scan.loss == h_loop.loss
+    assert h_scan.channel_uses == h_loop.channel_uses
+    assert set(h_scan.extra) == set(h_loop.extra)
+    for k in h_loop.extra:
+        assert h_scan.extra[k] == h_loop.extra[k], k
+
+
+def test_scan_trainer_dispatch_count(monkeypatch):
+    """300 rounds at coherence 10 must dispatch ≤ 30 chunks (one host
+    transfer per chunk, not per round)."""
+    import repro.train.fl_trainer as flt
+
+    prob = make_linreg(KEY)
+    acfg, ccfg, plan = default_cfgs(prob["W"], prob["d"], noisy=False,
+                                    coherence=10)
+    alg = make("afadmm", acfg, ccfg, plan)
+    solver = make_solver(prob, acfg.rho)
+
+    calls = {"n": 0}
+    orig = flt._record_metrics
+
+    def counting(hist, metrics):
+        calls["n"] += 1
+        return orig(hist, metrics)
+
+    monkeypatch.setattr(flt, "_record_metrics", counting)
+    hist = train(alg, prob["theta0"], solver, prob["grad_fn"], 300,
+                 jax.random.PRNGKey(1), driver="scan")
+    assert len(hist.channel_uses) == 300
+    assert calls["n"] <= 300 // ccfg.coherence_iters
+
+
+def test_scan_rounds_entry_point_direct():
+    """algorithm.scan_rounds is usable standalone and matches .round loops."""
+    prob = make_linreg(KEY)
+    acfg, ccfg, plan = default_cfgs(prob["W"], prob["d"], noisy=False)
+    alg = make("afadmm", acfg, ccfg, plan)
+    solver = make_solver(prob, acfg.rho)
+    key = jax.random.PRNGKey(2)
+
+    st_a = alg.init(jax.random.PRNGKey(1), prob["theta0"])
+    st_b = st_a
+    round_j = jax.jit(
+        lambda k, s: alg.round(k, s, solver, prob["grad_fn"]))
+    for r in range(8):
+        st_a, _ = round_j(jax.random.fold_in(key, r + 1), st_a)
+    st_b, metrics = jax.jit(
+        lambda k, s: alg.scan_rounds(k, s, solver, prob["grad_fn"], 8)
+    )(key, st_b)
+    np.testing.assert_array_equal(np.asarray(st_a.Theta),
+                                  np.asarray(st_b.Theta))
+    assert metrics["channel_uses"].shape == (8,)
