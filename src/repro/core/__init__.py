@@ -6,6 +6,8 @@ from repro.core.channel import (ChannelBlock, ChannelConfig, awgn,  # noqa: F401
                                 init_channel, rayleigh, shannon_rate,
                                 step_channel)
 from repro.core.cplx import Complex  # noqa: F401
+from repro.core.packing import (PackSpec, build_packspec, pack,  # noqa: F401
+                                pack_cplx, unpack, unpack_cplx)
 from repro.core.sketch import SketchPlan, decode, encode  # noqa: F401
 from repro.core.subcarrier import SubcarrierPlan, flatten  # noqa: F401
 from repro.core.transport import ota_uplink, resolve_backend  # noqa: F401

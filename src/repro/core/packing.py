@@ -1,0 +1,135 @@
+"""Packed-buffer pytree transport: flatten a parameter pytree into ONE
+contiguous ``(..., D)`` f32 buffer so the whole OTA uplink is a single
+kernel chain per round instead of one per leaf.
+
+The paper (Alg. 1) and the OTA literature (arXiv:1907.09769, 2508.17697)
+treat the uplink as one flat d-dimensional analog vector — every worker's
+full update occupies one analog channel use.  A :class:`PackSpec` is the
+static (trace-time) description of that vector: per-leaf offsets/sizes into
+the packed buffer, plus the shapes/dtypes needed to unpack the received
+global model bit-compatibly.
+
+Built once per model (shapes are static under jit, so "once" means once per
+trace); ``pack``/``unpack`` lower to reshape+concatenate / slice+reshape —
+pure layout ops XLA fuses into the neighbouring kernels.
+
+Leaves may carry leading batch dims (the worker axis ``W``): a leaf of shape
+``lead + spec.shapes[i]`` packs into ``lead + (sizes[i],)``; all leaves of
+one ``pack`` call must share ``lead``.  Complex trees (duals λ, fading h)
+pack planewise via :func:`pack_cplx` / :func:`unpack_cplx`.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cplx import Complex
+
+Array = jax.Array
+PyTree = Any
+
+
+def _is_cplx(x) -> bool:
+    return isinstance(x, Complex)
+
+
+class PackSpec(NamedTuple):
+    """Static layout of a pytree inside a flat packed buffer."""
+
+    treedef: Any                          # pytree structure (Complex = leaf)
+    shapes: Tuple[Tuple[int, ...], ...]   # per-leaf element shape (no batch dims)
+    dtypes: Tuple[Any, ...]               # per-leaf dtype (for bit-compatible unpack)
+    offsets: Tuple[int, ...]              # start of each leaf in the packed axis
+    sizes: Tuple[int, ...]                # elements per leaf
+    d: int                                # total packed length Σ sizes
+
+    @property
+    def n_leaves(self) -> int:
+        return len(self.shapes)
+
+
+def _leaf_meta(leaf, batch_dims: int):
+    if isinstance(leaf, Complex):
+        shape, dtype = leaf.re.shape, leaf.re.dtype
+    else:
+        shape, dtype = leaf.shape, leaf.dtype
+    eshape = tuple(shape[batch_dims:])
+    size = 1
+    for s in eshape:
+        size *= s
+    return eshape, dtype, size
+
+
+def build_packspec(tree: PyTree, batch_dims: int = 0) -> PackSpec:
+    """Layout of ``tree``'s leaves (skipping ``batch_dims`` leading axes,
+    e.g. 1 for worker-major ``(W, ...)`` trees) inside one packed vector."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=_is_cplx)
+    shapes, dtypes, offsets, sizes = [], [], [], []
+    off = 0
+    for leaf in leaves:
+        eshape, dtype, size = _leaf_meta(leaf, batch_dims)
+        shapes.append(eshape)
+        dtypes.append(dtype)
+        offsets.append(off)
+        sizes.append(size)
+        off += size
+    return PackSpec(treedef=treedef, shapes=tuple(shapes),
+                    dtypes=tuple(dtypes), offsets=tuple(offsets),
+                    sizes=tuple(sizes), d=off)
+
+
+def _lead(spec: PackSpec, leaf: Array, i: int) -> Tuple[int, ...]:
+    nb = leaf.ndim - len(spec.shapes[i])
+    if nb < 0 or tuple(leaf.shape[nb:]) != spec.shapes[i]:
+        raise ValueError(
+            f"leaf {i} shape {leaf.shape} does not end with spec shape "
+            f"{spec.shapes[i]}")
+    return tuple(leaf.shape[:nb])
+
+
+def pack(spec: PackSpec, tree: PyTree) -> Array:
+    """``tree`` -> ``lead + (spec.d,)`` f32 buffer (row-major per leaf)."""
+    leaves = jax.tree_util.tree_flatten(tree, is_leaf=_is_cplx)[0]
+    if len(leaves) != spec.n_leaves:
+        raise ValueError(f"tree has {len(leaves)} leaves, spec expects "
+                         f"{spec.n_leaves}")
+    flat = [l.astype(jnp.float32).reshape(_lead(spec, l, i) + (-1,))
+            for i, l in enumerate(leaves)]
+    return flat[0] if len(flat) == 1 else jnp.concatenate(flat, axis=-1)
+
+
+def unpack(spec: PackSpec, buf: Array, cast: bool = True) -> PyTree:
+    """``lead + (spec.d,)`` buffer -> pytree; ``cast=True`` restores the
+    recorded leaf dtypes, ``cast=False`` keeps the buffer dtype (the analog
+    path's f32)."""
+    if buf.shape[-1] != spec.d:
+        raise ValueError(f"buffer last dim {buf.shape[-1]} != spec.d {spec.d}")
+    lead = buf.shape[:-1]
+    out = []
+    for i in range(spec.n_leaves):
+        piece = jax.lax.slice_in_dim(buf, spec.offsets[i],
+                                     spec.offsets[i] + spec.sizes[i], axis=-1)
+        piece = piece.reshape(lead + spec.shapes[i])
+        out.append(piece.astype(spec.dtypes[i]) if cast else piece)
+    return jax.tree_util.tree_unflatten(spec.treedef, out)
+
+
+def pack_cplx(spec: PackSpec, tree: PyTree) -> Complex:
+    """Complex-leaf tree -> Complex of packed planes."""
+    flats = jax.tree_util.tree_flatten(tree, is_leaf=_is_cplx)[0]
+    re = jax.tree_util.tree_unflatten(spec.treedef, [c.re for c in flats])
+    im = jax.tree_util.tree_unflatten(spec.treedef, [c.im for c in flats])
+    return Complex(pack(spec, re), pack(spec, im))
+
+
+def unpack_cplx(spec: PackSpec, buf: Complex) -> PyTree:
+    """Complex packed planes -> tree of Complex leaves (f32: duals/fading
+    always live in f32, never the parameter dtype)."""
+    re = unpack(spec, buf.re, cast=False)
+    im = unpack(spec, buf.im, cast=False)
+    re_l = jax.tree_util.tree_flatten(re)[0]
+    im_l = jax.tree_util.tree_flatten(im)[0]
+    return jax.tree_util.tree_unflatten(
+        spec.treedef, [Complex(r, i) for r, i in zip(re_l, im_l)])

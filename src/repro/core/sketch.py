@@ -94,30 +94,98 @@ def _flat_index(shape) -> Array:
     return idx
 
 
-def hashed_bucket(shape, d_s: int, seed: int) -> Array:
-    return (_hash_u32(_flat_index(shape), seed)
-            % jnp.uint32(d_s)).astype(jnp.int32)
+def hashed_bucket(shape, d_s: int, seed: int, offset: int = 0) -> Array:
+    """``offset`` shifts the hashed element index — element ``i`` of a leaf
+    that starts at packed offset ``o`` hashes as global index ``o + i``, so
+    leafwise encodes compose into ONE global codec (see encode_packed)."""
+    idx = _flat_index(shape) + jnp.uint32(offset)
+    return (_hash_u32(idx, seed) % jnp.uint32(d_s)).astype(jnp.int32)
 
 
-def hashed_sign(shape, seed: int) -> Array:
-    bit = (_hash_u32(_flat_index(shape), seed + 101) >> 7) & jnp.uint32(1)
+def hashed_sign(shape, seed: int, offset: int = 0) -> Array:
+    idx = _flat_index(shape) + jnp.uint32(offset)
+    bit = (_hash_u32(idx, seed + 101) >> 7) & jnp.uint32(1)
     return 2.0 * bit.astype(jnp.float32) - 1.0
 
 
-def encode_hashed(v: Array, d_s: int, seed: int) -> Array:
+def encode_hashed(v: Array, d_s: int, seed: int, offset: int = 0) -> Array:
     """(any shape) -> (d_s,) count sketch with hash-generated buckets/signs.
 
     Implemented as a shape-preserving scatter-add: the input keeps its
     sharding and XLA reduces the (d_s,) result with one psum.
     """
-    signed = v.astype(jnp.float32) * hashed_sign(v.shape, seed)
-    bucket = hashed_bucket(v.shape, d_s, seed)
+    signed = v.astype(jnp.float32) * hashed_sign(v.shape, seed, offset)
+    bucket = hashed_bucket(v.shape, d_s, seed, offset)
     out = jnp.zeros((d_s,), jnp.float32)
     return out.at[bucket].add(signed)
 
 
-def decode_hashed(s: Array, shape, seed: int) -> Array:
+def decode_hashed(s: Array, shape, seed: int, offset: int = 0) -> Array:
     """(d_s,) -> (shape) transposed-sketch (unbiased) estimate."""
     if isinstance(shape, int):
         shape = (shape,)
-    return s[hashed_bucket(shape, s.shape[-1], seed)] * hashed_sign(shape, seed)
+    return s[hashed_bucket(shape, s.shape[-1], seed, offset)] \
+        * hashed_sign(shape, seed, offset)
+
+
+def encode_hashed_tree(tree, spec, d_s: int, seed: int) -> Array:
+    """ONE global count sketch of a whole pytree: Σ_leaf encode(leaf,
+    offset=spec.offsets[leaf]).
+
+    Mathematically identical to ``encode_packed(pack(spec, tree))`` (tested)
+    but computed leafwise with shape-preserving scatter-adds, so arbitrary
+    (FSDP-)shardings survive — no flatten/concatenate of the host tensors.
+    ``spec`` is a :class:`repro.core.packing.PackSpec`.
+    """
+    leaves = jax.tree_util.tree_leaves(tree)
+    out = jnp.zeros((d_s,), jnp.float32)
+    for leaf, off in zip(leaves, spec.offsets):
+        out = out + encode_hashed(leaf, d_s, seed, offset=off)
+    return out
+
+
+def decode_hashed_tree(s: Array, spec, seed: int):
+    """(d_s,) -> pytree of f32 leaves shaped ``spec.shapes`` — the leafwise
+    (sharding-preserving) twin of ``unpack(spec, decode_packed(s))``."""
+    leaves = [decode_hashed(s, shape, seed, offset=off)
+              for shape, off in zip(spec.shapes, spec.offsets)]
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Packed (global) hashed codec — ONE sketch over a packed parameter buffer.
+#
+# The packed OTA path (core/packing.py) flattens the whole pytree into one
+# contiguous (D,) vector; the codec hashes the GLOBAL packed index, so a
+# single encode/decode covers every leaf (one scatter-add / one gather per
+# round instead of a per-leaf Python loop).  ``offset`` shifts the hashed
+# index: encoding a leaf with offset = its PackSpec offset contributes
+# exactly what the global encode of the packed buffer would — the identity
+# the parity tests pin (Σ_leaf encode_packed(leaf, off_leaf) ==
+# encode_packed(packed, 0)).
+# ---------------------------------------------------------------------------
+
+
+def packed_bucket(n: int, d_s: int, seed: int, offset: int = 0) -> Array:
+    """Bucket of packed elements [offset, offset+n): (n,) int32 in [0, d_s)."""
+    return hashed_bucket((n,), d_s, seed, offset)
+
+
+def packed_sign(n: int, seed: int, offset: int = 0) -> Array:
+    return hashed_sign((n,), seed, offset)
+
+
+def encode_packed(v: Array, d_s: int, seed: int, offset: int = 0) -> Array:
+    """(..., n) packed slice -> (..., d_s) global count sketch."""
+    n = v.shape[-1]
+    signed = v.astype(jnp.float32) * packed_sign(n, seed, offset)
+    bucket = packed_bucket(n, d_s, seed, offset)
+    out = jax.ops.segment_sum(jnp.moveaxis(signed, -1, 0), bucket,
+                              num_segments=d_s)
+    return jnp.moveaxis(out, 0, -1)
+
+
+def decode_packed(s: Array, n: int, seed: int, offset: int = 0) -> Array:
+    """(..., d_s) -> (..., n) transposed-sketch estimate of a packed slice."""
+    return s[..., packed_bucket(n, s.shape[-1], seed, offset)] \
+        * packed_sign(n, seed, offset)

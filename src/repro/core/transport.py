@@ -34,7 +34,7 @@ full complex superposition).
 from __future__ import annotations
 
 import os
-from typing import Callable, Optional, Tuple
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -145,6 +145,60 @@ def receive(signals: Complex, h: Complex, key: Array, ccfg: ChannelConfig,
     return demodulate(y_re, p2, noise.re, inv_alpha, backend=backend)
 
 
+class OtaAccumulator(NamedTuple):
+    """Running receiver state for a worker-at-a-time uplink.
+
+    When workers are time-multiplexed (the sketched LLM trainer's worker
+    ``lax.scan``) the superposition Σ_n h_n⊙s_n cannot be a single axis-0
+    reduction — it is an accumulation across scan steps.  The accumulator
+    carries the two running sums the receiver needs; the fused demodulate
+    (:func:`ota_receive_accumulated`) then runs ONCE per round.
+    """
+
+    y_re: Array    # running Re{Σ_n h_n ⊙ s_n}
+    sumh2: Array   # running Σ_n |h_n|² (the pilot aggregate)
+
+
+def ota_accumulate_init(shape, dtype=jnp.float32) -> OtaAccumulator:
+    return OtaAccumulator(y_re=jnp.zeros(shape, dtype),
+                          sumh2=jnp.zeros(shape, dtype))
+
+
+def ota_accumulate(acc: OtaAccumulator, signal: Complex, h: Complex,
+                   *, backend: Optional[str] = None) -> OtaAccumulator:
+    """Add ONE worker's contribution to the running superposition.
+
+    y_re += Re{h ⊙ s};  Σ|h|² += |h|².  Elementwise over the worker's
+    signal shape — the pallas backend fuses both updates into a single
+    HBM pass over the four input planes.
+    """
+    if resolve_backend(backend) == "pallas":
+        from repro.kernels import ota as _k
+        shape = acc.y_re.shape
+        y, p2 = _k.ota_accumulate(
+            acc.y_re.reshape(-1), acc.sumh2.reshape(-1),
+            signal.re.reshape(-1), signal.im.reshape(-1),
+            h.re.reshape(-1), h.im.reshape(-1), interpret=_interpret())
+        return OtaAccumulator(y.reshape(shape), p2.reshape(shape))
+    return OtaAccumulator(
+        y_re=acc.y_re + (h.re * signal.re - h.im * signal.im),
+        sumh2=acc.sumh2 + cplx.abs2(h))
+
+
+def ota_receive_accumulated(acc: OtaAccumulator, key: Array,
+                            ccfg: ChannelConfig,
+                            inv_alpha: Array | float = 1.0, *,
+                            backend: Optional[str] = None) -> Array:
+    """Demodulate an accumulated superposition: Θ = (y + z/α)/Σ|h|².
+
+    The worker-at-a-time twin of :func:`receive` — one fused kernel, one
+    noise draw over the full (packed) vector, per round.
+    """
+    noise = matched_filter_noise(key, acc.y_re.shape, ccfg)
+    return demodulate(acc.y_re, acc.sumh2, noise.re, inv_alpha,
+                      backend=backend)
+
+
 def dual_update(lam: Complex, h: Complex, theta: Array, Theta: Array,
                 rho: float, noise_re: Array | float = 0.0,
                 *, backend: Optional[str] = None) -> Complex:
@@ -252,7 +306,9 @@ def ota_uplink(theta: Array, lam: Complex, h: Complex, key: Array,
     if power_control:
         inv_alpha = power_scale(signals, ccfg, min_reduce_fn=min_reduce_fn)
     else:
-        inv_alpha = jnp.asarray(1.0, theta.dtype)
+        # f32 like the rest of the analog path (a bf16 theta must not
+        # down-cast the noise/α arithmetic in demodulate)
+        inv_alpha = jnp.asarray(1.0, jnp.float32)
     Theta = receive(signals, h, key, ccfg, inv_alpha,
                     reduce_fn=reduce_fn, backend=backend)
     return Theta, inv_alpha

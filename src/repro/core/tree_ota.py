@@ -3,19 +3,16 @@
 ``core.admm`` works on flat ``(W, d)`` vectors (the paper's own scale);
 LLM-scale parameters are pytrees whose leaves carry a leading worker dim
 ``W`` sharded over the mesh ``data`` axis.  The OTA math is elementwise, so
-it generalises leafwise — every leaf goes through the SAME backend-dispatched
-:mod:`repro.core.transport` primitives the flat path uses; only two
-reductions cross leaves/workers:
+the pytree round *packs* the leaves into one contiguous ``(W, D)`` f32
+buffer (:mod:`repro.core.packing`) and runs the flat transport path on it —
+exactly one fused receive kernel chain, one matched-filter noise draw, and
+one min-α consensus per round, however many leaves the model has.  The
+historical per-leaf loop survives as :func:`ota_tree_round_leafwise` (the
+reference the packed path is pinned against).
 
-* the **superposition** Σ_n h⊙s (a per-leaf sum over the worker axis — XLA
-  lowers it to the all-reduce the roofline accounts as the single "channel
-  use");
-* the **power control** min_n α_n (energy summed across *all* leaves per
-  worker, then a min over workers).
-
-Fading is drawn per (worker, element) exactly as in the flat version; each
-leaf keeps an independent subcarrier block.  OTA arithmetic runs in f32
-regardless of param dtype (the analog signal path), duals are f32.
+Fading is drawn per (worker, element) exactly as before; OTA arithmetic
+runs in f32 regardless of param dtype (the analog signal path), duals are
+f32.
 """
 from __future__ import annotations
 
@@ -28,6 +25,8 @@ from repro.core import cplx, transport
 from repro.core.admm import AdmmConfig
 from repro.core.channel import ChannelConfig, rayleigh
 from repro.core.cplx import Complex
+from repro.core.packing import (build_packspec, pack, pack_cplx, unpack,
+                                unpack_cplx)
 
 Array = jax.Array
 PyTree = Any
@@ -122,17 +121,76 @@ def _tree_size(tree: PyTree) -> int:
     return total
 
 
+def _packing_pays_off() -> bool:
+    """Packed uplink auto rule: pack unless an active mesh model-shards the
+    leaves' trailing dims — then the concatenate forces GSPMD to reshard
+    every plane every round (collective-permute/all-to-all storms; measured
+    ~2x compile and ~10x HBM bytes on the 16x16 dryrun).  Shard-local
+    packing inside shard_map is the ROADMAP fix; until then model-parallel
+    meshes keep the leafwise path."""
+    from repro.models.sharding import current_mesh
+    mesh = current_mesh()
+    return mesh is None or dict(mesh.shape).get("model", 1) <= 1
+
+
 def ota_tree_round(theta: PyTree, lam: PyTree, h: PyTree, key: Array,
                    acfg: AdmmConfig, ccfg: ChannelConfig,
                    backend: Optional[str] = None,
                    reduce_fn: Optional[Callable[[Array], Array]] = None,
                    min_reduce_fn: Optional[Callable[[Array], Array]] = None,
+                   packed: Optional[bool] = None,
                    ) -> Tuple[PyTree, PyTree, dict]:
-    """Uplink + global + dual for one round (post-local-steps).
+    """Uplink + global + dual for one round (post-local-steps), packed.
 
-    Returns (Theta_new, lam_new, metrics).  theta leaves: (W, ...).  The
-    whole signal chain is the shared transport layer; power control couples
-    the leaves (energy budget spans the full parameter vector).
+    The pytree is flattened through a :class:`~repro.core.packing.PackSpec`
+    into one contiguous ``(W, D)`` f32 buffer so the round issues exactly
+    ONE ``transport.ota_uplink`` (one fused receive kernel chain, one noise
+    draw over the packed vector, one min-α consensus) and one dual update —
+    regardless of leaf count.  This is the paper-faithful reading of Alg. 1:
+    the whole update is a single d-dimensional analog channel use.
+
+    Bit-exactness contract: on a noise-free channel this equals
+    :func:`ota_tree_round_leafwise` bitwise (the jnp reference reduces the
+    same values in the same worker order).  Under AWGN the *distribution* is
+    unchanged but the draw differs: one PRNG sample of shape ``(D,)``
+    replaces the historical per-leaf splits — pinned in
+    ``tests/test_transport.py``.
+
+    Returns (Theta_new, lam_new, metrics).  theta leaves: (W, ...).
+
+    ``packed=None`` auto-resolves via :func:`_packing_pays_off` (packed
+    everywhere except under an active model-parallel mesh, where the
+    concatenate would reshard every plane); ``True``/``False`` force it.
+    """
+    if not (_packing_pays_off() if packed is None else packed):
+        return ota_tree_round_leafwise(theta, lam, h, key, acfg, ccfg,
+                                       backend=backend, reduce_fn=reduce_fn,
+                                       min_reduce_fn=min_reduce_fn)
+    spec = build_packspec(theta, batch_dims=1)
+    theta_p = pack(spec, theta)                    # (W, D) f32
+    lam_p = pack_cplx(spec, lam)
+    h_p = pack_cplx(spec, h)
+    Theta_p, inv_alpha = transport.ota_uplink(
+        theta_p, lam_p, h_p, key, acfg.rho, ccfg,
+        power_control=acfg.power_control, reduce_fn=reduce_fn,
+        min_reduce_fn=min_reduce_fn, backend=backend)
+    lam_new_p = transport.dual_update(lam_p, h_p, theta_p, Theta_p, acfg.rho,
+                                      backend=backend)
+    Theta_new = unpack(spec, Theta_p, cast=False)  # analog path stays f32
+    lam_new = unpack_cplx(spec, lam_new_p)
+    metrics = {"inv_alpha": jnp.asarray(inv_alpha)}
+    return Theta_new, lam_new, metrics
+
+
+def ota_tree_round_leafwise(theta: PyTree, lam: PyTree, h: PyTree, key: Array,
+                            acfg: AdmmConfig, ccfg: ChannelConfig,
+                            backend: Optional[str] = None,
+                            reduce_fn: Optional[Callable[[Array], Array]] = None,
+                            min_reduce_fn: Optional[Callable[[Array], Array]] = None,
+                            ) -> Tuple[PyTree, PyTree, dict]:
+    """Reference per-leaf round: one receive chain and one noise key per
+    leaf (the historical semantics).  Kept as the parity contract for the
+    packed path — and for callers that need per-leaf noise reproducibility.
     """
     rho = acfg.rho
     signals = _modulate_tree(theta, lam, h, rho, backend)

@@ -55,6 +55,14 @@ def _receive_kernel(ia_ref, sre_ref, sim_ref, hre_ref, him_ref, nre_ref,
     out_ref[...] = y / jnp.maximum(p2, 1e-12)         # Θ (Eq. 24)
 
 
+def _accumulate_kernel(yacc_ref, p2acc_ref, sre_ref, sim_ref, hre_ref,
+                       him_ref, yout_ref, p2out_ref):
+    hre = hre_ref[...]
+    him = him_ref[...]
+    yout_ref[...] = yacc_ref[...] + hre * sre_ref[...] - him * sim_ref[...]
+    p2out_ref[...] = p2acc_ref[...] + hre * hre + him * him
+
+
 def _grid_spec(n_inputs: int, rows: int, block_rows: int):
     grid = (rows // block_rows,)
     spec = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
@@ -138,6 +146,35 @@ def ota_demodulate_dyn(y_re: Array, noise_re: Array, sumh2: Array,
         interpret=interpret,
     )(ia, *args)
     return out.reshape(-1)[:n]
+
+
+def ota_accumulate(y_re: Array, sumh2: Array, s_re: Array, s_im: Array,
+                   h_re: Array, h_im: Array,
+                   *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                   interpret: bool = False) -> Tuple[Array, Array]:
+    """Fused worker-at-a-time receiver update over a flat vector:
+
+        y_re  += Re{h ⊙ s} = h_re·s_re − h_im·s_im
+        Σ|h|² += h_re² + h_im²
+
+    One HBM pass over six input planes and two outputs — the per-scan-step
+    superposition of the time-multiplexed (sketched) uplink, whose final
+    demodulate then runs once per round (``ota_demodulate_dyn``).
+    """
+    n = y_re.size
+    rows = _rows_for(n, block_rows)
+    args = [_pad_2d(a.astype(jnp.float32), rows)
+            for a in (y_re, sumh2, s_re, s_im, h_re, h_im)]
+    grid, in_specs, out_spec = _grid_spec(6, rows, block_rows)
+    y, p2 = pl.pallas_call(
+        _accumulate_kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[out_spec, out_spec],
+        out_shape=[jax.ShapeDtypeStruct((rows, LANE), jnp.float32)] * 2,
+        interpret=interpret,
+    )(*args)
+    return y.reshape(-1)[:n], p2.reshape(-1)[:n]
 
 
 def ota_receive(s_re: Array, s_im: Array, h_re: Array, h_im: Array,

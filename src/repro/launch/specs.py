@@ -83,7 +83,14 @@ def _text_seq(cfg, seq: int) -> int:
 
 
 def build_train_spec(arch: str, mesh: Mesh, *, multi_pod: bool,
-                     reduced: bool = False) -> DryRunSpec:
+                     reduced: bool = False,
+                     transport_backend: Optional[str] = None,
+                     train_driver: str = "scan") -> DryRunSpec:
+    """``transport_backend`` ("jnp" | "pallas" | None = REPRO_USE_PALLAS
+    env var) and ``train_driver`` ("scan" | "loop") are per-experiment
+    fields threaded into the trainer / recorded in meta — not env-only."""
+    if train_driver not in ("scan", "loop"):
+        raise ValueError(f"unknown train driver {train_driver!r}")
     shp = SHAPES["train_4k"]
     cfg = _arch_cfg(arch, "train_4k")
     if reduced:
@@ -98,12 +105,13 @@ def build_train_spec(arch: str, mesh: Mesh, *, multi_pod: bool,
     if sketched:
         W = 8
         flcfg = FLConfig(mode="sketched", n_workers=W, local_steps=1,
-                         local_lr=1e-3, sketch_ratio=256)
+                         local_lr=1e-3, sketch_ratio=256,
+                         transport_backend=transport_backend)
         bw = gbatch // W
     else:
         W = d_n
         flcfg = FLConfig(mode="replicated", n_workers=W, local_steps=1,
-                         local_lr=1e-3)
+                         local_lr=1e-3, transport_backend=transport_backend)
         bw = gbatch // W
     acfg = AdmmConfig(rho=0.5, flip_on_change=False)
     ccfg = ChannelConfig(n_workers=W, snr_db=40.0)
@@ -156,7 +164,9 @@ def build_train_spec(arch: str, mesh: Mesh, *, multi_pod: bool,
         donate_argnums=(0,),
         meta=dict(kind="train", arch=arch, seq=seq, global_batch=gbatch,
                   fl_mode=flcfg.mode, n_workers=W,
-                  sliding_window=cfg.sliding_window),
+                  sliding_window=cfg.sliding_window,
+                  transport_backend=transport_backend,
+                  train_driver=train_driver),
     )
 
 
@@ -236,11 +246,15 @@ def input_specs(arch: str, shape_name: str = "train_4k",
 
 
 def build_spec(arch: str, shape_name: str, mesh: Mesh, *, multi_pod: bool,
-               reduced: bool = False) -> DryRunSpec:
+               reduced: bool = False,
+               transport_backend: Optional[str] = None,
+               train_driver: str = "scan") -> DryRunSpec:
     kind = SHAPES[shape_name]["kind"]
     if kind == "train":
         return build_train_spec(arch, mesh, multi_pod=multi_pod,
-                                reduced=reduced)
+                                reduced=reduced,
+                                transport_backend=transport_backend,
+                                train_driver=train_driver)
     if kind == "prefill":
         return build_prefill_spec(arch, mesh, multi_pod=multi_pod,
                                   reduced=reduced)

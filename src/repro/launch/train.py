@@ -30,6 +30,12 @@ def main() -> None:
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--mode", default="replicated",
                     choices=["replicated", "sketched"])
+    ap.add_argument("--backend", default=None, choices=["jnp", "pallas"],
+                    help="OTA transport backend (default: REPRO_USE_PALLAS "
+                         "env var)")
+    ap.add_argument("--driver", default="loop", choices=["loop", "scan"],
+                    help="round driver: python loop (one dispatch/round) or "
+                         "scan-compiled blocks of --log-every rounds")
     ap.add_argument("--rounds", type=int, default=50)
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--batch", type=int, default=2, help="per-worker batch")
@@ -50,7 +56,8 @@ def main() -> None:
     W = args.workers
 
     flcfg = FLConfig(mode=args.mode, n_workers=W,
-                     local_steps=args.local_steps, local_lr=args.local_lr)
+                     local_steps=args.local_steps, local_lr=args.local_lr,
+                     transport_backend=args.backend)
     acfg = AdmmConfig(rho=args.rho, flip_on_change=False)
     ccfg = ChannelConfig(n_workers=W, snr_db=args.snr_db,
                          coherence_iters=args.coherence)
@@ -65,11 +72,8 @@ def main() -> None:
     # zeros-initialised leaves may alias one buffer; donation needs them
     # distinct (only matters for the very first execute)
     st = jax.tree.map(jnp.array, st)
-    step = jax.jit(train_step, donate_argnums=(0,))
 
-    t0 = time.time()
-    for r in range(args.rounds):
-        kb = jax.random.fold_in(key, 1000 + r)
+    def make_batch(data, kb):
         idx = jax.random.randint(kb, (W, args.batch), 0, data.shape[1])
         batch = {"tokens": jnp.take_along_axis(
             data, idx[:, :, None], axis=1)}
@@ -79,12 +83,45 @@ def main() -> None:
         if cfg.family == "audio":
             batch["frames"] = jax.random.normal(
                 kb, (W, args.batch, cfg.frontend_tokens, cfg.d_model))
-        st, metrics = step(st, batch, jax.random.fold_in(key, 2000 + r))
-        if r % args.log_every == 0 or r == args.rounds - 1:
-            m = {k: float(v) for k, v in metrics.items()}
-            print(f"round {r:4d}  loss={m['loss']:.4f}  "
-                  f"{json.dumps({k: round(v, 4) for k, v in m.items() if k != 'loss'})}",
-                  flush=True)
+        return batch
+
+    def log(r, metrics):
+        m = {k: float(v) for k, v in metrics.items()}
+        print(f"round {r:4d}  loss={m['loss']:.4f}  "
+              f"{json.dumps({k: round(v, 4) for k, v in m.items() if k != 'loss'})}",
+              flush=True)
+
+    t0 = time.time()
+    if args.driver == "scan":
+        # batch sampling folded into the scan body: one dispatch per block
+        # instead of one per round.  Block = gcd(log_every, rounds) so every
+        # block has the SAME static length — one XLA compile even when
+        # log_every doesn't divide rounds (a ragged tail block would force a
+        # second full compile of the scanned train_step).
+        import math
+        block = math.gcd(args.log_every, args.rounds)
+
+        def block_body(data, s, r):
+            batch = make_batch(data, jax.random.fold_in(key, 1000 + r))
+            return train_step(s, batch, jax.random.fold_in(key, 2000 + r))
+
+        # data rides as a jit argument (not a closed-over constant baked
+        # into the executable)
+        run_block = jax.jit(
+            lambda d, s, rs: jax.lax.scan(
+                lambda ss, r: block_body(d, ss, r), s, rs),
+            donate_argnums=(1,))
+        for start in range(0, args.rounds, block):
+            st, ms = run_block(data, st, jnp.arange(start, start + block,
+                                                    dtype=jnp.int32))
+            log(start + block - 1, jax.tree.map(lambda x: x[-1], ms))
+    else:
+        step = jax.jit(train_step, donate_argnums=(0,))
+        for r in range(args.rounds):
+            batch = make_batch(data, jax.random.fold_in(key, 1000 + r))
+            st, metrics = step(st, batch, jax.random.fold_in(key, 2000 + r))
+            if r % args.log_every == 0 or r == args.rounds - 1:
+                log(r, metrics)
     dt = time.time() - t0
     print(f"done: {args.rounds} rounds in {dt:.1f}s "
           f"({dt / args.rounds:.2f}s/round)")

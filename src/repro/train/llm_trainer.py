@@ -13,9 +13,14 @@ Two execution modes (DESIGN.md §4):
   (qwen1.5-110b, deepseek-v3-671b; the paper's §6 "Large Models" extension).
   One FSDP-sharded global model; workers are time-multiplexed via a
   ``lax.scan`` (faithful to FL semantics: each worker's local delta is
-  computed from its own shard of data), deltas are hash-count-sketched to
-  ``d/d_sketch_ratio`` coordinates, and the full A-FADMM pipeline (modulate,
-  superpose, power-scale, demodulate, dual update) runs in sketch space.
+  computed from its own shard of data), the delta is hash-count-sketched by
+  ONE global codec over the packed index space (computed leafwise so FSDP
+  shardings survive) to ``d/d_sketch_ratio`` coordinates, and the
+  full A-FADMM pipeline runs in sketch space through the shared transport
+  layer: per-worker modulate + ``transport.ota_accumulate`` inside the scan
+  (the running superposition), then a single fused receive
+  (``transport.ota_receive_accumulated``) and a single dual update per
+  round.
 
 Both modes expose the same ``(init_fn, train_step)`` pair; ``train_step`` is
 a pure function of ``(state, batch, key)`` suitable for jit / pjit lowering
@@ -24,16 +29,17 @@ on the production mesh.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import cplx
+from repro.core import cplx, transport
 from repro.core.admm import AdmmConfig
-from repro.core.channel import ChannelConfig, awgn, rayleigh
+from repro.core.channel import ChannelConfig
 from repro.core.cplx import Complex
-from repro.core.sketch import decode_hashed, encode_hashed
+from repro.core.packing import build_packspec
+from repro.core.sketch import decode_hashed_tree, encode_hashed_tree
 from repro.core.tree_ota import (TreeChannel, TreeFLState, _zmap,
                                  init_channel_tree, ota_tree_round,
                                  step_channel_tree, tree_penalty_grad)
@@ -52,10 +58,18 @@ class FLConfig:
     local_steps: int = 1
     local_lr: float = 1e-3
     local_optimizer: str = "sgd"    # sgd | adam (adam = 2 extra per-worker copies)
-    #: sketched mode: d_s = ceil(leaf_size / ratio)
+    #: sketched mode: d_s = ceil(packed_size / ratio)
     sketch_ratio: int = 256
     #: step size applied to the decoded global sketch delta
     sketch_lr: float = 1.0
+    #: OTA transport backend for every signal primitive: "jnp" | "pallas" |
+    #: None (defer to the REPRO_USE_PALLAS env var) — per-experiment, no
+    #: longer env-only
+    transport_backend: Optional[str] = None
+    #: replicated mode: pack the pytree uplink into one (W, D) buffer
+    #: (True), keep the per-leaf reference loop (False), or auto (None:
+    #: packed except under a model-parallel mesh — see tree_ota)
+    packed_uplink: Optional[bool] = None
 
 
 def _local_opt(flcfg: FLConfig):
@@ -112,7 +126,9 @@ def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
             length=flcfg.local_steps)
 
         Theta_f32, lam_new, m = ota_tree_round(theta, state.lam, chan.h, kn,
-                                               acfg, ccfg)
+                                               acfg, ccfg,
+                                               backend=flcfg.transport_backend,
+                                               packed=flcfg.packed_uplink)
         Theta_new = _zmap(lambda T, t: T.astype(t.dtype), Theta_f32, state.Theta)
         new_state = TreeFLState(theta=theta, lam=lam_new, Theta=Theta_new,
                                 chan=chan, opt=opt_state,
@@ -142,31 +158,31 @@ def _tree_rms_gap(theta_w: PyTree, Theta: PyTree) -> Array:
 
 class SketchFLState(NamedTuple):
     Theta: PyTree       # shared global params (FSDP-sharded)
-    lam: PyTree         # Complex leaves (W, d_s_leaf) f32
-    chan: TreeChannel   # h: Complex (W, d_s_leaf)
+    lam: Complex        # packed sketch-space duals, (W, d_s) f32
+    chan: TreeChannel   # h: Complex (W, d_s) — one fading block, packed
     step: Array
 
 
-def _leaf_ds(leaf_size: int, ratio: int) -> int:
-    return max(8, -(-leaf_size // ratio))
+#: hash seed of the global packed count-sketch codec
+SKETCH_SEED = 17
+
+
+def _sketch_dim(packed_size: int, ratio: int) -> int:
+    return max(8, -(-packed_size // ratio))
 
 
 def make_sketched(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
                   ccfg: ChannelConfig):
     W = flcfg.n_workers
     ratio = flcfg.sketch_ratio
-
-    def sketch_shapes(Theta: PyTree) -> PyTree:
-        return jax.tree.map(
-            lambda l: jnp.zeros((W, _leaf_ds(l.size, ratio)), jnp.float32),
-            Theta)
+    backend = flcfg.transport_backend
 
     def init_fn(key: Array) -> SketchFLState:
         kp, kc = jax.random.split(key)
         Theta = model.init(kp)
-        proto = sketch_shapes(Theta)
-        lam = jax.tree.map(lambda l: cplx.czero(l.shape, jnp.float32), proto)
-        chan = init_channel_tree(kc, proto)
+        d_s = _sketch_dim(build_packspec(Theta).d, ratio)
+        lam = cplx.czero((W, d_s), jnp.float32)
+        chan = init_channel_tree(kc, jnp.zeros((W, d_s), jnp.float32))
         return SketchFLState(Theta=Theta, lam=lam, chan=chan,
                              step=jnp.zeros((), jnp.int32))
 
@@ -204,83 +220,57 @@ def make_sketched(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
             lambda a, b_: (a - b_).astype(jnp.float32), theta, Theta)
         return delta, losses[-1]
 
-    def encode_tree(delta: PyTree) -> PyTree:
-        leaves, treedef = jax.tree_util.tree_flatten(delta)
-        return jax.tree_util.tree_unflatten(
-            treedef, [encode_hashed(l, _leaf_ds(l.size, ratio), seed=17 + i)
-                      for i, l in enumerate(leaves)])
-
-    def decode_tree(sk: PyTree, like: PyTree) -> PyTree:
-        leaves_s, _ = jax.tree_util.tree_flatten(sk)
-        leaves_l, treedef = jax.tree_util.tree_flatten(like)
-        out = [decode_hashed(s, l.shape, seed=17 + i)
-               for i, (s, l) in enumerate(zip(leaves_s, leaves_l))]
-        return jax.tree_util.tree_unflatten(treedef, out)
-
     def train_step(state: SketchFLState, batch: PyTree, key: Array
                    ) -> Tuple[SketchFLState, dict]:
-        """batch leaves: (W, B_w, ...) — workers time-multiplexed via scan."""
+        """batch leaves: (W, B_w, ...) — workers time-multiplexed via scan.
+
+        The per-worker scan carries the RUNNING receiver state
+        (``transport.OtaAccumulator``): each step modulates that worker's
+        packed-and-sketched delta and adds its h⊙s contribution.  After the
+        scan, ONE fused receive and ONE dual update finish the round — the
+        same one-kernel-chain-per-round contract as the packed tree path.
+        """
         kc, kn = jax.random.split(key)
         chan, _ = step_channel_tree(kc, state.chan, ccfg)
         rho = acfg.rho
+        spec = build_packspec(state.Theta)      # static per trace
+        d_s = state.lam.re.shape[-1]
 
-        def per_worker(carry, xs):
-            batch_w, h_w, lam_w = xs     # h_w/lam_w: Complex (d_s,) per leaf
+        def per_worker(acc, xs):
+            batch_w, h_w, lam_w = xs            # h_w/lam_w: Complex (d_s,)
             delta, l = worker_delta(state.Theta, batch_w)
-            s_tilde = encode_tree(delta)                    # (d_s,) per leaf
-            # modulate: h*·θ̃ + λ*/ρ ; superpose: y += h ⊙ s
-            def leaf_tx(st, hh, lm):
-                sig = Complex(hh.re * st + lm.re / rho,
-                              -hh.im * st - lm.im / rho)
-                rx = cplx.cmul(hh, sig)
-                return rx, jnp.sum(cplx.abs2(sig))
-            tx = _zmap(leaf_tx, s_tilde, h_w, lam_w)
-            rx = jax.tree.map(lambda t: t[0], tx,
-                              is_leaf=lambda x: isinstance(x, tuple))
-            energy = sum(t[1] for t in jax.tree_util.tree_leaves(
-                tx, is_leaf=lambda x: isinstance(x, tuple)))
-            return carry, (rx, energy, s_tilde, l)
+            # ONE global codec over the packed index space, computed
+            # leafwise so the FSDP-sharded delta never materialises flat
+            s_tilde = encode_hashed_tree(delta, spec, d_s, SKETCH_SEED)
+            sig = transport.modulate(s_tilde, lam_w, h_w, rho,
+                                     backend=backend)
+            acc = transport.ota_accumulate(acc, sig, h_w, backend=backend)
+            energy = jnp.sum(cplx.abs2(sig))
+            return acc, (s_tilde, energy, l)
 
-        h_stacked = chan.h               # Complex leaves (W, d_s)
-        lam_stacked = state.lam
-        _, (rx_w, energy_w, s_w, losses) = jax.lax.scan(
-            per_worker, None, (batch, h_stacked, lam_stacked))
+        acc, (s_w, energy_w, losses) = jax.lax.scan(
+            per_worker, transport.ota_accumulate_init((d_s,)),
+            (batch, chan.h, state.lam))
 
-        # aggregate over workers (the single analog channel use)
-        y = _zmap(lambda r: cplx.csum(r, axis=0), rx_w)
-        sumh2 = _zmap(lambda hh: jnp.sum(cplx.abs2(hh), axis=0), h_stacked)
-        d_total = sum(l.shape[-1] for l in jax.tree_util.tree_leaves(
-            sumh2))
-        budget = ccfg.transmit_power * d_total
-        alpha = jnp.min(jnp.sqrt(budget / jnp.maximum(energy_w, 1e-30)))
-        inv_alpha = 1.0 / alpha
+        # min-α power consensus over the workers' sketch-space energies
+        budget = ccfg.transmit_power * d_s
+        inv_alpha = transport.inv_alpha_from_energy(energy_w, budget)
 
-        from repro.core.tree_ota import _leaf_keys
-        keys = iter(_leaf_keys(kn, y))
+        # the single analog channel use: one fused receive over (d_s,)
+        Theta_s = transport.ota_receive_accumulated(acc, kn, ccfg, inv_alpha,
+                                                    backend=backend)
+        lam_new = transport.dual_update(state.lam, chan.h, s_w, Theta_s, rho,
+                                        backend=backend)
 
-        def leaf_demod(yy: Complex, p2: Array) -> Array:
-            re = yy.re
-            if ccfg.noisy:
-                z = awgn(next(keys), re.shape, ccfg.noise_var_matched)
-                re = re + z.re * inv_alpha
-            return re / jnp.maximum(p2, 1e-12)
-
-        Theta_s = _zmap(leaf_demod, y, sumh2)               # global sketch
-
-        def leaf_dual(lm: Complex, hh: Complex, sw: Array, Ts: Array) -> Complex:
-            r = sw - Ts[None]
-            return Complex(lm.re + rho * hh.re * r, lm.im + rho * hh.im * r)
-
-        lam_new = _zmap(leaf_dual, lam_stacked, h_stacked, s_w, Theta_s)
-
-        g_delta = decode_tree(Theta_s, state.Theta)
+        g_delta = decode_hashed_tree(Theta_s, spec, SKETCH_SEED)
         Theta_new = jax.tree.map(
             lambda p, dg: p + flcfg.sketch_lr * dg.astype(p.dtype),
             state.Theta, g_delta)
 
         new_state = SketchFLState(Theta=Theta_new, lam=lam_new, chan=chan,
                                   step=state.step + 1)
-        metrics = {"loss": jnp.mean(losses), "inv_alpha": inv_alpha}
+        metrics = {"loss": jnp.mean(losses),
+                   "inv_alpha": jnp.asarray(inv_alpha)}
         return new_state, metrics
 
     return init_fn, train_step

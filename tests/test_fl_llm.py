@@ -75,6 +75,103 @@ def test_tree_ota_ideal_channel_equals_digital_consensus():
                                    atol=1e-6)
 
 
+def test_sketched_end_to_end_ota_math():
+    """One sketched train_step equals a transparent hand-rolled reference of
+    the full A-FADMM-CS pipeline: local GD deltas -> pack -> global count
+    sketch -> modulate -> accumulated superposition -> min-α -> demodulate
+    -> dual update -> decode -> apply.  Noise-free channel, fixed keys."""
+    from repro.core.packing import build_packspec, pack
+    from repro.core.sketch import packed_bucket, packed_sign
+    from repro.core.tree_ota import step_channel_tree
+    from repro.models.registry import Model
+    from repro.train.llm_trainer import SKETCH_SEED, make_sketched
+
+    d_in, d_out, Bw = 4, 3, 5
+    k = jax.random.PRNGKey(7)
+
+    def init(key):
+        kw, _ = jax.random.split(key)
+        return {"w": jax.random.normal(kw, (d_in, d_out)) * 0.3,
+                "b": jnp.zeros((d_out,))}
+
+    def loss(p, batch):
+        pred = batch["x"] @ p["w"] + p["b"]
+        return jnp.mean((pred - batch["y"]) ** 2), {}
+
+    model = Model(cfg=None, init=init, forward=None, loss=loss,
+                  init_cache=None, decode_step=None)
+    flcfg = FLConfig(mode="sketched", n_workers=W, local_steps=2,
+                     local_lr=1e-2, sketch_ratio=2, sketch_lr=0.7)
+    acfg = AdmmConfig(rho=0.5, flip_on_change=False)
+    ccfg = ChannelConfig(n_workers=W, noisy=False, snr_db=20.0)
+    init_fn, train_step = make_sketched(model, flcfg, acfg, ccfg)
+
+    batch = {"x": jax.random.normal(k, (W, Bw, d_in)),
+             "y": jax.random.normal(jax.random.fold_in(k, 1), (W, Bw, d_out))}
+    st = init_fn(KEY)
+    # make duals non-trivial so the dual/modulate terms are exercised
+    st = st._replace(lam=cplx.Complex(
+        0.2 * jax.random.normal(jax.random.fold_in(k, 2), st.lam.re.shape),
+        0.2 * jax.random.normal(jax.random.fold_in(k, 3), st.lam.im.shape)))
+    step_key = jax.random.fold_in(KEY, 42)
+    new_state, metrics = train_step(st, batch, step_key)
+
+    # ---- reference ----
+    kc, _kn = jax.random.split(step_key)
+    chan, _ = step_channel_tree(kc, st.chan, ccfg)
+    h = chan.h                                     # Complex (W, d_s)
+    spec = build_packspec(st.Theta)
+    D, d_s = spec.d, st.lam.re.shape[-1]
+    bucket = packed_bucket(D, d_s, SKETCH_SEED)
+    sign = packed_sign(D, SKETCH_SEED)
+    rho = acfg.rho
+
+    y = jnp.zeros((d_s,))
+    sumh2 = jnp.zeros((d_s,))
+    s_all, energies = [], []
+    for w in range(W):
+        theta = st.Theta
+        for _ in range(flcfg.local_steps):
+            g = jax.grad(lambda p: loss(p, jax.tree.map(
+                lambda l: l[w], batch))[0])(theta)
+            theta = jax.tree.map(lambda p, gg: p - flcfg.local_lr * gg,
+                                 theta, g)
+        delta = pack(spec, jax.tree.map(lambda a, b: a - b, theta, st.Theta))
+        s_w = jnp.zeros((d_s,)).at[bucket].add(delta * sign)
+        sig_re = h.re[w] * s_w + st.lam.re[w] / rho
+        sig_im = -h.im[w] * s_w - st.lam.im[w] / rho
+        y = y + h.re[w] * sig_re - h.im[w] * sig_im
+        sumh2 = sumh2 + h.re[w] ** 2 + h.im[w] ** 2
+        s_all.append(s_w)
+        energies.append(jnp.sum(sig_re ** 2 + sig_im ** 2))
+    energies = jnp.stack(energies)
+    alpha = jnp.min(jnp.sqrt(ccfg.transmit_power * d_s
+                             / jnp.maximum(energies, 1e-30)))
+    Theta_s = y / jnp.maximum(sumh2, 1e-12)        # noise-free demod
+    s_stack = jnp.stack(s_all)
+    r = s_stack - Theta_s[None]
+    lam_want = cplx.Complex(st.lam.re + rho * h.re * r,
+                            st.lam.im + rho * h.im * r)
+    g_delta = Theta_s[bucket] * sign
+    # unpack by spec offsets (sorted-key order, matching tree_flatten)
+    leaves = jax.tree_util.tree_leaves(st.Theta)
+    rebuilt = []
+    for i, l in enumerate(leaves):
+        piece = g_delta[spec.offsets[i]:spec.offsets[i] + spec.sizes[i]]
+        rebuilt.append(l + flcfg.sketch_lr * piece.reshape(l.shape))
+    Theta_want = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(st.Theta), rebuilt)
+
+    TOL = dict(rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(metrics["inv_alpha"]), float(1.0 / alpha),
+                               **TOL)
+    np.testing.assert_allclose(new_state.lam.re, lam_want.re, **TOL)
+    np.testing.assert_allclose(new_state.lam.im, lam_want.im, **TOL)
+    for got, want in zip(jax.tree_util.tree_leaves(new_state.Theta),
+                         jax.tree_util.tree_leaves(Theta_want)):
+        np.testing.assert_allclose(got, want, **TOL)
+
+
 def test_sketched_state_is_small():
     """A-FADMM-CS: per-worker dual state is ~P/ratio, not P."""
     m, batch, init_fn, _ = _setup("sketched")

@@ -1,0 +1,159 @@
+"""PackSpec contract: packing is a bit-exact, dtype-restoring layout op,
+and the global packed sketch codec is the offset-shifted sum of per-leaf
+codecs (the identity the packed trainer relies on)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cplx
+from repro.core.packing import (build_packspec, pack, pack_cplx, unpack,
+                                unpack_cplx)
+from repro.core.sketch import (decode_packed, encode_hashed, encode_packed,
+                               packed_bucket, packed_sign)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tree(W=None):
+    """Mixed-dtype/shape tree; W=None -> no worker dim."""
+    lead = () if W is None else (W,)
+    k = jax.random.split(KEY, 4)
+    return {
+        "emb": jax.random.normal(k[0], lead + (7, 3)).astype(jnp.bfloat16),
+        "w": jax.random.normal(k[1], lead + (5,)),
+        "scale": jax.random.normal(k[2], lead),            # scalar leaf
+        "blk": {"a": jax.random.normal(k[3], lead + (2, 2, 2))},
+    }
+
+
+@pytest.mark.parametrize("W", [None, 4])
+def test_pack_unpack_roundtrip_bit_exact(W):
+    tree = _tree(W)
+    bd = 0 if W is None else 1
+    spec = build_packspec(tree, batch_dims=bd)
+    assert spec.d == 7 * 3 + 5 + 1 + 8
+    buf = pack(spec, tree)
+    assert buf.shape == (() if W is None else (W,)) + (spec.d,)
+    assert buf.dtype == jnp.float32
+    out = unpack(spec, buf)
+    for name in ("emb", "w", "scale"):
+        got, want = out[name], tree[name]
+        assert got.dtype == want.dtype and got.shape == want.shape
+        np.testing.assert_array_equal(np.asarray(got, jnp.float32),
+                                      np.asarray(want, jnp.float32))
+    np.testing.assert_array_equal(out["blk"]["a"], tree["blk"]["a"])
+
+
+def test_unpack_cast_false_keeps_f32():
+    tree = _tree(3)
+    spec = build_packspec(tree, batch_dims=1)
+    out = unpack(spec, pack(spec, tree), cast=False)
+    assert all(l.dtype == jnp.float32 for l in jax.tree.leaves(out))
+
+
+def test_pack_batch_dims_shared_spec():
+    """One spec serves worker-major (W, ...) and per-worker (...) trees —
+    what the sketched trainer does inside its worker scan."""
+    tree_w = _tree(4)
+    spec = build_packspec(tree_w, batch_dims=1)
+    tree_1 = jax.tree.map(lambda l: l[2], tree_w)
+    np.testing.assert_array_equal(pack(spec, tree_1), pack(spec, tree_w)[2])
+
+
+def test_pack_cplx_roundtrip():
+    base = _tree(2)
+    ctree = jax.tree.map(lambda l: cplx.Complex(
+        l.astype(jnp.float32), 2.0 * l.astype(jnp.float32)), base)
+    spec = build_packspec(base, batch_dims=1)
+    buf = pack_cplx(spec, ctree)
+    out = unpack_cplx(spec, buf)
+    flat_in = jax.tree_util.tree_leaves(ctree,
+                                        is_leaf=lambda x: isinstance(x, cplx.Complex))
+    flat_out = jax.tree_util.tree_leaves(out,
+                                         is_leaf=lambda x: isinstance(x, cplx.Complex))
+    for a, b in zip(flat_out, flat_in):
+        np.testing.assert_array_equal(a.re, np.asarray(b.re, jnp.float32))
+        np.testing.assert_array_equal(a.im, np.asarray(b.im, jnp.float32))
+
+
+def test_pack_shape_mismatch_raises():
+    tree = _tree(2)
+    spec = build_packspec(tree, batch_dims=1)
+    bad = dict(tree, w=tree["w"][:, :3])
+    with pytest.raises(ValueError):
+        pack(spec, bad)
+
+
+# ---------------------------------------------------------------------------
+# global packed codec
+# ---------------------------------------------------------------------------
+
+def test_encode_packed_matches_encode_hashed_flat():
+    v = jax.random.normal(KEY, (100,))
+    np.testing.assert_array_equal(encode_packed(v, 16, seed=5),
+                                  encode_hashed(v, 16, seed=5))
+
+
+def test_encode_packed_offset_shift_is_global_codec():
+    """Σ_leaf encode(leaf, offset=leaf_offset) == encode(packed buffer)."""
+    tree = _tree()
+    spec = build_packspec(tree)
+    buf = pack(spec, tree)
+    whole = encode_packed(buf, 32, seed=3)
+    leaves = jax.tree_util.tree_leaves(tree)
+    parts = sum(encode_packed(l.astype(jnp.float32).reshape(-1), 32, seed=3,
+                              offset=spec.offsets[i])
+                for i, l in enumerate(leaves))
+    np.testing.assert_allclose(whole, parts, rtol=1e-6, atol=1e-6)
+
+
+def test_decode_packed_offset_slices_global_decode():
+    s = jax.random.normal(KEY, (16,))
+    full = decode_packed(s, 50, seed=9)
+    np.testing.assert_array_equal(decode_packed(s, 20, seed=9, offset=12),
+                                  full[12:32])
+
+
+def test_packed_codec_unbiased_shape():
+    d, d_s = 64, 16
+    bucket = packed_bucket(d, d_s, seed=1)
+    sign = packed_sign(d, seed=1)
+    assert bucket.shape == (d,) and sign.shape == (d,)
+    assert int(bucket.min()) >= 0 and int(bucket.max()) < d_s
+    assert set(np.unique(np.asarray(sign))) <= {-1.0, 1.0}
+    # linearity of the codec
+    v = jax.random.normal(KEY, (d,))
+    np.testing.assert_allclose(encode_packed(3.0 * v, d_s, seed=1),
+                               3.0 * encode_packed(v, d_s, seed=1),
+                               rtol=1e-5)
+
+
+def test_tree_codec_equals_packed_codec():
+    """encode_hashed_tree / decode_hashed_tree (leafwise, sharding-
+    preserving) == encode_packed / decode_packed of the packed buffer —
+    ONE codec, two computation layouts."""
+    from repro.core.sketch import decode_hashed_tree, encode_hashed_tree
+
+    tree = jax.tree.map(lambda l: l.astype(jnp.float32), _tree())
+    spec = build_packspec(tree)
+    buf = pack(spec, tree)
+    d_s = 16
+    np.testing.assert_allclose(encode_hashed_tree(tree, spec, d_s, seed=4),
+                               encode_packed(buf, d_s, seed=4),
+                               rtol=1e-6, atol=1e-6)
+    s = jax.random.normal(KEY, (d_s,))
+    got = decode_hashed_tree(s, spec, seed=4)
+    want = unpack(spec, decode_packed(s, spec.d, seed=4), cast=False)
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_encode_packed_batched():
+    v = jax.random.normal(KEY, (4, 40))
+    batched = encode_packed(v, 8, seed=2)
+    assert batched.shape == (4, 8)
+    for w in range(4):
+        np.testing.assert_allclose(batched[w], encode_packed(v[w], 8, seed=2),
+                                   rtol=1e-6, atol=1e-6)

@@ -189,6 +189,169 @@ def test_pluggable_reductions():
 
 
 # ---------------------------------------------------------------------------
+# packed tree round: one fused receive per round
+# ---------------------------------------------------------------------------
+
+def _tree_problem(W, sizes, seed=0):
+    """Multi-leaf (W, ...) theta/lam/h trees with the given leaf shapes."""
+    k = jax.random.fold_in(KEY, seed)
+    theta, lam, h = {}, {}, {}
+    for i, (name, shape) in enumerate(sizes.items()):
+        ks = jax.random.split(jax.random.fold_in(k, i), 4)
+        theta[name] = jax.random.normal(ks[0], (W,) + shape)
+        lam[name] = cplx.Complex(0.3 * jax.random.normal(ks[1], (W,) + shape),
+                                 0.3 * jax.random.normal(ks[2], (W,) + shape))
+        h[name] = rayleigh(ks[3], (W,) + shape)
+    return theta, lam, h
+
+
+SIZES = {"emb": (9, 4), "w1": (33,), "b": (2, 3, 5)}
+
+
+@pytest.mark.parametrize("power_control", [False, True])
+def test_packed_tree_round_equals_leafwise_noise_free(power_control):
+    """Noise-free jnp path: packed and per-leaf rounds are BITWISE equal
+    (same values, same worker-axis reduction order)."""
+    from repro.core.tree_ota import ota_tree_round, ota_tree_round_leafwise
+
+    theta, lam, h = _tree_problem(5, SIZES)
+    acfg = AdmmConfig(rho=0.5, power_control=power_control)
+    ccfg = ChannelConfig(n_workers=5, noisy=False, snr_db=20.0)
+    T_p, l_p, m_p = ota_tree_round(theta, lam, h, KEY, acfg, ccfg,
+                                   backend="jnp")
+    T_l, l_l, m_l = ota_tree_round_leafwise(theta, lam, h, KEY, acfg, ccfg,
+                                            backend="jnp")
+    for name in SIZES:
+        np.testing.assert_array_equal(np.asarray(T_p[name]),
+                                      np.asarray(T_l[name]))
+        np.testing.assert_array_equal(np.asarray(l_p[name].re),
+                                      np.asarray(l_l[name].re))
+        np.testing.assert_array_equal(np.asarray(l_p[name].im),
+                                      np.asarray(l_l[name].im))
+    np.testing.assert_array_equal(np.asarray(m_p["inv_alpha"]),
+                                  np.asarray(m_l["inv_alpha"]))
+
+
+def test_packed_tree_round_pallas_parity():
+    from repro.core.tree_ota import ota_tree_round
+
+    theta, lam, h = _tree_problem(4, SIZES, seed=3)
+    acfg = AdmmConfig(rho=0.5, power_control=True)
+    ccfg = ChannelConfig(n_workers=4, noisy=True, snr_db=20.0)
+    T_j, _, mj = ota_tree_round(theta, lam, h, KEY, acfg, ccfg, backend="jnp")
+    T_p, _, mp = ota_tree_round(theta, lam, h, KEY, acfg, ccfg,
+                                backend="pallas")
+    for name in SIZES:
+        np.testing.assert_allclose(T_p[name], T_j[name], **TOL)
+    np.testing.assert_allclose(np.asarray(mp["inv_alpha"]),
+                               np.asarray(mj["inv_alpha"]), **TOL)
+
+
+def test_packed_tree_round_noise_equals_flat_uplink():
+    """Under AWGN the packed round is bitwise the FLAT uplink on the packed
+    buffer — one noise draw over (D,), the documented semantics change from
+    the historical per-leaf draws."""
+    from repro.core.packing import build_packspec, pack, pack_cplx
+    from repro.core.tree_ota import ota_tree_round, ota_tree_round_leafwise
+
+    theta, lam, h = _tree_problem(3, SIZES, seed=5)
+    acfg = AdmmConfig(rho=0.5, power_control=True)
+    ccfg = ChannelConfig(n_workers=3, noisy=True, snr_db=20.0)
+    kn = jax.random.fold_in(KEY, 77)
+    T_tree, _, _ = ota_tree_round(theta, lam, h, kn, acfg, ccfg,
+                                  backend="jnp")
+    spec = build_packspec(theta, batch_dims=1)
+    T_flat, _ = transport.ota_uplink(
+        pack(spec, theta), pack_cplx(spec, lam), pack_cplx(spec, h), kn,
+        acfg.rho, ccfg, backend="jnp")
+    packed_back = pack(build_packspec(T_tree), T_tree)
+    np.testing.assert_array_equal(np.asarray(packed_back),
+                                  np.asarray(T_flat))
+    # ... and therefore differs from the per-leaf noise draws (documented)
+    T_leaf, _, _ = ota_tree_round_leafwise(theta, lam, h, kn, acfg, ccfg,
+                                           backend="jnp")
+    assert not np.allclose(np.asarray(T_tree["w1"]),
+                           np.asarray(T_leaf["w1"]))
+
+
+def test_packed_tree_round_single_receive_dispatch(monkeypatch):
+    """The acceptance contract: one transport.receive per round for a
+    multi-leaf model (leafwise: one per leaf)."""
+    from repro.core import tree_ota
+
+    theta, lam, h = _tree_problem(4, SIZES, seed=9)
+    acfg = AdmmConfig(rho=0.5, power_control=True)
+    ccfg = ChannelConfig(n_workers=4, noisy=True)
+    calls = {"n": 0}
+    orig = transport.receive
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(transport, "receive", counting)
+    tree_ota.ota_tree_round(theta, lam, h, KEY, acfg, ccfg, backend="jnp")
+    assert calls["n"] == 1
+    calls["n"] = 0
+    tree_ota.ota_tree_round_leafwise(theta, lam, h, KEY, acfg, ccfg,
+                                     backend="jnp")
+    assert calls["n"] == len(SIZES)
+
+
+# ---------------------------------------------------------------------------
+# worker-at-a-time accumulate receive (the sketched trainer's uplink)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("d", [64, 1024 + 11])
+def test_accumulated_receive_matches_stacked_receive(backend, d):
+    """Scanning ota_accumulate over workers then one fused demodulate must
+    equal the stacked (W, d) receive under the same noise key."""
+    W = 5
+    theta, lam, h = _problem(W, d, seed=d)
+    ccfg = ChannelConfig(n_workers=W, noisy=True, snr_db=20.0)
+    s = transport.modulate(theta, lam, h, 0.5, backend="jnp")
+    kn = jax.random.fold_in(KEY, 13)
+    want = transport.receive(s, h, kn, ccfg, 0.7, backend="jnp")
+
+    def body(acc, xs):
+        s_w, h_w = xs
+        return transport.ota_accumulate(acc, s_w, h_w, backend=backend), None
+
+    acc, _ = jax.lax.scan(body, transport.ota_accumulate_init((d,)), (s, h))
+    got = transport.ota_receive_accumulated(acc, kn, ccfg, 0.7,
+                                            backend=backend)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_ota_accumulate_backend_parity():
+    W, d = 3, 2048 + 7
+    theta, lam, h = _problem(W, d, seed=1)
+    s = transport.modulate(theta, lam, h, 0.5)
+    acc0 = transport.OtaAccumulator(
+        y_re=jax.random.normal(jax.random.fold_in(KEY, 1), (d,)),
+        sumh2=jnp.abs(jax.random.normal(jax.random.fold_in(KEY, 2), (d,))))
+    s0 = cplx.Complex(s.re[0], s.im[0])
+    h0 = cplx.Complex(h.re[0], h.im[0])
+    a_j = transport.ota_accumulate(acc0, s0, h0, backend="jnp")
+    a_p = transport.ota_accumulate(acc0, s0, h0, backend="pallas")
+    np.testing.assert_allclose(a_p.y_re, a_j.y_re, **TOL)
+    np.testing.assert_allclose(a_p.sumh2, a_j.sumh2, **TOL)
+
+
+def test_inv_alpha_f32_without_power_control():
+    """power_control=False must return a f32 inv_alpha even for low-precision
+    parameters (the analog path never runs in bf16)."""
+    theta = jax.random.normal(KEY, (4, 32)).astype(jnp.bfloat16)
+    lam = cplx.czero((4, 32))
+    h = rayleigh(jax.random.fold_in(KEY, 1), (4, 32))
+    ccfg = ChannelConfig(n_workers=4, noisy=False)
+    _, ia = transport.ota_uplink(theta, lam, h, KEY, 0.5, ccfg,
+                                 power_control=False, backend="jnp")
+    assert ia.dtype == jnp.float32
+
+
+# ---------------------------------------------------------------------------
 # scan driver ≡ python loop driver (bit-for-bit)
 # ---------------------------------------------------------------------------
 
