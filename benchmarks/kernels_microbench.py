@@ -288,6 +288,87 @@ def packed_microbench() -> dict:
     return {"uplink_mlp_tree": mlp, "uplink_transformer_tree": tfm}
 
 
+# ---------------------------------------------------------------------------
+# flash attention forward + backward (custom_vjp) dispatch counts
+# ---------------------------------------------------------------------------
+
+def _count_pallas_dispatches(fn, *args) -> int:
+    """Count pallas_call equations anywhere in ``fn``'s jaxpr (recursing
+    into custom_vjp/scan/cond sub-jaxprs) — each is one kernel launch per
+    call on TPU."""
+    from jax.extend import core as jex_core
+
+    def walk(jaxpr) -> int:
+        n = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                n += 1
+            for v in eqn.params.values():
+                n += sum(walk(j) for j in _subjaxprs(v))
+        return n
+
+    def _subjaxprs(v):
+        if isinstance(v, jex_core.ClosedJaxpr):
+            return [v.jaxpr]
+        if isinstance(v, jex_core.Jaxpr):
+            return [v]
+        if isinstance(v, (list, tuple)):
+            return [j for item in v for j in _subjaxprs(item)]
+        return []
+
+    return walk(jax.make_jaxpr(fn)(*args).jaxpr)
+
+
+def attn_bwd_microbench() -> dict:
+    """Fwd + bwd kernel dispatch counts and grad parity of the custom_vjp
+    flash attention (ISSUE 3): the grad path must cost exactly 3 kernel
+    launches — 1 forward (o + lse residual) + 2 backward (dq; dk/dv) — with
+    no (S,S) tensor materialised and cotangents within 1e-5 of the jnp
+    oracle."""
+    from repro.kernels import flash_attention as fa
+    from repro.kernels import ref
+
+    B, H, S, hd = 2, 4, 256, 64
+    bq = bk = 128
+    key = jax.random.PRNGKey(0)
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (B, H, S, hd))
+               for i in range(3))
+
+    def f(q, k, v):
+        return fa.flash_attention(q, k, v, causal=True, block_q=bq,
+                                  block_k=bk, interpret=True)
+
+    def loss(q, k, v):
+        return jnp.sum(jnp.sin(f(q, k, v)))
+
+    fwd_n = _count_pallas_dispatches(f, q, k, v)
+    total_n = _count_pallas_dispatches(
+        jax.grad(loss, argnums=(0, 1, 2)), q, k, v)
+
+    grad_j = jax.jit(jax.grad(loss, argnums=(0, 1, 2)))
+    got = grad_j(q, k, v)
+    want = jax.grad(lambda *a: jnp.sum(jnp.sin(
+        ref.attention(*a, causal=True))), argnums=(0, 1, 2))(q, k, v)
+    errs = {f"max_abs_err_d{n}": float(jnp.max(jnp.abs(g - w)))
+            for n, g, w in zip("qkv", got, want)}
+    us = _time(lambda: jax.block_until_ready(grad_j(q, k, v)), iters=3)
+    return {
+        "shape": {"B": B, "H": H, "S": S, "hd": hd,
+                  "block_q": bq, "block_k": bk},
+        # kernel launches in the lowered HLO: 1 fwd; grad = fwd-with-residual
+        # + dq kernel + dk/dv kernel
+        "fwd_dispatches": fwd_n,
+        "grad_total_dispatches": total_n,
+        "bwd_dispatches": total_n - fwd_n,
+        # residual saved beyond the primals: one f32 (B,H,S) lse plane
+        "residual_lse_bytes": B * H * S * 4,
+        # what the naive jnp backward would materialise instead
+        "naive_bwd_score_tensor_bytes": B * H * S * S * 4,
+        "interpret_grad_us_per_call": us,
+        **errs,
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default=None,
@@ -297,9 +378,14 @@ def main() -> None:
                          "path (BENCH_packed.json)")
     ap.add_argument("--packed-only", action="store_true",
                     help="skip the kernel/transport sections (CI smoke)")
+    ap.add_argument("--attn-bwd", action="store_true",
+                    help="flash-attention fwd+bwd dispatch-count / grad "
+                         "parity section only (CI smoke)")
+    ap.add_argument("--out-attn-bwd", default="BENCH_attn_bwd.json",
+                    help="where --attn-bwd writes its JSON")
     args = ap.parse_args()
     derived = {}
-    if not args.packed_only:
+    if not (args.packed_only or args.attn_bwd):
         derived = {"kernels": microbench(),
                    "transport": transport_microbench()}
     out = dict(derived)
@@ -307,6 +393,8 @@ def main() -> None:
     # pay for it when asked (CI runs it as its own --packed-only step)
     if args.packed_only or args.out_packed:
         out["packed_uplink"] = packed_microbench()
+    if args.attn_bwd:
+        out["attn_bwd"] = attn_bwd_microbench()
     text = json.dumps(out, indent=2, default=str)
     print(text)
     if args.out and derived:
@@ -316,6 +404,9 @@ def main() -> None:
         with open(args.out_packed, "w") as f:
             f.write(json.dumps(out["packed_uplink"], indent=2, default=str)
                     + "\n")
+    if args.attn_bwd:
+        with open(args.out_attn_bwd, "w") as f:
+            f.write(json.dumps(out["attn_bwd"], indent=2, default=str) + "\n")
 
 
 if __name__ == "__main__":

@@ -33,13 +33,14 @@ PyTree = Any
 
 
 class TreeChannel(NamedTuple):
-    h: PyTree       # Complex leaves, shape (W,) + leaf_shape, f32
+    h: PyTree       # Complex leaves (W,) + leaf_shape, f32 — or ONE packed
+                    # Complex (W, D) buffer (persistently-packed trainers)
     age: Array      # int32 scalar
 
 
 class TreeFLState(NamedTuple):
-    theta: PyTree   # param pytree, leaves (W, ...)
-    lam: PyTree     # Complex leaves (W, ...), f32
+    theta: PyTree   # param pytree, leaves (W, ...) — always a tree
+    lam: PyTree     # Complex leaves (W, ...) f32, or ONE packed Complex (W, D)
     Theta: PyTree   # global model, leaves (...)
     chan: TreeChannel
     opt: Any        # per-worker local optimizer state (leaves (W, ...))
@@ -133,6 +134,66 @@ def _packing_pays_off() -> bool:
     return mesh is None or dict(mesh.shape).get("model", 1) <= 1
 
 
+#: public alias — trainers use this to pick their dual/fading state layout
+packing_pays_off = _packing_pays_off
+
+
+# ---------------------------------------------------------------------------
+# persistently-packed dual/fading state (λ, h as (W, D) Complex buffers)
+# ---------------------------------------------------------------------------
+#
+# The packed round below (:func:`ota_tree_round`) still re-packs λ and h from
+# their trees every round — two `pack_cplx` calls whose XLA `concatenate`
+# lowers single-threaded on CPU (~3–9 ms at D≈400k, ROADMAP PR 2 notes).
+# λ and h never need to BE trees: only θ does (the local prox steps run the
+# model).  Trainers therefore keep λ/h packed *persistently* in their state
+# and use the helpers here; the per-round layout cost drops to one θ pack
+# plus cheap slice-views (`unpack_cplx`) of λ/h for the penalty gradient.
+
+def init_channel_packed(key: Array, n_workers: int, d: int) -> TreeChannel:
+    """One Rayleigh fading block drawn directly over the packed ``(W, D)``
+    index space (a single PRNG draw — the packed twin of
+    :func:`init_channel_tree`'s per-leaf draws; same distribution)."""
+    return TreeChannel(h=rayleigh(key, (n_workers, d)),
+                       age=jnp.zeros((), jnp.int32))
+
+
+def step_channel_packed(key: Array, chan: TreeChannel,
+                        ccfg: ChannelConfig) -> Tuple[TreeChannel, Array]:
+    """Coherence-boundary redraw of a packed fading buffer (one draw)."""
+    age = chan.age + 1
+    redraw = age >= ccfg.coherence_iters
+    fresh = rayleigh(key, chan.h.re.shape)
+    h = cplx.cwhere(redraw, fresh, chan.h)
+    new_age = jnp.where(redraw, jnp.zeros((), jnp.int32), age)
+    return TreeChannel(h=h, age=new_age), redraw
+
+
+def ota_tree_round_packed_state(theta: PyTree, lam_p: Complex, h_p: Complex,
+                                key: Array, acfg: AdmmConfig,
+                                ccfg: ChannelConfig, spec,
+                                backend: Optional[str] = None,
+                                reduce_fn: Optional[Callable[[Array], Array]] = None,
+                                min_reduce_fn: Optional[Callable[[Array], Array]] = None,
+                                ) -> Tuple[PyTree, Complex, dict]:
+    """One OTA round where the duals/fading are ALREADY packed ``(W, D)``.
+
+    Only θ is packed here (it must stay a tree for the local steps); the
+    uplink math is bit-identical to the packed :func:`ota_tree_round` given
+    equal values — ``pack_cplx`` of a λ/h tree commutes with keeping the
+    buffers packed.  Returns ``(Theta_tree_f32, lam_new_packed, metrics)``.
+    """
+    theta_p = pack(spec, theta)                    # the one concat per round
+    Theta_p, inv_alpha = transport.ota_uplink(
+        theta_p, lam_p, h_p, key, acfg.rho, ccfg,
+        power_control=acfg.power_control, reduce_fn=reduce_fn,
+        min_reduce_fn=min_reduce_fn, backend=backend)
+    lam_new_p = transport.dual_update(lam_p, h_p, theta_p, Theta_p, acfg.rho,
+                                      backend=backend)
+    Theta_new = unpack(spec, Theta_p, cast=False)  # analog path stays f32
+    return Theta_new, lam_new_p, {"inv_alpha": jnp.asarray(inv_alpha)}
+
+
 def ota_tree_round(theta: PyTree, lam: PyTree, h: PyTree, key: Array,
                    acfg: AdmmConfig, ccfg: ChannelConfig,
                    backend: Optional[str] = None,
@@ -167,19 +228,11 @@ def ota_tree_round(theta: PyTree, lam: PyTree, h: PyTree, key: Array,
                                        backend=backend, reduce_fn=reduce_fn,
                                        min_reduce_fn=min_reduce_fn)
     spec = build_packspec(theta, batch_dims=1)
-    theta_p = pack(spec, theta)                    # (W, D) f32
-    lam_p = pack_cplx(spec, lam)
-    h_p = pack_cplx(spec, h)
-    Theta_p, inv_alpha = transport.ota_uplink(
-        theta_p, lam_p, h_p, key, acfg.rho, ccfg,
-        power_control=acfg.power_control, reduce_fn=reduce_fn,
-        min_reduce_fn=min_reduce_fn, backend=backend)
-    lam_new_p = transport.dual_update(lam_p, h_p, theta_p, Theta_p, acfg.rho,
-                                      backend=backend)
-    Theta_new = unpack(spec, Theta_p, cast=False)  # analog path stays f32
-    lam_new = unpack_cplx(spec, lam_new_p)
-    metrics = {"inv_alpha": jnp.asarray(inv_alpha)}
-    return Theta_new, lam_new, metrics
+    Theta_new, lam_new_p, metrics = ota_tree_round_packed_state(
+        theta, pack_cplx(spec, lam), pack_cplx(spec, h), key, acfg, ccfg,
+        spec, backend=backend, reduce_fn=reduce_fn,
+        min_reduce_fn=min_reduce_fn)
+    return Theta_new, unpack_cplx(spec, lam_new_p), metrics
 
 
 def ota_tree_round_leafwise(theta: PyTree, lam: PyTree, h: PyTree, key: Array,

@@ -1,8 +1,13 @@
-"""Pallas TPU kernels (ota / admm_update / linear_scan) + model-facing shims.
+"""Pallas TPU kernels (ota / admm_update / flash_attention / linear_scan)
++ model-facing shims.
 
-``REPRO_USE_PALLAS=1`` routes the model's recurrences through the Pallas
-kernels (interpret mode on CPU); default is the pure-jnp reference path so
-dry-run cost analysis reflects plain XLA HLO.
+``REPRO_USE_PALLAS=1`` routes the model's recurrences and attention through
+the Pallas kernels (interpret mode on CPU); default is the pure-jnp
+reference path so dry-run cost analysis reflects plain XLA HLO.  The whole
+kernel set is safe under ``jax.grad``: flash attention carries a custom VJP
+with Pallas backward kernels (``kernels/flash_attention.py``), and the OTA
+/ scan kernels are used on the forward/transport paths only — so trainers
+never need to avoid :func:`use_pallas` in differentiated code.
 """
 from __future__ import annotations
 

@@ -13,6 +13,13 @@ VMEM the whole time.  Within a tile the recurrence closes with an associative
 scan (log-depth on the VPU) plus a cumprod-weighted carry injection:
 
     h_tile = assoc_scan(a, b) + cumprod(a) * carry
+
+Differentiable via :func:`jax.custom_vjp`: the cotangent recurrence
+``g_t = dh_t + a_{t+1} g_{t+1}`` is itself a linear scan run in reverse, so
+the backward pass is ONE more launch of the same kernel on flipped/shifted
+inputs plus two elementwise products (``da_t = g_t ⊙ h_{t−1}``,
+``db = g``) — the forward output ``h`` is the only residual.  Forward-mode
+(``jax.jvp``) raises JAX's clean custom_vjp TypeError.
 """
 from __future__ import annotations
 
@@ -50,13 +57,11 @@ def _scan_kernel(a_ref, b_ref, o_ref, carry_ref):
     carry_ref[...] = h[-1]
 
 
-def linear_scan(a: Array, b: Array, *, block_s: int = DEFAULT_BS,
-                block_d: int = DEFAULT_BD, interpret: bool = False) -> Array:
-    """h_t = a_t ⊙ h_{t−1} + b_t over (B, S, D); h_0 = b_0.
-
-    Pads S and D up to tile multiples (a=1/b=0 padding is the identity
-    element of the recurrence, so padded steps are no-ops).
-    """
+def _scan_launch(a: Array, b: Array, *, block_s: int, block_d: int,
+                 interpret: bool) -> Array:
+    """Raw kernel launch (no AD rule).  Pads S and D up to tile multiples
+    (a=1/b=0 padding is the identity element of the recurrence, so padded
+    steps are no-ops)."""
     B, S, D = a.shape
     Sp = -(-S // block_s) * block_s
     Dp = -(-D // block_d) * block_d
@@ -76,3 +81,40 @@ def linear_scan(a: Array, b: Array, *, block_s: int = DEFAULT_BS,
         interpret=interpret,
     )(ap, bp)
     return out[:, :S, :D]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _scan_vjp(a: Array, b: Array, block_s: int, block_d: int,
+              interpret: bool) -> Array:
+    return _scan_launch(a, b, block_s=block_s, block_d=block_d,
+                        interpret=interpret)
+
+
+def _scan_fwd_rule(a, b, block_s, block_d, interpret):
+    h = _scan_launch(a, b, block_s=block_s, block_d=block_d,
+                     interpret=interpret)
+    return h, (a, b, h)   # b only for its dtype (db = g cast back)
+
+
+def _scan_bwd_rule(block_s, block_d, interpret, res, dh):
+    a, b, h = res
+    af = a.astype(jnp.float32)
+    # g_t = dh_t + a_{t+1} g_{t+1}: the same recurrence over the reversed
+    # sequence with the gates shifted one step — a'_t = a_{S-t} (a'_0 only
+    # ever multiplies the zero initial carry, so the roll wrap is harmless).
+    a_rev = jnp.roll(jnp.flip(af, axis=1), 1, axis=1)
+    g = jnp.flip(_scan_launch(a_rev, jnp.flip(dh.astype(jnp.float32), axis=1),
+                              block_s=block_s, block_d=block_d,
+                              interpret=interpret), axis=1)
+    h_prev = jnp.pad(h[:, :-1], ((0, 0), (1, 0), (0, 0)))  # h_{-1} = 0
+    return (g * h_prev).astype(a.dtype), g.astype(b.dtype)
+
+
+_scan_vjp.defvjp(_scan_fwd_rule, _scan_bwd_rule)
+
+
+def linear_scan(a: Array, b: Array, *, block_s: int = DEFAULT_BS,
+                block_d: int = DEFAULT_BD, interpret: bool = False) -> Array:
+    """h_t = a_t ⊙ h_{t−1} + b_t over (B, S, D); h_0 = b_0.  Differentiable
+    (custom VJP: one reversed launch of the same kernel, see module doc)."""
+    return _scan_vjp(a, b, int(block_s), int(block_d), bool(interpret))

@@ -61,9 +61,15 @@ def linear_scan(a: Array, b: Array, block_s: int = _scan.DEFAULT_BS,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("causal", "block_q", "block_k"))
+                   static_argnames=("causal", "block_q", "block_k",
+                                    "interpret"))
 def flash_attention(q: Array, k: Array, v: Array, causal: bool = True,
-                    block_q: int = 256, block_k: int = 256) -> Array:
+                    block_q: int = 256, block_k: int = 256,
+                    interpret: bool | None = None) -> Array:
+    """Differentiable (custom_vjp) flash attention; ``interpret=None``
+    auto-selects interpret mode off-TPU.  Block sizes apply to the forward
+    and both backward kernels."""
     from repro.kernels import flash_attention as _fa
+    interp = _interpret() if interpret is None else interpret
     return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
-                               block_k=block_k, interpret=_interpret())
+                               block_k=block_k, interpret=interp)

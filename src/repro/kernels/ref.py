@@ -63,6 +63,36 @@ def attention(q: Array, k: Array, v: Array, causal: bool = True,
                       v.astype(jnp.float32)).astype(q.dtype)
 
 
+def attention_vjp(q: Array, k: Array, v: Array, do: Array,
+                  causal: bool = True, scale=None
+                  ) -> Tuple[Array, Array, Array]:
+    """Closed-form backward of :func:`attention` — the oracle the Pallas
+    backward kernels are pinned against.
+
+    Written in the same residual form the kernels use (p from the softmax,
+    δ = Σ_d do∘o, ds = p∘(dp − δ)), with f32 accumulation and cotangents
+    cast back to the primal dtypes.  Materialises the (S,T) tensors the
+    kernels avoid — fine for an oracle.
+    """
+    hd = q.shape[-1]
+    scale = hd ** -0.5 if scale is None else scale
+    qf, kf, vf, dof = (x.astype(jnp.float32) for x in (q, k, v, do))
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+    if causal:
+        S, T = s.shape[-2:]
+        mask = jnp.arange(T)[None, :] <= jnp.arange(S)[:, None]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+    dv = jnp.einsum("bhqk,bhqd->bhkd", p, dof)
+    dp = jnp.einsum("bhqd,bhkd->bhqk", dof, vf)
+    delta = jnp.sum(dof * o, axis=-1)
+    ds = p * (dp - delta[..., None])
+    dq = jnp.einsum("bhqk,bhkd->bhqd", ds, kf) * scale
+    dk = jnp.einsum("bhqk,bhqd->bhkd", ds, qf) * scale
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
 def linear_scan(a: Array, b: Array) -> Array:
     """Gated linear recurrence h_t = a_t ⊙ h_{t−1} + b_t,  h_0 = b_0.
 

@@ -110,8 +110,15 @@ def build_train_spec(arch: str, mesh: Mesh, *, multi_pod: bool,
         bw = gbatch // W
     else:
         W = d_n
+        # model-parallel meshes keep the per-leaf tree state: packing the
+        # model-sharded leaves would make GSPMD reshard every signal plane
+        # per round (tree_ota.packing_pays_off) — and the packed-vs-tree
+        # decision must be made HERE, where the mesh is known, because
+        # init_fn is shape-traced outside the mesh context below.
+        model_parallel = dict(mesh.shape).get("model", 1) > 1
         flcfg = FLConfig(mode="replicated", n_workers=W, local_steps=1,
-                         local_lr=1e-3, transport_backend=transport_backend)
+                         local_lr=1e-3, transport_backend=transport_backend,
+                         packed_uplink=False if model_parallel else None)
         bw = gbatch // W
     acfg = AdmmConfig(rho=0.5, flip_on_change=False)
     ccfg = ChannelConfig(n_workers=W, snr_db=40.0)
@@ -138,22 +145,29 @@ def build_train_spec(arch: str, mesh: Mesh, *, multi_pod: bool,
                              + (None,) * (len(v.shape) - 2)))
                       for k, v in batch.items()}
     else:
+        from repro.core.cplx import Complex
         worker = dict(worker_dim=True, fsdp=False, **kw)
+        wspec = daxes if len(daxes) > 1 else daxes[0]
+        if isinstance(state_sds.lam, Complex):
+            # persistently-packed λ/h: one (W, D) Complex buffer each —
+            # worker axis sharded over data, packed axis replicated
+            lam_spec = jax.tree.map(lambda _: P(wspec), state_sds.lam)
+            h_spec = jax.tree.map(lambda _: P(wspec), state_sds.chan.h)
+        else:
+            lam_spec = SH.tree_pspecs(state_sds.lam, **worker)
+            h_spec = SH.tree_pspecs(state_sds.chan.h, **worker)
         state_spec = type(state_sds)(
             theta=SH.tree_pspecs(state_sds.theta, **worker),
-            lam=SH.tree_pspecs(state_sds.lam, **worker),
+            lam=lam_spec,
             Theta=SH.tree_pspecs(state_sds.Theta, worker_dim=False,
                                  fsdp=False, **kw),
-            chan=type(state_sds.chan)(
-                h=SH.tree_pspecs(state_sds.chan.h, **worker),
-                age=P()),
+            chan=type(state_sds.chan)(h=h_spec, age=P()),
             opt=type(state_sds.opt)(
                 mu=SH.tree_pspecs(state_sds.opt.mu, **worker),
                 nu=SH.tree_pspecs(state_sds.opt.nu, **worker),
                 count=P()),
             step=P(),
         )
-        wspec = daxes if len(daxes) > 1 else daxes[0]
         batch_spec = {k: P(*((wspec,) + (None,) * (len(v.shape) - 1)))
                       for k, v in batch.items()}
 

@@ -192,8 +192,12 @@ def attention_fwd(p: Params, x: Array, cfg: ModelConfig, positions: Array,
     qg = q.reshape(B, S, cfg.n_kv_heads, g, hd)
     from repro.kernels import use_pallas
     if use_pallas() and window is None and S >= 16:
-        # TPU path: VMEM-resident flash attention (kernels/flash_attention).
-        # GQA handled by broadcasting KV over the group dim.
+        # TPU path: VMEM-resident flash attention (kernels/flash_attention),
+        # differentiable via its custom VJP so training takes it too.  GQA
+        # handled by broadcasting KV over the group dim — jnp.repeat's own
+        # VJP sums the k/v cotangents back over the group.  Sliding-window
+        # stays on the masked fallback below (parity pinned in
+        # tests/test_attention_dispatch.py).
         from repro.kernels import ops as kops
         qf = qg.transpose(0, 2, 3, 1, 4).reshape(
             B, cfg.n_heads, S, hd)                     # (B, H, S, hd)

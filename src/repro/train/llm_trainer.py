@@ -38,10 +38,12 @@ from repro.core import cplx, transport
 from repro.core.admm import AdmmConfig
 from repro.core.channel import ChannelConfig
 from repro.core.cplx import Complex
-from repro.core.packing import build_packspec
+from repro.core.packing import build_packspec, unpack_cplx
 from repro.core.sketch import decode_hashed_tree, encode_hashed_tree
 from repro.core.tree_ota import (TreeChannel, TreeFLState, _zmap,
-                                 init_channel_tree, ota_tree_round,
+                                 init_channel_packed, init_channel_tree,
+                                 ota_tree_round, ota_tree_round_packed_state,
+                                 packing_pays_off, step_channel_packed,
                                  step_channel_tree, tree_penalty_grad)
 from repro.models.registry import Model
 from repro.models.sharding import shard
@@ -63,12 +65,15 @@ class FLConfig:
     #: step size applied to the decoded global sketch delta
     sketch_lr: float = 1.0
     #: OTA transport backend for every signal primitive: "jnp" | "pallas" |
-    #: None (defer to the REPRO_USE_PALLAS env var) — per-experiment, no
-    #: longer env-only
+    #: None (defer to the REPRO_USE_PALLAS env var) — per-experiment, not
+    #: env-only.  Pallas is safe in differentiated code: the flash-attention
+    #: kernel carries a custom VJP (Pallas backward kernels), so there is no
+    #: "pallas transport but jnp grad path" split to manage anymore.
     transport_backend: Optional[str] = None
-    #: replicated mode: pack the pytree uplink into one (W, D) buffer
-    #: (True), keep the per-leaf reference loop (False), or auto (None:
-    #: packed except under a model-parallel mesh — see tree_ota)
+    #: replicated mode: keep λ/h persistently packed as (W, D) buffers and
+    #: issue one fused uplink per round (True), keep the per-leaf tree
+    #: state + reference loop (False), or auto (None: packed except under a
+    #: model-parallel mesh — see tree_ota.packing_pays_off)
     packed_uplink: Optional[bool] = None
 
 
@@ -87,18 +92,32 @@ def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
     W = flcfg.n_workers
     opt = _local_opt(flcfg)
 
+    def _packed_state() -> bool:
+        """Resolved at trace time of ``init_fn``; ``train_step`` then reads
+        the layout from the state structure itself (so init and step can't
+        disagree).  θ always stays a tree — the local steps run the model."""
+        if flcfg.packed_uplink is not None:
+            return flcfg.packed_uplink
+        return packing_pays_off()
+
     def init_fn(key: Array) -> TreeFLState:
         kp, kc = jax.random.split(key)
         pkeys = jax.random.split(kp, W)
         theta = jax.vmap(model.init)(pkeys)                 # leaves (W, ...)
         theta = jax.tree.map(lambda l: shard(
             l, *(["worker"] + [None] * (l.ndim - 1))), theta)
-        lam = jax.tree.map(
-            lambda l: cplx.czero(l.shape, jnp.float32), theta)
         Theta = jax.tree.map(
             lambda l: jnp.mean(l.astype(jnp.float32), 0).astype(l.dtype),
             theta)
-        chan = init_channel_tree(kc, theta)
+        if _packed_state():
+            # λ/h live packed between rounds: no per-round pack_cplx concat
+            spec = build_packspec(theta, batch_dims=1)
+            lam = cplx.czero((W, spec.d), jnp.float32)
+            chan = init_channel_packed(kc, W, spec.d)
+        else:
+            lam = jax.tree.map(
+                lambda l: cplx.czero(l.shape, jnp.float32), theta)
+            chan = init_channel_tree(kc, theta)
         return TreeFLState(theta=theta, lam=lam, Theta=Theta, chan=chan,
                            opt=opt.init(theta), step=jnp.zeros((), jnp.int32))
 
@@ -109,13 +128,23 @@ def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
     def train_step(state: TreeFLState, batch: PyTree, key: Array
                    ) -> Tuple[TreeFLState, dict]:
         """batch leaves: (W, B_local, ...) — worker-major, sharded w->data."""
+        packed = isinstance(state.lam, Complex)   # state layout decides
         kc, kn = jax.random.split(key)
-        chan, _changed = step_channel_tree(kc, state.chan, ccfg)
+        if packed:
+            spec = build_packspec(state.theta, batch_dims=1)
+            chan, _changed = step_channel_packed(kc, state.chan, ccfg)
+            # slice-views of the packed buffers for the leafwise penalty —
+            # constant across the local steps, so unpack once per round
+            lam_tree = unpack_cplx(spec, state.lam)
+            h_tree = unpack_cplx(spec, chan.h)
+        else:
+            chan, _changed = step_channel_tree(kc, state.chan, ccfg)
+            lam_tree, h_tree = state.lam, chan.h
 
         def local_body(carry, _):
             theta, opt_state = carry
             losses, grads = jax.vmap(jax.value_and_grad(loss_w))(theta, batch)
-            pen = tree_penalty_grad(theta, state.lam, chan.h, state.Theta,
+            pen = tree_penalty_grad(theta, lam_tree, h_tree, state.Theta,
                                     acfg.rho)
             g = jax.tree.map(lambda a, b_: a + b_.astype(a.dtype), grads, pen)
             theta, opt_state = opt.update(g, opt_state, theta)
@@ -125,10 +154,14 @@ def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
             local_body, (state.theta, state.opt), None,
             length=flcfg.local_steps)
 
-        Theta_f32, lam_new, m = ota_tree_round(theta, state.lam, chan.h, kn,
-                                               acfg, ccfg,
-                                               backend=flcfg.transport_backend,
-                                               packed=flcfg.packed_uplink)
+        if packed:
+            Theta_f32, lam_new, m = ota_tree_round_packed_state(
+                theta, state.lam, chan.h, kn, acfg, ccfg, spec,
+                backend=flcfg.transport_backend)
+        else:
+            Theta_f32, lam_new, m = ota_tree_round(
+                theta, state.lam, chan.h, kn, acfg, ccfg,
+                backend=flcfg.transport_backend, packed=False)
         Theta_new = _zmap(lambda T, t: T.astype(t.dtype), Theta_f32, state.Theta)
         new_state = TreeFLState(theta=theta, lam=lam_new, Theta=Theta_new,
                                 chan=chan, opt=opt_state,

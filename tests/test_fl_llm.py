@@ -172,6 +172,102 @@ def test_sketched_end_to_end_ota_math():
         np.testing.assert_allclose(got, want, **TOL)
 
 
+def test_replicated_packed_state_layout():
+    """Default replicated state keeps λ/h persistently packed: ONE Complex
+    (W, D) buffer each (no per-round pack_cplx concat), θ stays a tree;
+    ``packed_uplink=False`` keeps the historical per-leaf tree state."""
+    from repro.core.packing import build_packspec
+
+    _, _, init_fn, _ = _setup("replicated")
+    st = init_fn(KEY)
+    assert isinstance(st.lam, cplx.Complex)
+    assert isinstance(st.chan.h, cplx.Complex)
+    D = build_packspec(st.theta, batch_dims=1).d
+    assert st.lam.re.shape == (W, D)
+    assert st.chan.h.re.shape == (W, D)
+    assert isinstance(st.theta, dict)  # θ is still the model pytree
+
+    _, _, init_tree, _ = _setup("replicated", packed_uplink=False)
+    st_t = init_tree(KEY)
+    assert not isinstance(st_t.lam, cplx.Complex)
+    assert len(jax.tree_util.tree_leaves(st_t.lam)) \
+        == 2 * len(jax.tree_util.tree_leaves(st_t.theta))  # re+im per leaf
+
+
+def test_replicated_packed_state_matches_tree_state():
+    """Bit-exactness contract of the persistently-packed state: with equal
+    fading values and a noise-free channel, one packed-state train_step ==
+    one tree-state train_step bitwise (the uplink math is identical; only
+    the channel-redraw PRNG layout differs, which a long coherence block
+    keeps out of the round)."""
+    from repro.core.packing import build_packspec, pack_cplx
+
+    m = get_model("granite-8b", reduced=True)
+    batch = {"tokens": jax.random.randint(KEY, (W, B, S), 0,
+                                          m.cfg.vocab_size)}
+    acfg = AdmmConfig(rho=0.5, flip_on_change=False)
+    ccfg = ChannelConfig(n_workers=W, noisy=False, coherence_iters=1000)
+    mk = lambda packed: make_fl_train(
+        m, FLConfig(mode="replicated", n_workers=W, local_steps=2,
+                    local_lr=1e-2, packed_uplink=packed), acfg, ccfg)
+    init_p, step_p = mk(True)
+    init_t, step_t = mk(False)
+    st_p, st_t = init_p(KEY), init_t(KEY)
+    spec = build_packspec(st_t.theta, batch_dims=1)
+    # inject the tree state's fading (packed) so both rounds see equal h
+    st_p = st_p._replace(chan=st_p.chan._replace(h=pack_cplx(spec,
+                                                             st_t.chan.h)))
+    k = jax.random.fold_in(KEY, 9)
+    new_p, met_p = jax.jit(step_p)(st_p, batch, k)
+    new_t, met_t = jax.jit(step_t)(st_t, batch, k)
+    assert float(met_p["loss"]) == float(met_t["loss"])
+    for a, b in zip(jax.tree_util.tree_leaves(new_p.Theta),
+                    jax.tree_util.tree_leaves(new_t.Theta)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    lam_t_packed = pack_cplx(spec, new_t.lam)
+    np.testing.assert_array_equal(np.asarray(new_p.lam.re),
+                                  np.asarray(lam_t_packed.re))
+    np.testing.assert_array_equal(np.asarray(new_p.lam.im),
+                                  np.asarray(lam_t_packed.im))
+
+
+def test_pallas_train_step_grads():
+    """ISSUE 3 acceptance: a REPRO_USE_PALLAS=1 LLM train step (flash
+    attention inside jax.grad, interpret mode) runs without the historical
+    ``_pallas_call_jvp_rule`` AssertionError.  Subprocess so the env var
+    applies to fresh traces."""
+    import os
+    import subprocess
+    import sys
+
+    code = r"""
+import jax, jax.numpy as jnp
+from repro.core.admm import AdmmConfig
+from repro.core.channel import ChannelConfig
+from repro.models import get_model
+from repro.train.llm_trainer import FLConfig, make_fl_train
+
+m = get_model("granite-8b", reduced=True)
+W, B, S = 2, 2, 32
+key = jax.random.PRNGKey(0)
+batch = {"tokens": jax.random.randint(key, (W, B, S), 0, m.cfg.vocab_size)}
+init_fn, step = make_fl_train(
+    m, FLConfig(mode="replicated", n_workers=W, local_steps=1, local_lr=1e-2),
+    AdmmConfig(rho=0.5, flip_on_change=False),
+    ChannelConfig(n_workers=W, snr_db=40.0))
+st = init_fn(key)
+st, met = jax.jit(step)(st, batch, jax.random.fold_in(key, 1))
+assert jnp.isfinite(met["loss"])
+print("PALLAS_TRAIN_OK")
+"""
+    env = dict(os.environ, REPRO_USE_PALLAS="1")
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=540)
+    assert "PALLAS_TRAIN_OK" in proc.stdout, proc.stdout + proc.stderr
+
+
 def test_sketched_state_is_small():
     """A-FADMM-CS: per-worker dual state is ~P/ratio, not P."""
     m, batch, init_fn, _ = _setup("sketched")
