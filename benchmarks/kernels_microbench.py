@@ -289,6 +289,78 @@ def packed_microbench() -> dict:
 
 
 # ---------------------------------------------------------------------------
+# phy scenario engine: fused channel-step + masked receive
+# ---------------------------------------------------------------------------
+
+def phy_microbench() -> dict:
+    """ISSUE 4 contract numbers: the Gauss–Markov channel step costs ONE
+    fused Pallas dispatch per round at packed (W, D) scale (vs the ~6
+    elementwise HLOs of the jnp reference) and matches it ≤ 1e-6; the
+    masked receive matches both the jnp masked reference and the unmasked
+    receive over the active subset (masked workers contribute exactly 0)."""
+    from repro.core import cplx, transport
+    from repro.core.channel import ChannelConfig, rayleigh
+    from repro.phy.fading import gauss_markov_step
+    from repro.phy.scenario import make_scenario
+
+    W, d = 8, 1 << 16
+    key = jax.random.PRNGKey(0)
+    h = rayleigh(key, (W, d))
+    rho = 0.9
+
+    def step_pallas(hh):
+        return gauss_markov_step(jax.random.fold_in(key, 1), hh, rho,
+                                 jnp.asarray(True), backend="pallas")
+
+    fad_dispatches = _count_pallas_dispatches(step_pallas, h)
+    got = step_pallas(h)
+    want = gauss_markov_step(jax.random.fold_in(key, 1), h, rho,
+                             jnp.asarray(True), backend="jnp")
+    fad_err = max(float(jnp.max(jnp.abs(got.re - want.re))),
+                  float(jnp.max(jnp.abs(got.im - want.im))))
+
+    # masked receive: parity + exact-zero contribution of masked workers
+    k2 = jax.random.fold_in(key, 2)
+    theta = jax.random.normal(k2, (W, d))
+    lam = cplx.Complex(0.3 * jax.random.normal(jax.random.fold_in(k2, 1),
+                                               (W, d)),
+                       0.3 * jax.random.normal(jax.random.fold_in(k2, 2),
+                                               (W, d)))
+    mask = jnp.arange(W) % 3 != 0          # drop workers 0, 3, 6
+    ccfg = ChannelConfig(n_workers=W, noisy=True, snr_db=20.0)
+    kn = jax.random.fold_in(key, 3)
+    T_j, _ = transport.ota_uplink(theta, lam, h, kn, 0.5, ccfg, mask=mask,
+                                  backend="jnp")
+    T_p, _ = transport.ota_uplink(theta, lam, h, kn, 0.5, ccfg, mask=mask,
+                                  backend="pallas")
+    idx = jnp.nonzero(mask)[0]
+    sub = lambda c: cplx.Complex(c.re[idx], c.im[idx])
+    T_s, _ = transport.ota_uplink(
+        theta[idx], sub(lam), sub(h), kn, 0.5,
+        ChannelConfig(n_workers=int(idx.size), noisy=True, snr_db=20.0),
+        backend="jnp")
+    masked_err = float(jnp.max(jnp.abs(T_p - T_j)))
+    subset_err = float(jnp.max(jnp.abs(T_j - T_s)))
+
+    # a full scenario round step (markov-doppler) at packed scale
+    scn = make_scenario("markov-doppler", ccfg)
+    st = scn.init(key, W, d)
+    step_j = jax.jit(lambda s, k: scn.step(k, s))
+    jax.block_until_ready(step_j(st, key))
+    us = _time(lambda: jax.block_until_ready(step_j(st, key)))
+    return {
+        "shape": {"W": W, "d": d, "rho": rho},
+        # the per-round channel-step cost: one fused kernel launch
+        "channel_step_dispatches_per_round": fad_dispatches,
+        "channel_step_max_err_vs_jnp": fad_err,
+        "masked_receive_max_err_vs_jnp": masked_err,
+        "masked_vs_active_subset_max_err": subset_err,
+        "scenario_step_us_per_round_jnp": us,
+        "participation": float(jnp.mean(mask)),
+    }
+
+
+# ---------------------------------------------------------------------------
 # flash attention forward + backward (custom_vjp) dispatch counts
 # ---------------------------------------------------------------------------
 
@@ -383,9 +455,15 @@ def main() -> None:
                          "parity section only (CI smoke)")
     ap.add_argument("--out-attn-bwd", default="BENCH_attn_bwd.json",
                     help="where --attn-bwd writes its JSON")
+    ap.add_argument("--phy", action="store_true",
+                    help="phy scenario-engine section only: fused "
+                         "channel-step dispatch count + masked-receive "
+                         "parity (CI smoke)")
+    ap.add_argument("--out-phy", default="BENCH_phy.json",
+                    help="where --phy writes its JSON")
     args = ap.parse_args()
     derived = {}
-    if not (args.packed_only or args.attn_bwd):
+    if not (args.packed_only or args.attn_bwd or args.phy):
         derived = {"kernels": microbench(),
                    "transport": transport_microbench()}
     out = dict(derived)
@@ -395,6 +473,8 @@ def main() -> None:
         out["packed_uplink"] = packed_microbench()
     if args.attn_bwd:
         out["attn_bwd"] = attn_bwd_microbench()
+    if args.phy:
+        out["phy"] = phy_microbench()
     text = json.dumps(out, indent=2, default=str)
     print(text)
     if args.out and derived:
@@ -407,6 +487,9 @@ def main() -> None:
     if args.attn_bwd:
         with open(args.out_attn_bwd, "w") as f:
             f.write(json.dumps(out["attn_bwd"], indent=2, default=str) + "\n")
+    if args.phy:
+        with open(args.out_phy, "w") as f:
+            f.write(json.dumps(out["phy"], indent=2, default=str) + "\n")
 
 
 if __name__ == "__main__":

@@ -53,16 +53,23 @@ class AdmmConfig:
 
 
 class AFadmmState(NamedTuple):
-    """Per-round algorithm state. Shapes: theta/lam (W, d); Theta (d,)."""
+    """Per-round algorithm state. Shapes: theta/lam (W, d); Theta (d,).
+
+    ``phys`` carries the ``repro.phy`` scenario state (positions, CSI,
+    participation, correlated-fading recurrence) when the algorithm runs a
+    wireless scenario; it is ``None`` (an empty pytree node) on the legacy
+    block-fading path."""
 
     theta: Array
     lam: Complex
     Theta: Array
     blk: ChannelBlock
     step: Array  # int32
+    phys: Optional[NamedTuple] = None
 
 
-def init_state(key: Array, theta0: Array, blk: ChannelBlock) -> AFadmmState:
+def init_state(key: Array, theta0: Array, blk: ChannelBlock,
+               phys=None) -> AFadmmState:
     """theta0: (W, d) initial local models (paper: random init)."""
     W, d = theta0.shape
     return AFadmmState(
@@ -71,6 +78,7 @@ def init_state(key: Array, theta0: Array, blk: ChannelBlock) -> AFadmmState:
         Theta=jnp.mean(theta0, axis=0),
         blk=blk,
         step=jnp.zeros((), jnp.int32),
+        phys=phys,
     )
 
 
@@ -101,6 +109,8 @@ def afadmm_round(
     reduce_fn: Optional[ReduceFn] = None,
     min_reduce_fn: Optional[Callable[[Array], Array]] = None,
     backend: Optional[str] = None,
+    mask: Optional[Array] = None,
+    h_tx: Optional[Complex] = None,
 ) -> Tuple[AFadmmState, dict]:
     """One synchronous round of Algorithm 1 (with Appendix-B noise handling).
 
@@ -112,17 +122,23 @@ def afadmm_round(
       grad_fn: ``theta -> ∂f(θ)`` per worker, used by the flip rule. Shapes
         (W, d) -> (W, d).
       backend: OTA transport backend ("jnp"/"pallas"/None = REPRO_USE_PALLAS).
+      mask: (W,) participation mask (``repro.phy`` deep-fade truncation).
+        A masked worker skips the round: zero superposition contribution,
+        excluded from min-α, dual frozen.  All-masked rounds keep Θ (no-op).
+      h_tx: worker-side CSI ``h_hat`` (imperfect CSI): workers precode,
+        locally solve, and dual-update against it; the air applies ``h``.
     """
     h = blk_next.h
     changed = blk_next.changed
     rho = acfg.rho
+    h_wkr = h if h_tx is None else h_tx   # what the workers believe
 
     # --- primal / flip (Sec. 2 "Time-varying Channel") --------------------
-    theta_solved = local_solve(state.theta, state.lam, h, state.Theta)
+    theta_solved = local_solve(state.theta, state.lam, h_wkr, state.Theta)
     if acfg.flip_on_change:
         theta_new = jnp.where(changed, state.theta, theta_solved)
         lam_flip = flip_lambda(grad_fn(state.theta), state.theta, state.Theta,
-                               h, rho, backend=backend)
+                               h_wkr, rho, backend=backend)
         lam_pre = cplx.cwhere(changed, lam_flip, state.lam)
     else:
         theta_new = theta_solved
@@ -132,24 +148,37 @@ def afadmm_round(
     Theta_new, inv_alpha = ota_uplink(
         theta_new, lam_pre, h, key, rho, ccfg,
         power_control=acfg.power_control, reduce_fn=reduce_fn,
-        min_reduce_fn=min_reduce_fn, backend=backend)
+        min_reduce_fn=min_reduce_fn, mask=mask,
+        h_tx=h_tx, backend=backend)
+    if mask is not None:
+        # all workers in a deep fade -> nobody transmitted: keep Θ rather
+        # than demodulating pure noise over an ε-clamped zero pilot
+        Theta_new = jnp.where(jnp.any(mask), Theta_new, state.Theta)
 
     # --- downlink + dual ---------------------------------------------------
     if ccfg.analog_downlink:
         kd = jax.random.fold_in(key, 1)
         dn = matched_filter_noise(kd, state.theta.shape, ccfg)
-        lam_new = dual_update(lam_pre, h, theta_new, Theta_new, rho, dn.re,
-                              backend=backend)
+        lam_new = dual_update(lam_pre, h_wkr, theta_new, Theta_new, rho,
+                              dn.re, backend=backend)
     else:
-        lam_new = dual_update(lam_pre, h, theta_new, Theta_new, rho,
+        lam_new = dual_update(lam_pre, h_wkr, theta_new, Theta_new, rho,
                               backend=backend)
+    if mask is not None:
+        # truncated workers sat the round out: their duals stay frozen at
+        # the PRE-round value — state.lam, not lam_pre, which under
+        # flip_on_change already includes this round's channel-redraw flip
+        lam_new = cplx.cwhere(mask[:, None], lam_new, state.lam)
 
     new_state = AFadmmState(theta=theta_new, lam=lam_new, Theta=Theta_new,
-                            blk=blk_next, step=state.step + 1)
+                            blk=blk_next, step=state.step + 1,
+                            phys=state.phys)
     metrics = {
         "primal_residual": jnp.sqrt(jnp.mean((theta_new - Theta_new[None, :]) ** 2)),
         "dual_residual": jnp.sqrt(jnp.mean(
             (cplx.abs2(h) * (Theta_new - state.Theta)[None, :]) ** 2)) * rho,
         "inv_alpha": jnp.asarray(inv_alpha),
     }
+    if mask is not None:
+        metrics["participation"] = jnp.mean(mask.astype(jnp.float32))
     return new_state, metrics

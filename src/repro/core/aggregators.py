@@ -25,7 +25,7 @@ pmin under shard_map.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -109,22 +109,50 @@ class AFadmm(ScanRounds):
     min_reduce_fn: Optional[Callable[[Array], Array]] = None
     #: OTA transport backend ("jnp" | "pallas" | None = REPRO_USE_PALLAS)
     backend: Optional[str] = None
+    #: optional ``repro.phy`` scenario (correlated fading / geometry /
+    #: imperfect CSI / deep-fade truncation).  None keeps the legacy
+    #: i.i.d. block-fading channel bit-for-bit.
+    scenario: Optional[Any] = None
 
     name = "afadmm"
 
     def init(self, key: Array, theta0: Array) -> AFadmmState:
         kc, _ = jax.random.split(key)
-        blk = init_channel(kc, self.ccfg, n_coeffs=theta0.shape[-1])
-        return admm.init_state(key, theta0, blk)
+        if self.scenario is None:
+            blk = init_channel(kc, self.ccfg, n_coeffs=theta0.shape[-1])
+            return admm.init_state(key, theta0, blk)
+        W, d = theta0.shape
+        phys = self.scenario.init(kc, W, d)
+        blk = self._as_block(phys, phys.h, jnp.zeros((), bool))
+        return admm.init_state(key, theta0, blk, phys=phys)
+
+    @staticmethod
+    def _as_block(phys, h_prev, changed: Array) -> ChannelBlock:
+        """ChannelBlock view of a PhyState (the flip rule reads .changed)."""
+        return ChannelBlock(
+            h=phys.h, h_prev=h_prev,
+            changed=jnp.broadcast_to(changed, phys.h.re.shape),
+            age=phys.age)
 
     def round(self, key: Array, st: AFadmmState, local_solve: LocalSolve,
               grad_fn: GradFn) -> Tuple[AFadmmState, dict]:
         kc, kn = jax.random.split(key)
-        blk_next = step_channel(kc, st.blk, self.ccfg)
+        mask = h_tx = None
+        if self.scenario is None:
+            blk_next = step_channel(kc, st.blk, self.ccfg)
+        else:
+            phys = self.scenario.step(kc, st.phys)
+            blk_next = self._as_block(phys, st.blk.h,
+                                      self.scenario.changed(phys))
+            st = st._replace(phys=phys)
+            if self.scenario.truncating:
+                mask = phys.mask
+            if self.scenario.imperfect_csi:
+                h_tx = phys.h_hat
         st, metrics = admm.afadmm_round(
             st, blk_next, local_solve, grad_fn, self.acfg, self.ccfg, kn,
             reduce_fn=self.reduce_fn, min_reduce_fn=self.min_reduce_fn,
-            backend=self.backend)
+            backend=self.backend, mask=mask, h_tx=h_tx)
         metrics["channel_uses"] = jnp.asarray(
             float(subcarrier.analog_channel_uses(self.plan)))
         return st, metrics

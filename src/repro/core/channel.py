@@ -30,7 +30,18 @@ Array = jax.Array
 
 @dataclasses.dataclass(frozen=True)
 class ChannelConfig:
-    """Static description of the simulated wireless link."""
+    """Static description of the simulated wireless link.
+
+    This is the *block-fading* substrate: i.i.d. Rayleigh redraws every
+    ``coherence_iters`` rounds.  It is exactly the ``rho = 0`` special case
+    of the Gauss–Markov correlated-fading recurrence in ``repro.phy``
+    (``h' = rho·h + sqrt(1−rho²)·w`` applied at coherence boundaries) —
+    the ``"block-fading"`` scenario preset reproduces this module's
+    ``init_channel``/``step_channel`` draws bit-for-bit, and richer
+    dynamics (Doppler correlation, geometry, imperfect CSI, deep-fade
+    truncation) are scenario presets layered on top, not channel flags
+    here.
+    """
 
     n_workers: int
     n_subcarriers: int = 4096

@@ -4,6 +4,15 @@ Each worker computes α_n with  α_n² · Σ_i |s_{n,i}|² = P, sends the scalar
 the PS over the control channel; the PS takes α = min_n α_n and broadcasts it.
 Everyone transmits α·s, the PS divides the matched-filter output by α — so the
 effective receiver noise is z/α and no worker ever exceeds its budget P.
+
+Zero-energy guard: a worker with *nothing to send* (Σ|s|² = 0 — e.g. a
+deep-fade-truncated worker whose signal row is zeroed, or an all-zero
+model delta) imposes no power constraint, so its α_n is **+inf** rather
+than the ``sqrt(P / 1e-30) ≈ 10¹⁴·sqrt(P)`` the bare eps-clamp used to
+produce — a value that silently dominated every per-worker α statistic and
+turned ``tx_energy`` reports into garbage for near-zero-energy rows.  If
+*every* worker is energy-free, ``min_alpha`` is +inf and the round's
+effective ``1/α`` is exactly 0 (the round drivers treat it as a no-op).
 """
 from __future__ import annotations
 
@@ -18,15 +27,28 @@ from repro.core.cplx import Complex
 Array = jax.Array
 
 
+def alpha_from_energy(energy: Array, power_budget: float) -> Array:
+    """α_n = sqrt(P / E_n) with the zero-energy guard (E_n = 0 ⇒ +inf).
+
+    THE power-scaling rule: both the flat path (:func:`per_worker_alpha`)
+    and the transport layer (``transport.inv_alpha_from_energy``) call this,
+    so the guard can never drift between the two."""
+    return jnp.where(energy > 0.0,
+                     jnp.sqrt(power_budget / jnp.maximum(energy, 1e-30)),
+                     jnp.inf)
+
+
 def per_worker_alpha(signals: Complex, power_budget: float) -> Array:
-    """α_n = sqrt(P / Σ_i |s_{n,i}|²), per worker. signals: (W, d)."""
-    energy = jnp.sum(cplx.abs2(signals), axis=-1)  # (W,)
-    return jnp.sqrt(power_budget / jnp.maximum(energy, 1e-30))
+    """α_n = sqrt(P / Σ_i |s_{n,i}|²), per worker; +inf for zero-energy
+    rows (no signal ⇒ no constraint).  signals: (W, d)."""
+    return alpha_from_energy(jnp.sum(cplx.abs2(signals), axis=-1),
+                             power_budget)
 
 
 def min_alpha(signals: Complex, power_budget: float,
               min_reduce_fn: Optional[Callable[[Array], Array]] = None) -> Array:
-    """α = min_n α_n (scalar). Under shard_map pass a pmin reducer."""
+    """α = min_n α_n (scalar; +inf iff no worker has signal energy).
+    Under shard_map pass a pmin reducer."""
     alphas = per_worker_alpha(signals, power_budget)
     if min_reduce_fn is None:
         return jnp.min(alphas)
@@ -34,5 +56,8 @@ def min_alpha(signals: Complex, power_budget: float,
 
 
 def tx_energy(signals: Complex, alpha: Array | float) -> Array:
-    """Actual per-worker transmitted energy α²·Σ|s|² (for the energy benchmark)."""
-    return (alpha ** 2) * jnp.sum(cplx.abs2(signals), axis=-1)
+    """Actual per-worker transmitted energy α²·Σ|s|² (for the energy
+    benchmark).  A zero-energy row transmits exactly 0 even under a
+    (possibly +inf) α — guarded so inf·0 never produces NaN."""
+    energy = jnp.sum(cplx.abs2(signals), axis=-1)
+    return jnp.where(energy > 0.0, (alpha ** 2) * energy, 0.0)

@@ -42,6 +42,7 @@ import jax.numpy as jnp
 from repro.core import cplx
 from repro.core.channel import ChannelConfig, matched_filter_noise
 from repro.core.cplx import Complex
+from repro.core.power import alpha_from_energy
 
 Array = jax.Array
 ReduceFn = Callable[[Array], Array]
@@ -116,9 +117,18 @@ def demodulate(y: Complex, sumh2: Array, noise: Complex,
     return (y_re + n_re * inv_alpha) / jnp.maximum(sumh2, 1e-12)
 
 
+def _mask_planes(x: Complex, mask: Array) -> Complex:
+    """Zero a masked worker's planes via ``where`` (NOT multiplication:
+    a dropped worker's buffers may hold anything, and NaN·0 = NaN would
+    leak it into the superposition).  mask: (W,) -> broadcast over (W, ...)."""
+    mb = mask.reshape((mask.shape[0],) + (1,) * (x.re.ndim - 1))
+    return cplx.cwhere(mb, x, cplx.czero(x.re.shape, x.re.dtype))
+
+
 def receive(signals: Complex, h: Complex, key: Array, ccfg: ChannelConfig,
             inv_alpha: Array | float = 1.0, *,
             reduce_fn: Optional[ReduceFn] = None,
+            mask: Optional[Array] = None,
             backend: Optional[str] = None) -> Array:
     """Fused superpose → matched-filter → demodulate.  (W, ...) -> (...).
 
@@ -126,18 +136,35 @@ def receive(signals: Complex, h: Complex, key: Array, ccfg: ChannelConfig,
     Re{Σ h⊙s} is computed with the same elementwise expression either way,
     so this is bit-identical to the full complex superposition — but halves
     the reduce bytes (the all-reduce the roofline counts as the channel use).
+
+    ``mask`` ((W,) bool) drops workers from the round: a masked worker
+    contributes exactly zero to both the superposition and the pilot
+    aggregate Σ|h|² (deep-fade truncation — ``repro.phy``).  An all-masked
+    round divides zero signal by the ε-clamped zero pilot: callers holding
+    the previous global model must guard it (the round drivers do).
     """
     backend = resolve_backend(backend)
     out_shape = signals.re.shape[1:]
     noise = matched_filter_noise(key, out_shape, ccfg)
     if backend == "pallas" and reduce_fn is None:
-        from repro.kernels import ota as _k
         W = signals.re.shape[0]
+        if mask is not None:
+            from repro.kernels import phy_channel as _pk
+            out = _pk.ota_receive_masked(
+                signals.re.reshape(W, -1), signals.im.reshape(W, -1),
+                h.re.reshape(W, -1), h.im.reshape(W, -1),
+                mask.reshape(W), noise.re.reshape(-1), inv_alpha,
+                interpret=_interpret())
+            return out.reshape(out_shape)
+        from repro.kernels import ota as _k
         out = _k.ota_receive(
             signals.re.reshape(W, -1), signals.im.reshape(W, -1),
             h.re.reshape(W, -1), h.im.reshape(W, -1),
             noise.re.reshape(-1), inv_alpha, interpret=_interpret())
         return out.reshape(out_shape)
+    if mask is not None:
+        signals = _mask_planes(signals, mask)
+        h = _mask_planes(h, mask)
     rx_re = h.re * signals.re - h.im * signals.im
     sumh2 = cplx.abs2(h)
     red = reduce_fn or (lambda x: jnp.sum(x, axis=0))
@@ -262,9 +289,25 @@ def worker_energy(signals: Complex) -> Array:
 
 
 def inv_alpha_from_energy(energy: Array, budget: float,
-                          min_reduce_fn: Optional[ReduceFn] = None) -> Array:
-    """1/α with α = min_n sqrt(P_budget / E_n).  Under shard_map pass pmin."""
-    alphas = jnp.sqrt(budget / jnp.maximum(energy, 1e-30))
+                          min_reduce_fn: Optional[ReduceFn] = None,
+                          mask: Optional[Array] = None) -> Array:
+    """1/α with α = min_n sqrt(P_budget / E_n) over the *active* workers.
+
+    Guards (regression-tested in ``tests/test_channel_power.py``):
+
+    * zero-energy rows — a worker with nothing to send imposes no power
+      constraint; its α_n is +inf so it never binds the min (the historical
+      1e-30 clamp instead produced α ≈ sqrt(P·1e30), which dominated any
+      per-worker α statistic and made `tx_energy` reports meaningless).
+    * ``mask`` ((W,) bool) — truncated (non-participating) workers are
+      excluded from the min-α consensus: they don't transmit this round, so
+      they must not throttle the workers that do.
+    * all rows masked/zero — α = +inf, so 1/α = 0 exactly: demodulate adds
+      zero noise and the round drivers degenerate to a no-op update.
+    """
+    alphas = alpha_from_energy(energy, budget)
+    if mask is not None:
+        alphas = jnp.where(mask, alphas, jnp.inf)
     a = jnp.min(alphas)
     if min_reduce_fn is not None:
         a = min_reduce_fn(a)
@@ -272,14 +315,15 @@ def inv_alpha_from_energy(energy: Array, budget: float,
 
 
 def power_scale(signals: Complex, ccfg: ChannelConfig,
-                min_reduce_fn: Optional[ReduceFn] = None) -> Array:
+                min_reduce_fn: Optional[ReduceFn] = None,
+                mask: Optional[Array] = None) -> Array:
     """inv_alpha for a single-leaf uplink.  Budget: per-subcarrier power P
     (the paper's SNR is per-subcarrier: SNR = P|h|²/(N0 W)) × elements
     uploaded per worker."""
     d = int(signals.re.size // signals.re.shape[0])
     budget = ccfg.transmit_power * d
     return inv_alpha_from_energy(worker_energy(signals), budget,
-                                 min_reduce_fn=min_reduce_fn)
+                                 min_reduce_fn=min_reduce_fn, mask=mask)
 
 
 # ---------------------------------------------------------------------------
@@ -291,6 +335,8 @@ def ota_uplink(theta: Array, lam: Complex, h: Complex, key: Array,
                power_control: bool = True,
                reduce_fn: Optional[ReduceFn] = None,
                min_reduce_fn: Optional[ReduceFn] = None,
+               mask: Optional[Array] = None,
+               h_tx: Optional[Complex] = None,
                backend: Optional[str] = None) -> Tuple[Array, Array]:
     """modulate → power-scale → superpose → matched-filter → demodulate.
 
@@ -298,17 +344,24 @@ def ota_uplink(theta: Array, lam: Complex, h: Complex, key: Array,
       theta/lam/h: (W, ...) worker-major; Θ returned with the worker dim
         reduced away.
       key: PRNG key for the matched-filter AWGN (ignored if noise-free).
+      mask: optional (W,) participation mask (``repro.phy`` deep-fade
+        truncation): masked workers contribute exactly zero to the
+        superposition/pilot aggregate and are excluded from min-α.
+      h_tx: the channel the *workers* precode with (imperfect CSI
+        ``h_hat``); the air still applies ``h``.  None = perfect CSI.
 
     Returns (Theta, inv_alpha).
     """
     backend = resolve_backend(backend)
-    signals = modulate(theta, lam, h, rho, backend=backend)
+    signals = modulate(theta, lam, h if h_tx is None else h_tx, rho,
+                       backend=backend)
     if power_control:
-        inv_alpha = power_scale(signals, ccfg, min_reduce_fn=min_reduce_fn)
+        inv_alpha = power_scale(signals, ccfg, min_reduce_fn=min_reduce_fn,
+                                mask=mask)
     else:
         # f32 like the rest of the analog path (a bf16 theta must not
         # down-cast the noise/α arithmetic in demodulate)
         inv_alpha = jnp.asarray(1.0, jnp.float32)
     Theta = receive(signals, h, key, ccfg, inv_alpha,
-                    reduce_fn=reduce_fn, backend=backend)
+                    reduce_fn=reduce_fn, mask=mask, backend=backend)
     return Theta, inv_alpha

@@ -175,6 +175,9 @@ def ota_tree_round_packed_state(theta: PyTree, lam_p: Complex, h_p: Complex,
                                 backend: Optional[str] = None,
                                 reduce_fn: Optional[Callable[[Array], Array]] = None,
                                 min_reduce_fn: Optional[Callable[[Array], Array]] = None,
+                                mask: Optional[Array] = None,
+                                h_tx_p: Optional[Complex] = None,
+                                Theta_prev: Optional[PyTree] = None,
                                 ) -> Tuple[PyTree, Complex, dict]:
     """One OTA round where the duals/fading are ALREADY packed ``(W, D)``.
 
@@ -182,16 +185,33 @@ def ota_tree_round_packed_state(theta: PyTree, lam_p: Complex, h_p: Complex,
     uplink math is bit-identical to the packed :func:`ota_tree_round` given
     equal values — ``pack_cplx`` of a λ/h tree commutes with keeping the
     buffers packed.  Returns ``(Theta_tree_f32, lam_new_packed, metrics)``.
+
+    Scenario extensions (``repro.phy``): ``mask`` ((W,) participation)
+    zeroes truncated workers out of the superposition/min-α and freezes
+    their duals; ``h_tx_p`` is the packed worker-side CSI (imperfect CSI);
+    ``Theta_prev`` (tree) guards the all-masked degenerate round — with
+    nobody transmitting the global model is simply kept.
     """
     theta_p = pack(spec, theta)                    # the one concat per round
     Theta_p, inv_alpha = transport.ota_uplink(
         theta_p, lam_p, h_p, key, acfg.rho, ccfg,
         power_control=acfg.power_control, reduce_fn=reduce_fn,
-        min_reduce_fn=min_reduce_fn, backend=backend)
-    lam_new_p = transport.dual_update(lam_p, h_p, theta_p, Theta_p, acfg.rho,
-                                      backend=backend)
+        min_reduce_fn=min_reduce_fn, mask=mask, h_tx=h_tx_p,
+        backend=backend)
+    h_wkr = h_p if h_tx_p is None else h_tx_p
+    lam_new_p = transport.dual_update(lam_p, h_wkr, theta_p, Theta_p,
+                                      acfg.rho, backend=backend)
+    metrics = {"inv_alpha": jnp.asarray(inv_alpha)}
+    if mask is not None:
+        lam_new_p = cplx.cwhere(mask[:, None], lam_new_p, lam_p)
+        metrics["participation"] = jnp.mean(mask.astype(jnp.float32))
     Theta_new = unpack(spec, Theta_p, cast=False)  # analog path stays f32
-    return Theta_new, lam_new_p, {"inv_alpha": jnp.asarray(inv_alpha)}
+    if mask is not None and Theta_prev is not None:
+        keep = jnp.any(mask)
+        Theta_new = jax.tree.map(
+            lambda new, old: jnp.where(keep, new, old.astype(new.dtype)),
+            Theta_new, Theta_prev)
+    return Theta_new, lam_new_p, metrics
 
 
 def ota_tree_round(theta: PyTree, lam: PyTree, h: PyTree, key: Array,
@@ -200,6 +220,9 @@ def ota_tree_round(theta: PyTree, lam: PyTree, h: PyTree, key: Array,
                    reduce_fn: Optional[Callable[[Array], Array]] = None,
                    min_reduce_fn: Optional[Callable[[Array], Array]] = None,
                    packed: Optional[bool] = None,
+                   mask: Optional[Array] = None,
+                   h_tx: Optional[PyTree] = None,
+                   Theta_prev: Optional[PyTree] = None,
                    ) -> Tuple[PyTree, PyTree, dict]:
     """Uplink + global + dual for one round (post-local-steps), packed.
 
@@ -226,12 +249,16 @@ def ota_tree_round(theta: PyTree, lam: PyTree, h: PyTree, key: Array,
     if not (_packing_pays_off() if packed is None else packed):
         return ota_tree_round_leafwise(theta, lam, h, key, acfg, ccfg,
                                        backend=backend, reduce_fn=reduce_fn,
-                                       min_reduce_fn=min_reduce_fn)
+                                       min_reduce_fn=min_reduce_fn,
+                                       mask=mask, h_tx=h_tx,
+                                       Theta_prev=Theta_prev)
     spec = build_packspec(theta, batch_dims=1)
     Theta_new, lam_new_p, metrics = ota_tree_round_packed_state(
         theta, pack_cplx(spec, lam), pack_cplx(spec, h), key, acfg, ccfg,
         spec, backend=backend, reduce_fn=reduce_fn,
-        min_reduce_fn=min_reduce_fn)
+        min_reduce_fn=min_reduce_fn, mask=mask,
+        h_tx_p=None if h_tx is None else pack_cplx(spec, h_tx),
+        Theta_prev=Theta_prev)
     return Theta_new, unpack_cplx(spec, lam_new_p), metrics
 
 
@@ -240,19 +267,29 @@ def ota_tree_round_leafwise(theta: PyTree, lam: PyTree, h: PyTree, key: Array,
                             backend: Optional[str] = None,
                             reduce_fn: Optional[Callable[[Array], Array]] = None,
                             min_reduce_fn: Optional[Callable[[Array], Array]] = None,
+                            mask: Optional[Array] = None,
+                            h_tx: Optional[PyTree] = None,
+                            Theta_prev: Optional[PyTree] = None,
                             ) -> Tuple[PyTree, PyTree, dict]:
     """Reference per-leaf round: one receive chain and one noise key per
     leaf (the historical semantics).  Kept as the parity contract for the
-    packed path — and for callers that need per-leaf noise reproducibility.
+    packed path — and for callers that need per-leaf noise reproducibility
+    (the per-leaf PRNG schedule is pinned in ``tests/test_transport.py``:
+    leaf ``i`` draws its matched-filter noise from
+    ``jax.random.split(key, n_leaves)[i]``).
+
+    ``mask``/``h_tx``/``Theta_prev``: same participation/CSI semantics as
+    :func:`ota_tree_round_packed_state`, applied per leaf.
     """
     rho = acfg.rho
-    signals = _modulate_tree(theta, lam, h, rho, backend)
+    h_wkr = h if h_tx is None else h_tx
+    signals = _modulate_tree(theta, lam, h_wkr, rho, backend)
 
     if acfg.power_control:
         budget = ccfg.transmit_power * _tree_size(signals)
         inv_alpha = transport.inv_alpha_from_energy(
             _tree_energy_per_worker(signals), budget,
-            min_reduce_fn=min_reduce_fn)
+            min_reduce_fn=min_reduce_fn, mask=mask)
     else:
         inv_alpha = jnp.asarray(1.0, jnp.float32)
 
@@ -261,12 +298,24 @@ def ota_tree_round_leafwise(theta: PyTree, lam: PyTree, h: PyTree, key: Array,
     keys = _leaf_keys(key, signals)
     Theta_new = jax.tree_util.tree_unflatten(treedef, [
         transport.receive(s, hh, k, ccfg, inv_alpha,
-                          reduce_fn=reduce_fn, backend=backend)
+                          reduce_fn=reduce_fn, mask=mask, backend=backend)
         for s, hh, k in zip(s_leaves, h_leaves, keys)])
 
     lam_new = _zmap(
         lambda l, hh, t, T: transport.dual_update(l, hh, t, T, rho,
                                                   backend=backend),
-        lam, h, theta, Theta_new)
+        lam, h_wkr, theta, Theta_new)
     metrics = {"inv_alpha": jnp.asarray(inv_alpha)}
+    if mask is not None:
+        lam_new = _zmap(
+            lambda new, old: cplx.cwhere(
+                mask.reshape((mask.shape[0],) + (1,) * (new.re.ndim - 1)),
+                new, old),
+            lam_new, lam)
+        metrics["participation"] = jnp.mean(mask.astype(jnp.float32))
+        if Theta_prev is not None:
+            keep = jnp.any(mask)
+            Theta_new = _zmap(
+                lambda new, old: jnp.where(keep, new, old.astype(new.dtype)),
+                Theta_new, Theta_prev)
     return Theta_new, lam_new, metrics

@@ -85,9 +85,11 @@ def _text_seq(cfg, seq: int) -> int:
 def build_train_spec(arch: str, mesh: Mesh, *, multi_pod: bool,
                      reduced: bool = False,
                      transport_backend: Optional[str] = None,
-                     train_driver: str = "scan") -> DryRunSpec:
+                     train_driver: str = "scan",
+                     scenario: Optional[str] = None) -> DryRunSpec:
     """``transport_backend`` ("jnp" | "pallas" | None = REPRO_USE_PALLAS
-    env var) and ``train_driver`` ("scan" | "loop") are per-experiment
+    env var), ``train_driver`` ("scan" | "loop") and ``scenario`` (a
+    ``repro.phy`` preset; None = legacy block fading) are per-experiment
     fields threaded into the trainer / recorded in meta — not env-only."""
     if train_driver not in ("scan", "loop"):
         raise ValueError(f"unknown train driver {train_driver!r}")
@@ -103,6 +105,9 @@ def build_train_spec(arch: str, mesh: Mesh, *, multi_pod: bool,
 
     sketched = arch in BIG_ARCHS and not reduced
     if sketched:
+        if scenario is not None:
+            raise ValueError("phy scenarios are a replicated-mode feature; "
+                             f"{arch} trains sketched")
         W = 8
         flcfg = FLConfig(mode="sketched", n_workers=W, local_steps=1,
                          local_lr=1e-3, sketch_ratio=256,
@@ -116,9 +121,15 @@ def build_train_spec(arch: str, mesh: Mesh, *, multi_pod: bool,
         # decision must be made HERE, where the mesh is known, because
         # init_fn is shape-traced outside the mesh context below.
         model_parallel = dict(mesh.shape).get("model", 1) > 1
+        if scenario is not None and model_parallel:
+            raise ValueError(
+                "phy scenarios run over the packed (W, D) state, which "
+                "model-parallel meshes keep leafwise (GSPMD reshard storms "
+                "— ROADMAP PR 2 notes); drop --scenario or the model axis")
         flcfg = FLConfig(mode="replicated", n_workers=W, local_steps=1,
                          local_lr=1e-3, transport_backend=transport_backend,
-                         packed_uplink=False if model_parallel else None)
+                         packed_uplink=False if model_parallel else None,
+                         scenario=scenario)
         bw = gbatch // W
     acfg = AdmmConfig(rho=0.5, flip_on_change=False)
     ccfg = ChannelConfig(n_workers=W, snr_db=40.0)
@@ -152,16 +163,27 @@ def build_train_spec(arch: str, mesh: Mesh, *, multi_pod: bool,
             # persistently-packed λ/h: one (W, D) Complex buffer each —
             # worker axis sharded over data, packed axis replicated
             lam_spec = jax.tree.map(lambda _: P(wspec), state_sds.lam)
-            h_spec = jax.tree.map(lambda _: P(wspec), state_sds.chan.h)
         else:
             lam_spec = SH.tree_pspecs(state_sds.lam, **worker)
-            h_spec = SH.tree_pspecs(state_sds.chan.h, **worker)
+        if scenario is not None:
+            # PhyState: every populated leaf is worker-major ((W, D) fading
+            # planes, (W,) gains/masks, (W, 2) positions) except the scalar
+            # round counter
+            chan_spec = jax.tree.map(
+                lambda l: P(wspec) if l.ndim >= 1 else P(), state_sds.chan)
+        elif isinstance(state_sds.lam, Complex):
+            chan_spec = type(state_sds.chan)(
+                h=jax.tree.map(lambda _: P(wspec), state_sds.chan.h),
+                age=P())
+        else:
+            chan_spec = type(state_sds.chan)(
+                h=SH.tree_pspecs(state_sds.chan.h, **worker), age=P())
         state_spec = type(state_sds)(
             theta=SH.tree_pspecs(state_sds.theta, **worker),
             lam=lam_spec,
             Theta=SH.tree_pspecs(state_sds.Theta, worker_dim=False,
                                  fsdp=False, **kw),
-            chan=type(state_sds.chan)(h=h_spec, age=P()),
+            chan=chan_spec,
             opt=type(state_sds.opt)(
                 mu=SH.tree_pspecs(state_sds.opt.mu, **worker),
                 nu=SH.tree_pspecs(state_sds.opt.nu, **worker),
@@ -180,7 +202,7 @@ def build_train_spec(arch: str, mesh: Mesh, *, multi_pod: bool,
                   fl_mode=flcfg.mode, n_workers=W,
                   sliding_window=cfg.sliding_window,
                   transport_backend=transport_backend,
-                  train_driver=train_driver),
+                  train_driver=train_driver, scenario=scenario),
     )
 
 
@@ -262,13 +284,15 @@ def input_specs(arch: str, shape_name: str = "train_4k",
 def build_spec(arch: str, shape_name: str, mesh: Mesh, *, multi_pod: bool,
                reduced: bool = False,
                transport_backend: Optional[str] = None,
-               train_driver: str = "scan") -> DryRunSpec:
+               train_driver: str = "scan",
+               scenario: Optional[str] = None) -> DryRunSpec:
     kind = SHAPES[shape_name]["kind"]
     if kind == "train":
         return build_train_spec(arch, mesh, multi_pod=multi_pod,
                                 reduced=reduced,
                                 transport_backend=transport_backend,
-                                train_driver=train_driver)
+                                train_driver=train_driver,
+                                scenario=scenario)
     if kind == "prefill":
         return build_prefill_spec(arch, mesh, multi_pod=multi_pod,
                                   reduced=reduced)

@@ -21,6 +21,7 @@ from repro.core.admm import AdmmConfig
 from repro.core.channel import ChannelConfig
 from repro.data.synthetic import token_dataset
 from repro.models.registry import get_model, list_archs
+from repro.phy import list_scenarios
 from repro.train.llm_trainer import FLConfig, make_fl_train
 
 
@@ -36,6 +37,18 @@ def main() -> None:
     ap.add_argument("--driver", default="loop", choices=["loop", "scan"],
                     help="round driver: python loop (one dispatch/round) or "
                          "scan-compiled blocks of --log-every rounds")
+    ap.add_argument("--scenario", default=None, choices=list_scenarios(),
+                    help="repro.phy wireless scenario preset (default: the "
+                         "legacy block-fading channel, bit-identical)")
+    ap.add_argument("--doppler-hz", type=float, default=None,
+                    help="override the scenario's Doppler frequency "
+                         "(rho = J0(2*pi*f_d*T))")
+    ap.add_argument("--csi-err", type=float, default=None,
+                    help="worker CSI error std sigma_e "
+                         "(h_hat = h + CN(0, sigma_e^2))")
+    ap.add_argument("--h-min", type=float, default=None,
+                    help="deep-fade truncation threshold on the per-worker "
+                         "RMS |h| (workers below it skip the round)")
     ap.add_argument("--rounds", type=int, default=50)
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--batch", type=int, default=2, help="per-worker batch")
@@ -55,9 +68,15 @@ def main() -> None:
     cfg = model.cfg
     W = args.workers
 
+    if args.scenario is not None and args.mode != "replicated":
+        raise SystemExit("--scenario requires --mode replicated (the "
+                         "scenario engine runs over the packed (W, D) "
+                         "replicated state)")
     flcfg = FLConfig(mode=args.mode, n_workers=W,
                      local_steps=args.local_steps, local_lr=args.local_lr,
-                     transport_backend=args.backend)
+                     transport_backend=args.backend,
+                     scenario=args.scenario, doppler_hz=args.doppler_hz,
+                     csi_err=args.csi_err, h_min=args.h_min)
     acfg = AdmmConfig(rho=args.rho, flip_on_change=False)
     ccfg = ChannelConfig(n_workers=W, snr_db=args.snr_db,
                          coherence_iters=args.coherence)

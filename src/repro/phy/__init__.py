@@ -1,0 +1,18 @@
+"""``repro.phy`` — the wireless scenario engine.
+
+Composable channel physics over the packed ``(W, D)`` index space:
+time-correlated (Jakes-Doppler) fading, large-scale geometry + mobility,
+imperfect CSI, and deep-fade participation truncation — consumed by the
+flat ADMM path (``core.aggregators.AFadmm(scenario=...)``) and the packed
+LLM trainer (``FLConfig(scenario=...)``) through the participation-aware
+transport layer.
+"""
+from repro.phy.csi import estimate as estimate_csi  # noqa: F401
+from repro.phy.fading import (bessel_j0, correlated_step, doppler_rho,  # noqa: F401
+                              gauss_markov_step, innovation_scale)
+from repro.phy.geometry import (GeometryConfig, init_positions,  # noqa: F401
+                                path_gain, shadowing, uniform_disk,
+                                waypoint_step, worker_gains)
+from repro.phy.scenario import (PRESETS, PhyConfig, PhyState,  # noqa: F401
+                                Scenario, h_tx, list_scenarios,
+                                make_scenario, participation_mask)

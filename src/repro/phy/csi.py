@@ -1,0 +1,37 @@
+"""Imperfect channel state information (CSI).
+
+The paper's Alg. 1 assumes each worker precodes with its *true* fading
+coefficient ``h``.  Real systems estimate ``h`` from pilots, so the worker
+actually holds
+
+    h_hat = h + e,      e ~ CN(0, sigma_e²)
+
+and transmits ``s = h_hat*·θ + λ*/ρ`` while the *air* still applies the
+true ``h`` (and the PS's pilot aggregate ``Σ|h|²`` is taken as true — PS
+estimation error is a second-order effect next to the per-worker one).
+The transport layer carries the split explicitly: ``h_tx`` (what workers
+precode/dual-update with) vs ``h`` (what the channel applies).
+
+Pure functions over packed ``(W, D)`` Complex planes.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.channel import awgn
+from repro.core.cplx import Complex
+
+Array = jax.Array
+
+
+def estimate(key: Array, h: Complex, sigma_e: float) -> Complex:
+    """Worker-side channel estimate ``h_hat = h + CN(0, sigma_e²)``.
+
+    ``sigma_e == 0`` returns ``h`` itself (perfect CSI — not merely equal
+    values: the same arrays, so downstream ``h_tx is h`` short-circuits keep
+    the perfect-CSI path bit-identical to the legacy transport).
+    """
+    if float(sigma_e) == 0.0:
+        return h
+    e = awgn(key, h.re.shape, float(sigma_e) ** 2, h.re.dtype)
+    return h + e

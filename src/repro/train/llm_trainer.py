@@ -75,6 +75,15 @@ class FLConfig:
     #: state + reference loop (False), or auto (None: packed except under a
     #: model-parallel mesh — see tree_ota.packing_pays_off)
     packed_uplink: Optional[bool] = None
+    #: ``repro.phy`` wireless scenario preset (replicated mode): None keeps
+    #: the legacy i.i.d. block-fading channel bit-for-bit; a name from
+    #: ``phy.list_scenarios()`` runs the scenario engine over the packed
+    #: (W, D) index space (forces the packed state layout).
+    scenario: Optional[str] = None
+    #: scenario overrides (None = the preset's value)
+    doppler_hz: Optional[float] = None
+    csi_err: Optional[float] = None
+    h_min: Optional[float] = None
 
 
 def _local_opt(flcfg: FLConfig):
@@ -92,10 +101,32 @@ def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
     W = flcfg.n_workers
     opt = _local_opt(flcfg)
 
+    scn = None
+    if flcfg.scenario is not None:
+        from repro.phy import make_scenario
+        from repro.phy.scenario import h_tx as _phys_h_tx
+        if flcfg.packed_uplink is False:
+            raise ValueError(
+                "FLConfig.scenario runs over the packed (W, D) index space "
+                "and requires the packed state layout (packed_uplink != "
+                "False)")
+        scn = make_scenario(flcfg.scenario, ccfg,
+                            doppler_hz=flcfg.doppler_hz,
+                            csi_err=flcfg.csi_err, h_min=flcfg.h_min,
+                            backend=flcfg.transport_backend)
+
     def _packed_state() -> bool:
         """Resolved at trace time of ``init_fn``; ``train_step`` then reads
         the layout from the state structure itself (so init and step can't
         disagree).  θ always stays a tree — the local steps run the model."""
+        if scn is not None:
+            if not packing_pays_off():
+                raise ValueError(
+                    "FLConfig.scenario runs over the packed (W, D) state, "
+                    "which model-parallel meshes keep leafwise (GSPMD "
+                    "reshard storms — ROADMAP PR 2 notes); drop the "
+                    "scenario or the model axis")
+            return True   # the scenario engine IS (W, D)-packed
         if flcfg.packed_uplink is not None:
             return flcfg.packed_uplink
         return packing_pays_off()
@@ -113,7 +144,8 @@ def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
             # λ/h live packed between rounds: no per-round pack_cplx concat
             spec = build_packspec(theta, batch_dims=1)
             lam = cplx.czero((W, spec.d), jnp.float32)
-            chan = init_channel_packed(kc, W, spec.d)
+            chan = scn.init(kc, W, spec.d) if scn is not None \
+                else init_channel_packed(kc, W, spec.d)
         else:
             lam = jax.tree.map(
                 lambda l: cplx.czero(l.shape, jnp.float32), theta)
@@ -130,7 +162,18 @@ def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
         """batch leaves: (W, B_local, ...) — worker-major, sharded w->data."""
         packed = isinstance(state.lam, Complex)   # state layout decides
         kc, kn = jax.random.split(key)
-        if packed:
+        mask = h_tx_p = Theta_prev = None
+        if scn is not None:
+            chan = scn.step(kc, state.chan)       # PhyState, (W, D)-packed
+            spec = build_packspec(state.theta, batch_dims=1)
+            # workers see their CSI everywhere they act: penalty + duals
+            lam_tree = unpack_cplx(spec, state.lam)
+            h_tree = unpack_cplx(spec, _phys_h_tx(chan))
+            if scn.truncating:
+                mask, Theta_prev = chan.mask, state.Theta
+            if scn.imperfect_csi:
+                h_tx_p = chan.h_hat
+        elif packed:
             spec = build_packspec(state.theta, batch_dims=1)
             chan, _changed = step_channel_packed(kc, state.chan, ccfg)
             # slice-views of the packed buffers for the leafwise penalty —
@@ -154,10 +197,11 @@ def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
             local_body, (state.theta, state.opt), None,
             length=flcfg.local_steps)
 
-        if packed:
+        if packed:  # incl. every scenario: mask/h_tx/guard default to None
             Theta_f32, lam_new, m = ota_tree_round_packed_state(
                 theta, state.lam, chan.h, kn, acfg, ccfg, spec,
-                backend=flcfg.transport_backend)
+                backend=flcfg.transport_backend, mask=mask, h_tx_p=h_tx_p,
+                Theta_prev=Theta_prev)
         else:
             Theta_f32, lam_new, m = ota_tree_round(
                 theta, state.lam, chan.h, kn, acfg, ccfg,
@@ -311,8 +355,23 @@ def make_sketched(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
 
 def make_fl_train(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
                   ccfg: ChannelConfig):
+    if flcfg.scenario is None:
+        orphans = {k: getattr(flcfg, k)
+                   for k in ("doppler_hz", "csi_err", "h_min")
+                   if getattr(flcfg, k) is not None}
+        if orphans:
+            raise ValueError(
+                f"FLConfig{tuple(orphans)} are scenario overrides and do "
+                "nothing without FLConfig.scenario — set e.g. "
+                "scenario='markov-doppler' (refusing to silently ignore "
+                "them)")
     if flcfg.mode == "replicated":
         return make_replicated(model, flcfg, acfg, ccfg)
     if flcfg.mode == "sketched":
+        if flcfg.scenario is not None:
+            raise ValueError(
+                "FLConfig.scenario is a replicated-mode feature; the "
+                "sketched trainer still runs the legacy block-fading "
+                "channel over its (W, d_s) sketch space (ROADMAP PR 4)")
         return make_sketched(model, flcfg, acfg, ccfg)
     raise ValueError(f"unknown FL mode {flcfg.mode!r}")

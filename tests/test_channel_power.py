@@ -1,6 +1,9 @@
 """Channel model statistics and the min-α power-control protocol."""
+import math
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import cplx
 from repro.core.channel import (ChannelConfig, awgn, init_channel, rayleigh,
@@ -60,3 +63,78 @@ def test_min_alpha_is_min_of_per_worker():
     s = cplx.Complex(jax.random.normal(key, (4, 32)),
                      jax.random.normal(jax.random.fold_in(key, 2), (4, 32)))
     assert float(min_alpha(s, 1.0)) == float(jnp.min(per_worker_alpha(s, 1.0)))
+
+
+# ---------------------------------------------------------------------------
+# golden values (hand-computed): shannon_rate and tx_energy
+# ---------------------------------------------------------------------------
+
+def test_shannon_rate_golden():
+    """Appendix H, by hand: R = W·log2(1 + P|h|²/(N0·W)) bits/s × T.
+
+    snr_db=20, N0=1e-9, W=15e3, T=1e-3:
+      P        = 10² · 1e-9 · 15e3       = 1.5e-3 W
+      SNR_lin  = P·|h|²/(N0·W)           = 100·|h|²
+      R(|h|=1) = 15e3·log2(101)·1e-3     = 15·log2(101) bits/slot
+    """
+    cfg = ChannelConfig(n_workers=1, snr_db=20.0, noise_psd=1e-9,
+                        subcarrier_hz=15e3, slot_seconds=1e-3)
+    assert cfg.transmit_power == 100.0 * 1e-9 * 15e3
+
+    h = cplx.Complex(jnp.asarray([[1.0, 2.0, 0.0]]),
+                     jnp.asarray([[0.0, 0.0, 0.5]]))
+    got = shannon_rate(h, cfg)
+    want = [15.0 * math.log2(1.0 + 100.0 * 1.0),   # |h|² = 1
+            15.0 * math.log2(1.0 + 100.0 * 4.0),   # |h|² = 4
+            15.0 * math.log2(1.0 + 100.0 * 0.25)]  # |h|² = 0.25
+    np.testing.assert_allclose(np.asarray(got[0]), want, rtol=1e-6)
+
+
+def test_tx_energy_golden():
+    """α²·Σ|s|², by hand: s row 0 = [3+4i, 0] -> E=25; row 1 = [1, 1] -> E=2.
+    With α = 0.5: energies [6.25, 0.5]."""
+    s = cplx.Complex(jnp.asarray([[3.0, 0.0], [1.0, 1.0]]),
+                     jnp.asarray([[4.0, 0.0], [0.0, 0.0]]))
+    np.testing.assert_allclose(np.asarray(tx_energy(s, 0.5)), [6.25, 0.5],
+                               rtol=1e-6)
+    # per-worker α by hand: sqrt(P/E) with P=1 -> [1/5, 1/sqrt(2)]
+    np.testing.assert_allclose(np.asarray(per_worker_alpha(s, 1.0)),
+                               [0.2, 1.0 / math.sqrt(2.0)], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# zero-energy guards (regression: the 1e-30 clamp used to yield
+# α ≈ sqrt(P·1e30) for a silent worker, wrecking tx_energy statistics)
+# ---------------------------------------------------------------------------
+
+def test_zero_energy_worker_does_not_bind_min_alpha():
+    key = jax.random.PRNGKey(2)
+    s_active = cplx.Complex(jax.random.normal(key, (3, 16)),
+                            jax.random.normal(jax.random.fold_in(key, 1),
+                                              (3, 16)))
+    zero_row = cplx.czero((1, 16))
+    s = cplx.Complex(jnp.concatenate([s_active.re, zero_row.re]),
+                     jnp.concatenate([s_active.im, zero_row.im]))
+    alphas = per_worker_alpha(s, 1.0)
+    assert bool(jnp.isinf(alphas[3]))              # no signal ⇒ no constraint
+    assert float(min_alpha(s, 1.0)) == float(min_alpha(s_active, 1.0))
+    # the silent worker transmits exactly zero energy — even under its own
+    # (infinite) α the guarded product is 0, not NaN
+    e = tx_energy(s, alphas)
+    assert float(e[3]) == 0.0 and bool(jnp.all(jnp.isfinite(e)))
+
+
+def test_all_zero_signals_give_inf_alpha_and_zero_energy():
+    s = cplx.czero((4, 8))
+    assert bool(jnp.isinf(min_alpha(s, 2.0)))
+    np.testing.assert_array_equal(np.asarray(tx_energy(s, min_alpha(s, 2.0))),
+                                  np.zeros(4))
+
+
+def test_inv_alpha_from_energy_zero_guard():
+    from repro.core import transport
+    e = jnp.asarray([4.0, 0.0, 1.0])
+    # zero row excluded: α = min(sqrt(1/4), sqrt(1/1)) = 0.5 -> 1/α = 2
+    assert float(transport.inv_alpha_from_energy(e, 1.0)) == 2.0
+    # all-zero energies: 1/α = 0 exactly (the no-op round signal)
+    assert float(transport.inv_alpha_from_energy(jnp.zeros(3), 1.0)) == 0.0

@@ -423,3 +423,65 @@ def test_scan_rounds_entry_point_direct():
     np.testing.assert_array_equal(np.asarray(st_a.Theta),
                                   np.asarray(st_b.Theta))
     assert metrics["channel_uses"].shape == (8,)
+
+
+# ---------------------------------------------------------------------------
+# leafwise per-leaf PRNG reproducibility (pinned contract)
+# ---------------------------------------------------------------------------
+
+def test_leafwise_per_leaf_noise_schedule_pinned():
+    """``ota_tree_round_leafwise`` is the path callers use precisely FOR
+    per-leaf noise reproducibility, so its PRNG schedule is a contract:
+    leaf ``i`` (flatten order, Complex treated as a leaf) draws its
+    matched-filter noise from ``jax.random.split(round_key, n_leaves)[i]``.
+    This test reconstructs every leaf's global update from that schedule
+    and demands bitwise equality — any refactor that re-keys the leaves
+    breaks here, not in a downstream experiment."""
+    from repro.core.channel import matched_filter_noise
+    from repro.core.tree_ota import ota_tree_round_leafwise
+
+    W = 3
+    k = jax.random.fold_in(KEY, 77)
+    theta = {"a": jax.random.normal(k, (W, 4, 5)),
+             "b": jax.random.normal(jax.random.fold_in(k, 1), (W, 7)),
+             "c": jax.random.normal(jax.random.fold_in(k, 2), (W, 2, 3))}
+    lam = jax.tree.map(lambda l: cplx.Complex(
+        0.3 * jax.random.normal(jax.random.fold_in(k, 3), l.shape),
+        0.3 * jax.random.normal(jax.random.fold_in(k, 4), l.shape)), theta)
+    h = jax.tree.map(
+        lambda l: rayleigh(jax.random.fold_in(k, l.ndim), l.shape), theta)
+    acfg = AdmmConfig(rho=0.5, power_control=False)
+    ccfg = ChannelConfig(n_workers=W, noisy=True, snr_db=20.0)
+    round_key = jax.random.fold_in(KEY, 1234)
+
+    Theta, _, _ = ota_tree_round_leafwise(theta, lam, h, round_key,
+                                          acfg, ccfg, backend="jnp")
+
+    # reconstruct from the pinned schedule, leaf by leaf
+    names = sorted(theta)  # dict flatten order
+    keys = jax.random.split(round_key, len(names))
+    for i, name in enumerate(names):
+        s = transport.modulate(theta[name], lam[name], h[name], acfg.rho)
+        noise = matched_filter_noise(keys[i], theta[name].shape[1:], ccfg)
+        y = jnp.sum(h[name].re * s.re - h[name].im * s.im, axis=0)
+        p2 = jnp.sum(cplx.abs2(h[name]), axis=0)
+        want = (y + noise.re * jnp.asarray(1.0, jnp.float32)) \
+            / jnp.maximum(p2, 1e-12)
+        np.testing.assert_array_equal(np.asarray(Theta[name]),
+                                      np.asarray(want), err_msg=name)
+
+
+def test_leafwise_noise_draws_distinct_per_leaf():
+    """Two same-shaped leaves must not share a noise realisation."""
+    from repro.core.tree_ota import ota_tree_round_leafwise
+
+    W, d = 2, 16
+    theta = {"x": jnp.zeros((W, d)), "y": jnp.zeros((W, d))}
+    lam = jax.tree.map(lambda l: cplx.czero(l.shape), theta)
+    ones = cplx.Complex(jnp.ones((W, d)), jnp.zeros((W, d)))
+    h = {"x": ones, "y": ones}
+    acfg = AdmmConfig(rho=0.5, power_control=False)
+    ccfg = ChannelConfig(n_workers=W, noisy=True, snr_db=20.0)
+    Theta, _, _ = ota_tree_round_leafwise(theta, lam, h, KEY, acfg, ccfg)
+    # zero signal + identical h: Theta is pure per-leaf noise
+    assert not np.array_equal(np.asarray(Theta["x"]), np.asarray(Theta["y"]))
