@@ -17,10 +17,20 @@ Leaves may carry leading batch dims (the worker axis ``W``): a leaf of shape
 ``lead + spec.shapes[i]`` packs into ``lead + (sizes[i],)``; all leaves of
 one ``pack`` call must share ``lead``.  Complex trees (duals λ, fading h)
 pack planewise via :func:`pack_cplx` / :func:`unpack_cplx`.
+
+Shard-local packing (:class:`ShardPackSpec`) is the model-parallel variant:
+instead of one global concatenate (which would force GSPMD to reshard every
+model-sharded leaf into the replicated packed layout each round), every
+device packs only the leaf *shards* resident on it, and the global packed
+buffer is simply the concatenation of the per-shard packs — sharded over
+the mesh ``model`` axis, so no cross-shard data movement ever happens at
+pack/unpack time.  Per-shard offsets compose into one global index space
+(:func:`shard_perm`): scattering each shard's local pack to its canonical
+offsets reconstructs the global :func:`pack` exactly.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Tuple
+from typing import Any, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -133,3 +143,335 @@ def unpack_cplx(spec: PackSpec, buf: Complex) -> PyTree:
     im_l = jax.tree_util.tree_flatten(im)[0]
     return jax.tree_util.tree_unflatten(
         spec.treedef, [Complex(r, i) for r, i in zip(re_l, im_l)])
+
+
+# ---------------------------------------------------------------------------
+# shard-local packing (model-parallel meshes)
+# ---------------------------------------------------------------------------
+
+class ShardPackSpec(NamedTuple):
+    """Static layout of a pytree packed *per model shard*.
+
+    Each of the ``n_shards`` model-axis shards owns a contiguous
+    ``d_local``-wide slice of the global shard-packed buffer
+    (total width ``d_pad = n_shards * d_local``):
+
+    * leaves whose ``shard_dims[i]`` names an element dim sharded over the
+      model axis contribute their resident slice (``sizes[i] / n_shards``
+      elements) at ``local_offsets[i]``, in canonical leaf order;
+    * leaves replicated over the model axis are concatenated (leaf order)
+      into one *replicated segment* of ``rep_size`` elements which is
+      zero-padded to ``n_shards * rep_chunk`` and split evenly — shard ``j``
+      holds segment elements ``[j*rep_chunk, (j+1)*rep_chunk)`` at the tail
+      of its local slice.  Every element is owned by exactly ONE shard.
+
+    :func:`shard_perm` maps each shard-packed position to its canonical
+    :class:`PackSpec` index, so per-shard packs compose into the global
+    index space:  ``scatter(pack_shard_local(j), perm_j) summed over j ==
+    pack(global)`` (pinned in ``tests/test_packing.py``).
+    """
+
+    spec: PackSpec                          # canonical global layout
+    n_shards: int
+    shard_dims: Tuple[Optional[int], ...]   # per-leaf model-sharded element dim
+    local_offsets: Tuple[Optional[int], ...]  # sharded leaves: offset in shard
+    sharded_local: int                      # elements of sharded leaves/shard
+    rep_leaves: Tuple[int, ...]             # replicated leaf indices
+    rep_offsets: Tuple[int, ...]            # their offsets in the segment
+    rep_size: int                           # R: real replicated elements
+    rep_chunk: int                          # ceil(R / n_shards)
+
+    @property
+    def d_local(self) -> int:
+        return self.sharded_local + self.rep_chunk
+
+    @property
+    def d_pad(self) -> int:
+        return self.n_shards * self.d_local
+
+    @property
+    def rep_pad(self) -> int:
+        return self.n_shards * self.rep_chunk
+
+    @property
+    def has_padding(self) -> bool:
+        return self.rep_pad != self.rep_size
+
+
+def build_shard_packspec(tree: PyTree, shard_dims: Sequence[Optional[int]],
+                         n_shards: int, batch_dims: int = 0) -> ShardPackSpec:
+    """Shard-local layout of ``tree`` given each leaf's model-sharded
+    element dim (``None`` = replicated over the model axis).
+
+    ``shard_dims`` aligns with the canonical flatten order (Complex = leaf);
+    sharded dims must divide ``n_shards`` (GSPMD only shards them when they
+    do — ``launch/shardings.param_pspec``).
+    """
+    spec = build_packspec(tree, batch_dims=batch_dims)
+    if len(shard_dims) != spec.n_leaves:
+        raise ValueError(f"shard_dims has {len(shard_dims)} entries, tree "
+                         f"has {spec.n_leaves} leaves")
+    local_offsets: List[Optional[int]] = []
+    rep_leaves, rep_offsets = [], []
+    s_off = r_off = 0
+    for i, dim in enumerate(shard_dims):
+        if dim is None:
+            local_offsets.append(None)
+            rep_leaves.append(i)
+            rep_offsets.append(r_off)
+            r_off += spec.sizes[i]
+        else:
+            eshape = spec.shapes[i]
+            if not (0 <= dim < len(eshape)):
+                raise ValueError(f"leaf {i}: shard dim {dim} out of range "
+                                 f"for shape {eshape}")
+            if eshape[dim] % n_shards:
+                raise ValueError(
+                    f"leaf {i}: dim {dim} of {eshape} not divisible by "
+                    f"{n_shards} shards")
+            local_offsets.append(s_off)
+            s_off += spec.sizes[i] // n_shards
+    rep_chunk = -(-r_off // n_shards) if r_off else 0
+    return ShardPackSpec(spec=spec, n_shards=n_shards,
+                         shard_dims=tuple(shard_dims),
+                         local_offsets=tuple(local_offsets),
+                         sharded_local=s_off,
+                         rep_leaves=tuple(rep_leaves),
+                         rep_offsets=tuple(rep_offsets),
+                         rep_size=r_off, rep_chunk=rep_chunk)
+
+
+def _local_eshape(sspec: ShardPackSpec, i: int) -> Tuple[int, ...]:
+    """Element shape of sharded leaf ``i``'s per-shard slice."""
+    eshape = list(sspec.spec.shapes[i])
+    eshape[sspec.shard_dims[i]] //= sspec.n_shards
+    return tuple(eshape)
+
+
+def _flat(leaf: Array, eshape: Tuple[int, ...], i: int) -> Array:
+    nb = leaf.ndim - len(eshape)
+    if nb < 0 or tuple(leaf.shape[nb:]) != eshape:
+        raise ValueError(f"leaf {i} shape {leaf.shape} does not end with "
+                         f"expected shard-local shape {eshape}")
+    return leaf.astype(jnp.float32).reshape(leaf.shape[:nb] + (-1,))
+
+
+def rep_segment(sspec: ShardPackSpec, tree: PyTree) -> Optional[Array]:
+    """Concatenate the model-replicated leaves into the zero-padded
+    replicated segment ``lead + (rep_pad,)`` (None when every leaf is
+    sharded)."""
+    if not sspec.rep_leaves:
+        return None
+    leaves = jax.tree_util.tree_flatten(tree, is_leaf=_is_cplx)[0]
+    flats = [_flat(leaves[i], sspec.spec.shapes[i], i)
+             for i in sspec.rep_leaves]
+    seg = flats[0] if len(flats) == 1 else jnp.concatenate(flats, axis=-1)
+    pad = sspec.rep_pad - sspec.rep_size
+    if pad:
+        seg = jnp.pad(seg, [(0, 0)] * (seg.ndim - 1) + [(0, pad)])
+    return seg
+
+
+def rep_chunk_at(sspec: ShardPackSpec, seg: Array, shard_idx) -> Array:
+    """Shard ``shard_idx``'s slice of the replicated segment (traced idx OK)."""
+    start = shard_idx * sspec.rep_chunk
+    return jax.lax.dynamic_slice_in_dim(seg, start, sspec.rep_chunk, axis=-1)
+
+
+def pack_shard_local(sspec: ShardPackSpec, tree: PyTree, shard_idx) -> Array:
+    """Pack ONE shard's resident data: sharded leaves arrive as their local
+    slices (shape ``lead + local_eshape``), replicated leaves arrive whole
+    (shard ``shard_idx`` keeps only its segment chunk).  This is what each
+    device runs inside ``shard_map`` — no cross-device data ever moves.
+
+    Returns ``lead + (d_local,)`` f32.
+    """
+    leaves = jax.tree_util.tree_flatten(tree, is_leaf=_is_cplx)[0]
+    if len(leaves) != sspec.spec.n_leaves:
+        raise ValueError(f"tree has {len(leaves)} leaves, spec expects "
+                         f"{sspec.spec.n_leaves}")
+    parts = [_flat(leaves[i], _local_eshape(sspec, i), i)
+             for i, dim in enumerate(sspec.shard_dims) if dim is not None]
+    seg = rep_segment(sspec, tree)
+    if seg is not None:
+        parts.append(rep_chunk_at(sspec, seg, shard_idx))
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=-1)
+
+
+def unpack_shard_local(sspec: ShardPackSpec, buf: Array,
+                       rep_seg: Optional[Array] = None,
+                       cast: bool = False) -> PyTree:
+    """One shard's ``lead + (d_local,)`` buffer -> local tree.
+
+    Sharded leaves come back as their local slices; replicated leaves are
+    rebuilt from ``rep_seg`` — the FULL (cross-shard) replicated segment,
+    which the ``shard_map`` caller reassembles with one small ``psum`` of
+    the scattered chunks (:func:`scatter_rep_chunk`).  ``rep_seg`` may be
+    omitted only when every leaf is sharded.
+    """
+    if buf.shape[-1] != sspec.d_local:
+        raise ValueError(f"buffer last dim {buf.shape[-1]} != d_local "
+                         f"{sspec.d_local}")
+    if sspec.rep_leaves and rep_seg is None:
+        raise ValueError("rep_seg required: tree has model-replicated leaves")
+    lead = buf.shape[:-1]
+    out: List[Optional[Array]] = [None] * sspec.spec.n_leaves
+    for i, dim in enumerate(sspec.shard_dims):
+        if dim is None:
+            continue
+        off = sspec.local_offsets[i]
+        size = sspec.spec.sizes[i] // sspec.n_shards
+        piece = jax.lax.slice_in_dim(buf, off, off + size, axis=-1)
+        out[i] = piece.reshape(lead + _local_eshape(sspec, i))
+    for i, off in zip(sspec.rep_leaves, sspec.rep_offsets):
+        piece = jax.lax.slice_in_dim(rep_seg, off, off + sspec.spec.sizes[i],
+                                     axis=-1)
+        out[i] = piece.reshape(rep_seg.shape[:-1] + sspec.spec.shapes[i])
+    if cast:
+        out = [p.astype(sspec.spec.dtypes[i]) for i, p in enumerate(out)]
+    return jax.tree_util.tree_unflatten(sspec.spec.treedef, out)
+
+
+def shard_rep_chunk(sspec: ShardPackSpec, buf: Array) -> Optional[Array]:
+    """The replicated-segment tail of one shard's local buffer (None when
+    every leaf is sharded)."""
+    if not sspec.rep_leaves:
+        return None
+    return jax.lax.slice_in_dim(buf, sspec.sharded_local, sspec.d_local,
+                                axis=-1)
+
+
+def scatter_rep_chunk(sspec: ShardPackSpec, chunk: Array, shard_idx) -> Array:
+    """Place shard ``shard_idx``'s segment chunk at its offset in a zeroed
+    ``lead + (rep_pad,)`` segment — summing these over shards (a ``psum``
+    over the model axis) rebuilds the full replicated segment."""
+    lead = chunk.shape[:-1]
+    seg = jnp.zeros(lead + (sspec.rep_pad,), chunk.dtype)
+    start = (0,) * len(lead) + (shard_idx * sspec.rep_chunk,)
+    return jax.lax.dynamic_update_slice(seg, chunk, start)
+
+
+def shard_valid_mask(sspec: ShardPackSpec, shard_idx) -> Array:
+    """(d_local,) bool: True where this shard's position holds a real
+    element, False on the zero-padding tail of the replicated segment.
+    Padding must never re-enter the air (a dual update would otherwise turn
+    Θ garbage at padded positions into non-zero λ there)."""
+    cols = jnp.arange(sspec.d_local)
+    seg_pos = shard_idx * sspec.rep_chunk + (cols - sspec.sharded_local)
+    return (cols < sspec.sharded_local) | (seg_pos < sspec.rep_size)
+
+
+def shard_perm(sspec: ShardPackSpec):
+    """(d_pad,) int numpy array: canonical :class:`PackSpec` index of every
+    shard-packed position (-1 on padding).  Host-side (O(d_pad) memory) —
+    for tests and offline layout checks, not the hot path."""
+    import numpy as np
+
+    spec = sspec.spec
+    perm = np.full(sspec.d_pad, -1, np.int64)
+    seg_idx = np.concatenate(
+        [spec.offsets[i] + np.arange(spec.sizes[i])
+         for i in sspec.rep_leaves]) if sspec.rep_leaves else \
+        np.zeros((0,), np.int64)
+    for j in range(sspec.n_shards):
+        base = j * sspec.d_local
+        for i, dim in enumerate(sspec.shard_dims):
+            if dim is None:
+                continue
+            eshape = spec.shapes[i]
+            idx = np.arange(spec.sizes[i]).reshape(eshape)
+            sl = [slice(None)] * len(eshape)
+            c = eshape[dim] // sspec.n_shards
+            sl[dim] = slice(j * c, (j + 1) * c)
+            flat_idx = idx[tuple(sl)].reshape(-1)
+            off = base + sspec.local_offsets[i]
+            perm[off:off + flat_idx.size] = spec.offsets[i] + flat_idx
+        chunk = seg_idx[j * sspec.rep_chunk:(j + 1) * sspec.rep_chunk]
+        off = base + sspec.sharded_local
+        perm[off:off + chunk.size] = chunk
+    return perm
+
+
+def pack_shard_global(sspec: ShardPackSpec, tree: PyTree) -> Array:
+    """GLOBAL tree -> the full ``lead + (d_pad,)`` shard-packed buffer
+    (concatenation of every shard's local pack).  Used at state *init* and
+    in tests; the per-round path never materialises this concatenate — each
+    device packs only its own shard inside ``shard_map``."""
+    leaves = jax.tree_util.tree_flatten(tree, is_leaf=_is_cplx)[0]
+    seg = rep_segment(sspec, tree)
+    shards = []
+    for j in range(sspec.n_shards):
+        parts = []
+        for i, dim in enumerate(sspec.shard_dims):
+            if dim is None:
+                continue
+            nb = leaves[i].ndim - len(sspec.spec.shapes[i])
+            c = sspec.spec.shapes[i][dim] // sspec.n_shards
+            piece = jax.lax.slice_in_dim(leaves[i], j * c, (j + 1) * c,
+                                         axis=nb + dim)
+            parts.append(piece.astype(jnp.float32).reshape(
+                piece.shape[:nb] + (-1,)))
+        if seg is not None:
+            parts.append(jax.lax.slice_in_dim(
+                seg, j * sspec.rep_chunk, (j + 1) * sspec.rep_chunk, axis=-1))
+        shards.append(parts[0] if len(parts) == 1
+                      else jnp.concatenate(parts, axis=-1))
+    return shards[0] if len(shards) == 1 \
+        else jnp.concatenate(shards, axis=-1)
+
+
+def unpack_shard_global(sspec: ShardPackSpec, buf: Array,
+                        cast: bool = True) -> PyTree:
+    """Full ``lead + (d_pad,)`` shard-packed buffer -> GLOBAL tree (the
+    inverse of :func:`pack_shard_global`; tests / state export)."""
+    if buf.shape[-1] != sspec.d_pad:
+        raise ValueError(f"buffer last dim {buf.shape[-1]} != d_pad "
+                         f"{sspec.d_pad}")
+    lead = buf.shape[:-1]
+    locs = [jax.lax.slice_in_dim(buf, j * sspec.d_local,
+                                 (j + 1) * sspec.d_local, axis=-1)
+            for j in range(sspec.n_shards)]
+    seg = None
+    if sspec.rep_leaves:
+        seg = jnp.concatenate(
+            [shard_rep_chunk(sspec, l) for l in locs], axis=-1)
+    out: List[Optional[Array]] = [None] * sspec.spec.n_leaves
+    for i, dim in enumerate(sspec.shard_dims):
+        if dim is None:
+            continue
+        pieces = []
+        for l in locs:
+            off = sspec.local_offsets[i]
+            size = sspec.spec.sizes[i] // sspec.n_shards
+            piece = jax.lax.slice_in_dim(l, off, off + size, axis=-1)
+            pieces.append(piece.reshape(lead + _local_eshape(sspec, i)))
+        nb = len(lead)
+        out[i] = pieces[0] if len(pieces) == 1 else \
+            jnp.concatenate(pieces, axis=nb + dim)
+    for i, off in zip(sspec.rep_leaves, sspec.rep_offsets):
+        piece = jax.lax.slice_in_dim(seg, off, off + sspec.spec.sizes[i],
+                                     axis=-1)
+        out[i] = piece.reshape(lead + sspec.spec.shapes[i])
+    if cast:
+        out = [p.astype(sspec.spec.dtypes[i]) for i, p in enumerate(out)]
+    return jax.tree_util.tree_unflatten(sspec.spec.treedef, out)
+
+
+def pack_shard_global_cplx(sspec: ShardPackSpec, tree: PyTree) -> Complex:
+    """Complex-leaf tree -> Complex of global shard-packed planes."""
+    flats = jax.tree_util.tree_flatten(tree, is_leaf=_is_cplx)[0]
+    re = jax.tree_util.tree_unflatten(sspec.spec.treedef,
+                                      [c.re for c in flats])
+    im = jax.tree_util.tree_unflatten(sspec.spec.treedef,
+                                      [c.im for c in flats])
+    return Complex(pack_shard_global(sspec, re), pack_shard_global(sspec, im))
+
+
+def unpack_shard_global_cplx(sspec: ShardPackSpec, buf: Complex) -> PyTree:
+    """Complex global shard-packed planes -> tree of Complex leaves (f32)."""
+    re = unpack_shard_global(sspec, buf.re, cast=False)
+    im = unpack_shard_global(sspec, buf.im, cast=False)
+    re_l = jax.tree_util.tree_flatten(re)[0]
+    im_l = jax.tree_util.tree_flatten(im)[0]
+    return jax.tree_util.tree_unflatten(
+        sspec.spec.treedef, [Complex(r, i) for r, i in zip(re_l, im_l)])

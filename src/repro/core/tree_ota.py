@@ -25,8 +25,10 @@ from repro.core import cplx, transport
 from repro.core.admm import AdmmConfig
 from repro.core.channel import ChannelConfig, rayleigh
 from repro.core.cplx import Complex
-from repro.core.packing import (build_packspec, pack, pack_cplx, unpack,
-                                unpack_cplx)
+from repro.core.packing import (ShardPackSpec, build_packspec, pack,
+                                pack_cplx, pack_shard_local, scatter_rep_chunk,
+                                shard_rep_chunk, shard_valid_mask, unpack,
+                                unpack_cplx, unpack_shard_local)
 
 Array = jax.Array
 PyTree = Any
@@ -120,22 +122,6 @@ def _tree_size(tree: PyTree) -> int:
             n *= s
         total += n
     return total
-
-
-def _packing_pays_off() -> bool:
-    """Packed uplink auto rule: pack unless an active mesh model-shards the
-    leaves' trailing dims — then the concatenate forces GSPMD to reshard
-    every plane every round (collective-permute/all-to-all storms; measured
-    ~2x compile and ~10x HBM bytes on the 16x16 dryrun).  Shard-local
-    packing inside shard_map is the ROADMAP fix; until then model-parallel
-    meshes keep the leafwise path."""
-    from repro.models.sharding import current_mesh
-    mesh = current_mesh()
-    return mesh is None or dict(mesh.shape).get("model", 1) <= 1
-
-
-#: public alias — trainers use this to pick their dual/fading state layout
-packing_pays_off = _packing_pays_off
 
 
 # ---------------------------------------------------------------------------
@@ -242,11 +228,14 @@ def ota_tree_round(theta: PyTree, lam: PyTree, h: PyTree, key: Array,
 
     Returns (Theta_new, lam_new, metrics).  theta leaves: (W, ...).
 
-    ``packed=None`` auto-resolves via :func:`_packing_pays_off` (packed
-    everywhere except under an active model-parallel mesh, where the
-    concatenate would reshard every plane); ``True``/``False`` force it.
+    ``packed`` defaults to the packed path; ``False`` forces the per-leaf
+    reference loop.  (The historical ``packed=None`` -> leafwise
+    auto-fallback under model-parallel meshes is gone: model-parallel
+    callers hold their state in the shard-local layout and run
+    :func:`ota_tree_round_shard_local`, which never pays the global
+    concatenate this tree-in/tree-out convenience API lowers to.)
     """
-    if not (_packing_pays_off() if packed is None else packed):
+    if packed is False:
         return ota_tree_round_leafwise(theta, lam, h, key, acfg, ccfg,
                                        backend=backend, reduce_fn=reduce_fn,
                                        min_reduce_fn=min_reduce_fn,
@@ -319,3 +308,210 @@ def ota_tree_round_leafwise(theta: PyTree, lam: PyTree, h: PyTree, key: Array,
                 lambda new, old: jnp.where(keep, new, old.astype(new.dtype)),
                 Theta_new, Theta_prev)
     return Theta_new, lam_new, metrics
+
+
+# ---------------------------------------------------------------------------
+# shard-local packed round (model-parallel meshes, inside shard_map)
+# ---------------------------------------------------------------------------
+#
+# Under a model-parallel mesh the packed (W, D) layout above is hostile:
+# every model-sharded θ leaf would have to be all-gathered into the
+# replicated packed buffer each round and the received Θ scattered back —
+# GSPMD reshards all five signal planes per round (measured on the 16x16
+# dryrun: compile 55s -> 106s, collective-permutes 452 -> 2107, ~10x HBM).
+# The shard-local path packs only the leaf shards RESIDENT on each device
+# (:class:`~repro.core.packing.ShardPackSpec`) and runs the fused receive +
+# min-α consensus + dual update per shard inside ``shard_map``, with the
+# worker superposition a ``psum`` over the data axes and the power consensus
+# a ``psum`` (per-worker energy over model shards) + ``pmin`` (over
+# workers).  λ/h live persistently in the global shard-packed (W, d_pad)
+# layout — sharded P(data, model) — so no signal plane ever crosses the
+# model axis.
+
+def _mesh_data_axes(mesh, model_axis: str) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != model_axis)
+
+
+def _axes_entry(axes: Tuple[str, ...]):
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _shard_theta_specs(sspec: ShardPackSpec, wentry, model_axis: str,
+                       worker_dim: bool):
+    """Per-leaf PartitionSpecs of the (worker-major) tree the shard-local
+    round consumes/produces: worker dim over the data axes, the recorded
+    shard dim over ``model``, everything else replicated."""
+    from jax.sharding import PartitionSpec as P
+    specs = []
+    lead = 1 if worker_dim else 0
+    for i, dim in enumerate(sspec.shard_dims):
+        ax = [None] * (lead + len(sspec.spec.shapes[i]))
+        if worker_dim:
+            ax[0] = wentry
+        if dim is not None:
+            ax[lead + dim] = model_axis
+        specs.append(P(*ax))
+    return jax.tree_util.tree_unflatten(sspec.spec.treedef, specs)
+
+
+def _rep_seg_psum(sspec: ShardPackSpec, plane: Array, shard_idx,
+                  model_axis: str) -> Optional[Array]:
+    """Rebuild the full replicated segment from the per-shard chunks: one
+    small ``psum`` over the model axis (norm/bias/scalar bytes only)."""
+    if not sspec.rep_leaves:
+        return None
+    chunk = shard_rep_chunk(sspec, plane)
+    return jax.lax.psum(scatter_rep_chunk(sspec, chunk, shard_idx),
+                        model_axis)
+
+
+def unpack_cplx_shard_local(sspec: ShardPackSpec, buf: Complex, mesh,
+                            model_axis: str = "model") -> PyTree:
+    """Global shard-packed ``(W, d_pad)`` Complex planes -> tree of Complex
+    ``(W, ...)`` leaves, each carrying its natural model sharding.
+
+    Runs inside ``shard_map`` so every sharded leaf is rebuilt from the
+    slice already resident on its device (pure layout ops); only the small
+    replicated segment crosses the model axis (one psum).  This is how the
+    trainer reads λ/h slice-views for the penalty gradient without ever
+    materialising a replicated (W, D) buffer.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    daxes = _mesh_data_axes(mesh, model_axis)
+    wentry = _axes_entry(daxes)
+
+    def body(b: Complex) -> PyTree:
+        j = jax.lax.axis_index(model_axis)
+
+        def one(plane):
+            seg = _rep_seg_psum(sspec, plane, j, model_axis)
+            return unpack_shard_local(sspec, plane, seg)
+
+        re_l = jax.tree_util.tree_flatten(one(b.re))[0]
+        im_l = jax.tree_util.tree_flatten(one(b.im))[0]
+        return jax.tree_util.tree_unflatten(
+            sspec.spec.treedef,
+            [Complex(r, i) for r, i in zip(re_l, im_l)])
+
+    out_specs = _shard_theta_specs(sspec, wentry, model_axis,
+                                   worker_dim=True)
+    return shard_map(body, mesh=mesh, in_specs=(P(wentry, model_axis),),
+                     out_specs=out_specs, check_rep=False)(buf)
+
+
+def ota_tree_round_shard_local(theta: PyTree, lam_p: Complex, h_p: Complex,
+                               key: Array, acfg: AdmmConfig,
+                               ccfg: ChannelConfig, sspec: ShardPackSpec,
+                               mesh, *, backend: Optional[str] = None,
+                               mask: Optional[Array] = None,
+                               h_tx_p: Optional[Complex] = None,
+                               Theta_prev: Optional[PyTree] = None,
+                               model_axis: str = "model",
+                               ) -> Tuple[PyTree, Complex, dict]:
+    """One OTA round with SHARD-LOCAL packing under a model-parallel mesh.
+
+    θ is a (W, ...) tree carrying its natural model shardings; λ/fading are
+    the persistent global shard-packed ``(W, d_pad)`` Complex buffers
+    (sharded ``P(data, model)``).  Inside ``shard_map`` each device:
+
+    1. packs its resident θ shards (one local concat, no collective),
+    2. modulates and superposes its workers' signals — the analog channel
+       use is a ``psum`` over the data axes (or a fully fused receive
+       kernel with a shard-width grid when the worker axis is local),
+    3. joins the min-α power consensus: per-worker energies are ``psum``-ed
+       over the model shards (each element is owned by exactly one shard),
+       the min over workers is a ``pmin`` over the data axes,
+    4. demodulates its ``d_local`` slice of Θ and updates its λ shard.
+
+    Scenario semantics (``mask``/``h_tx_p``/``Theta_prev``) are identical
+    to :func:`ota_tree_round_packed_state`: the (W,)-shaped participation
+    mask replicates across the model axis, so truncation and imperfect-CSI
+    precoding thread through the shard-local uplink unchanged.
+
+    Noise layout: each model shard draws its own matched-filter noise from
+    ``fold_in(key, shard_index)`` — same distribution as the packed path's
+    single (D,) draw, different PRNG layout (noise-free results are bitwise
+    identical to :func:`ota_tree_round_leafwise`, pinned in
+    ``tests/test_shard_local.py``).
+
+    Returns ``(Theta_tree_f32, lam_new_packed, metrics)``.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    rho = acfg.rho
+    daxes = _mesh_data_axes(mesh, model_axis)
+    wentry = _axes_entry(daxes)
+    #: worker axis entirely local -> run the fused (masked) receive kernel
+    #: per shard instead of composing around a psum
+    local_w = all(mesh.shape[a] == 1 for a in daxes)
+    has_mask = mask is not None
+    has_htx = h_tx_p is not None
+
+    def body(theta, lam, h, key, mask, h_tx):
+        mask = mask if has_mask else None      # dummies stand in for None
+        h_tx = h_tx if has_htx else None
+        j = jax.lax.axis_index(model_axis)
+        theta_p = pack_shard_local(sspec, theta, j)       # (W_l, d_local)
+        h_wkr = h if h_tx is None else h_tx
+        signals = transport.modulate(theta_p, lam, h_wkr, rho,
+                                     backend=backend)
+        if acfg.power_control:
+            # per-worker TOTAL energy: every element owned by one shard
+            energy = jax.lax.psum(transport.worker_energy(signals),
+                                  model_axis)
+            budget = ccfg.transmit_power * sspec.spec.d   # real elements
+            inv_alpha = transport.inv_alpha_from_energy(
+                energy, budget,
+                min_reduce_fn=None if local_w
+                else (lambda a: jax.lax.pmin(a, daxes)),
+                mask=mask)
+        else:
+            inv_alpha = jnp.asarray(1.0, jnp.float32)
+        noise_key = jax.random.fold_in(key, j)
+        Theta_p = transport.receive(
+            signals, h, noise_key, ccfg, inv_alpha,
+            reduce_fn=None if local_w
+            else (lambda x: jax.lax.psum(jnp.sum(x, axis=0), daxes)),
+            mask=mask, backend=backend)
+        lam_new = transport.dual_update(lam, h_wkr, theta_p, Theta_p, rho,
+                                        backend=backend)
+        if mask is not None:
+            lam_new = cplx.cwhere(mask[:, None], lam_new, lam)
+        if sspec.has_padding:
+            # padding never re-enters the air: Θ is garbage there, so the
+            # dual update would otherwise seed non-zero λ at padded slots
+            valid = shard_valid_mask(sspec, j)
+            lam_new = cplx.cwhere(valid[None, :], lam_new,
+                                  cplx.czero(lam_new.re.shape))
+        seg = _rep_seg_psum(sspec, Theta_p, j, model_axis)
+        Theta_tree = unpack_shard_local(sspec, Theta_p, seg)
+        return Theta_tree, lam_new, inv_alpha
+
+    theta_specs = _shard_theta_specs(sspec, wentry, model_axis,
+                                     worker_dim=True)
+    Theta_specs = _shard_theta_specs(sspec, wentry, model_axis,
+                                     worker_dim=False)
+    buf_spec = P(wentry, model_axis)
+    in_specs = (theta_specs, buf_spec, buf_spec, P(),
+                P(wentry) if has_mask else P(),
+                buf_spec if has_htx else P())
+    out_specs = (Theta_specs, buf_spec, P())
+    Theta_new, lam_new_p, inv_alpha = shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=False)(
+        theta, lam_p, h_p, key,
+        mask if has_mask else jnp.zeros((), jnp.float32),
+        h_tx_p if has_htx else jnp.zeros((), jnp.float32))
+
+    metrics = {"inv_alpha": jnp.asarray(inv_alpha)}
+    if mask is not None:
+        metrics["participation"] = jnp.mean(mask.astype(jnp.float32))
+        if Theta_prev is not None:
+            keep = jnp.any(mask)
+            Theta_new = jax.tree.map(
+                lambda new, old: jnp.where(keep, new, old.astype(new.dtype)),
+                Theta_new, Theta_prev)
+    return Theta_new, lam_new_p, metrics

@@ -186,6 +186,13 @@ def ota_receive(s_re: Array, s_im: Array, h_re: Array, h_im: Array,
     reduction), matched-filter noise scaling, and demodulation never
     materialise y/Σ|h|² in HBM.  s/h: (W, d) planes; noise_re: (d,);
     inv_alpha: traced scalar.  Returns (d,) f32.
+
+    ``d`` is whatever the caller's packing produced: the full packed D on a
+    replicated/single-device layout, or the SHARD-LOCAL width ``d_local``
+    inside ``shard_map`` on a model-parallel mesh — there the grid spans one
+    shard's columns and each device launches its own fused chain (the
+    shard-local round passes ``reduce_fn=None`` whenever the worker axis is
+    local, so the whole receive stays one kernel per shard).
     """
     W, n = s_re.shape
     cols = -(-n // block_cols) * block_cols

@@ -108,6 +108,12 @@ def ota_receive_masked(s_re: Array, s_im: Array, h_re: Array, h_im: Array,
     both the superposition and the pilot aggregate (its planes are never
     read into the sums, so non-finite values there are harmless).  s/h:
     (W, d) planes; noise_re: (d,); inv_alpha: traced scalar.  Returns (d,).
+
+    Like ``kernels/ota.ota_receive``, ``d`` may be the shard-local width
+    ``d_local`` inside ``shard_map`` on a model-parallel mesh: the grid then
+    spans one shard's columns, and the (W,)-replicated mask rides into every
+    shard's launch unchanged — scenario participation is worker-level, so
+    it is independent of how the packed axis is split.
     """
     W, n = s_re.shape
     cols = -(-n // block_cols) * block_cols

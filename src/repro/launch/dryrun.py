@@ -107,11 +107,12 @@ def _memory(compiled, args, in_shardings, mesh) -> Dict[str, float]:
 
 
 def run_one(arch: str, shape_name: str, *, multi_pod: bool,
-            reduced: bool = False, keep_hlo: bool = False) -> Dict[str, Any]:
+            reduced: bool = False, keep_hlo: bool = False,
+            packed_uplink=None) -> Dict[str, Any]:
     mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
     spec = build_spec(arch, shape_name, mesh, multi_pod=multi_pod,
-                      reduced=reduced)
+                      reduced=reduced, packed_uplink=packed_uplink)
     from repro.launch.shardings import rules_for
     cfg0 = get_config(arch)
     if reduced:
@@ -156,7 +157,12 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
     coll_s = summary.coll_bytes_total / LINK_BW
     coll = {"bytes_per_device": summary.coll_bytes_total,
             "by_kind_bytes": summary.coll_bytes,
-            "by_kind_count": summary.coll_count}
+            "by_kind_count": summary.coll_count,
+            # reshard tripwire (one train_step = one round): the packed
+            # path must stay within 1.1x of the leafwise baseline here —
+            # CI-asserted, so a GSPMD reshard storm is a visible number
+            "collective_permute_count":
+                hlo_analysis.collective_permutes(summary)}
 
     cfg = get_config(arch)
     N = cfg.param_count()
@@ -215,7 +221,14 @@ def main() -> None:
     ap.add_argument("--opt", default=None,
                     help="comma-separated REPRO_OPT flags (§Perf variants); "
                          "results are tagged _opt-<flags>")
+    ap.add_argument("--packed", default="auto", choices=["auto", "on", "off"],
+                    help="replicated-FL uplink layout: on/auto = packed "
+                         "(shard-local under model-parallel), off = the "
+                         "per-leaf leafwise oracle (the collective-permute "
+                         "baseline CI compares against); results are "
+                         "tagged _packed-<choice> when not auto")
     args = ap.parse_args()
+    packed_uplink = {"auto": None, "on": True, "off": False}[args.packed]
 
     if args.opt is not None:
         os.environ["REPRO_OPT"] = args.opt
@@ -233,6 +246,8 @@ def main() -> None:
         tag = f"{arch}_{shape_name}_{'2x16x16' if args.multi_pod else '16x16'}"
         if args.opt:
             tag += "_opt-" + args.opt.replace(",", "+")
+        if args.packed != "auto":
+            tag += f"_packed-{args.packed}"
         path = os.path.join(args.out, tag + ".json")
         if os.path.exists(path):
             print(f"[skip] {tag} (exists)")
@@ -240,7 +255,7 @@ def main() -> None:
         print(f"[run ] {tag}", flush=True)
         try:
             res = run_one(arch, shape_name, multi_pod=args.multi_pod,
-                          reduced=args.reduced)
+                          reduced=args.reduced, packed_uplink=packed_uplink)
             with open(path, "w") as f:
                 json.dump(res, f, indent=1)
             r = res["roofline"]

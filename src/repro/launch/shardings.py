@@ -123,6 +123,35 @@ def tree_pspecs(tree: PyTree, cfg: ModelConfig, mesh: Mesh, *,
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def model_shard_dims(tree: PyTree, cfg: ModelConfig, mesh: Mesh, *,
+                     multi_pod: bool, worker_dim: bool = True
+                     ) -> Tuple[Optional[int], ...]:
+    """Per-leaf ELEMENT-dim index sharded over the mesh ``model`` axis
+    (``None`` = replicated on it), in canonical flatten order.
+
+    This is the layout contract between :func:`param_pspec` and the
+    shard-local packed transport
+    (:class:`repro.core.packing.ShardPackSpec`): the transport packs, per
+    device, exactly the slice these shardings make resident there, so the
+    OTA round never reshards a signal plane across the model axis.  Element
+    dims exclude the leading worker dim (``worker_dim=True`` for the
+    replicated-FL (W, ...) state).
+    """
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    lead = 1 if worker_dim else 0
+    dims = []
+    for p, v in flat:
+        spec = param_pspec(p, v.shape, cfg, mesh, worker_dim=worker_dim,
+                           fsdp=False, multi_pod=multi_pod)
+        dim = None
+        for k, entry in enumerate(spec):
+            axes = entry if isinstance(entry, (tuple, list)) else (entry,)
+            if "model" in axes:
+                dim = k - lead
+        dims.append(dim)
+    return tuple(dims)
+
+
 # ---------------------------------------------------------------------------
 # cache specs (decode shapes)
 # ---------------------------------------------------------------------------

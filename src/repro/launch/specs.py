@@ -86,11 +86,17 @@ def build_train_spec(arch: str, mesh: Mesh, *, multi_pod: bool,
                      reduced: bool = False,
                      transport_backend: Optional[str] = None,
                      train_driver: str = "scan",
-                     scenario: Optional[str] = None) -> DryRunSpec:
+                     scenario: Optional[str] = None,
+                     packed_uplink: Optional[bool] = None) -> DryRunSpec:
     """``transport_backend`` ("jnp" | "pallas" | None = REPRO_USE_PALLAS
-    env var), ``train_driver`` ("scan" | "loop") and ``scenario`` (a
-    ``repro.phy`` preset; None = legacy block fading) are per-experiment
-    fields threaded into the trainer / recorded in meta — not env-only."""
+    env var), ``train_driver`` ("scan" | "loop"), ``scenario`` (a
+    ``repro.phy`` preset; None = legacy block fading — scenarios now run on
+    EVERY mesh, model-parallel included: the (W, d_pad) shard-local state
+    keeps the packed layout resident per device) and ``packed_uplink``
+    (None/True = packed — shard-local under model-parallel; False = the
+    per-leaf leafwise oracle, the baseline the CI reshard assert compares
+    against) are per-experiment fields threaded into the trainer /
+    recorded in meta — not env-only."""
     if train_driver not in ("scan", "loop"):
         raise ValueError(f"unknown train driver {train_driver!r}")
     shp = SHAPES["train_4k"]
@@ -102,6 +108,7 @@ def build_train_spec(arch: str, mesh: Mesh, *, multi_pod: bool,
     d_n = axis_size(mesh, daxes)
     seq = 64 if reduced else shp["seq"]
     gbatch = 2 * d_n if reduced else shp["batch"]
+    model_parallel = dict(mesh.shape).get("model", 1) > 1
 
     sketched = arch in BIG_ARCHS and not reduced
     if sketched:
@@ -115,25 +122,17 @@ def build_train_spec(arch: str, mesh: Mesh, *, multi_pod: bool,
         bw = gbatch // W
     else:
         W = d_n
-        # model-parallel meshes keep the per-leaf tree state: packing the
-        # model-sharded leaves would make GSPMD reshard every signal plane
-        # per round (tree_ota.packing_pays_off) — and the packed-vs-tree
-        # decision must be made HERE, where the mesh is known, because
-        # init_fn is shape-traced outside the mesh context below.
-        model_parallel = dict(mesh.shape).get("model", 1) > 1
-        if scenario is not None and model_parallel:
-            raise ValueError(
-                "phy scenarios run over the packed (W, D) state, which "
-                "model-parallel meshes keep leafwise (GSPMD reshard storms "
-                "— ROADMAP PR 2 notes); drop --scenario or the model axis")
         flcfg = FLConfig(mode="replicated", n_workers=W, local_steps=1,
                          local_lr=1e-3, transport_backend=transport_backend,
-                         packed_uplink=False if model_parallel else None,
+                         packed_uplink=packed_uplink,
                          scenario=scenario)
         bw = gbatch // W
     acfg = AdmmConfig(rho=0.5, flip_on_change=False)
     ccfg = ChannelConfig(n_workers=W, snr_db=40.0)
-    init_fn, train_step = make_fl_train(model, flcfg, acfg, ccfg)
+    # the mesh is passed EXPLICITLY (not inferred from context) because
+    # init_fn is shape-traced outside the mesh context below; it decides
+    # the replicated dual/fading layout (shard-local under model-parallel)
+    init_fn, train_step = make_fl_train(model, flcfg, acfg, ccfg, mesh=mesh)
 
     tseq = _text_seq(cfg, seq)
     batch = {"tokens": _sds((W, bw, tseq), jnp.int32),
@@ -159,21 +158,31 @@ def build_train_spec(arch: str, mesh: Mesh, *, multi_pod: bool,
         from repro.core.cplx import Complex
         worker = dict(worker_dim=True, fsdp=False, **kw)
         wspec = daxes if len(daxes) > 1 else daxes[0]
-        if isinstance(state_sds.lam, Complex):
-            # persistently-packed λ/h: one (W, D) Complex buffer each —
-            # worker axis sharded over data, packed axis replicated
-            lam_spec = jax.tree.map(lambda _: P(wspec), state_sds.lam)
+        packed_state = isinstance(state_sds.lam, Complex)
+        # shard-local layout: the packed axis of every (W, d_pad) plane is
+        # sharded over `model` (each device holds exactly the slice its
+        # shard-local pack produces); otherwise the packed axis replicates
+        D_packed = state_sds.lam.re.shape[-1] if packed_state else None
+        pspec_plane = P(wspec, "model") if model_parallel and packed_state \
+            else P(wspec)
+        if packed_state:
+            # persistently-packed λ/h: one (W, D | d_pad) Complex buffer
+            # each — worker axis sharded over data
+            lam_spec = jax.tree.map(lambda _: pspec_plane, state_sds.lam)
         else:
             lam_spec = SH.tree_pspecs(state_sds.lam, **worker)
         if scenario is not None:
             # PhyState: every populated leaf is worker-major ((W, D) fading
-            # planes, (W,) gains/masks, (W, 2) positions) except the scalar
-            # round counter
+            # planes — model-sharded under shard-local — (W,) gains/masks,
+            # (W, 2) positions) except the scalar round counter
             chan_spec = jax.tree.map(
-                lambda l: P(wspec) if l.ndim >= 1 else P(), state_sds.chan)
-        elif isinstance(state_sds.lam, Complex):
+                lambda l: (pspec_plane if l.ndim == 2
+                           and l.shape[-1] == D_packed
+                           else P(wspec) if l.ndim >= 1 else P()),
+                state_sds.chan)
+        elif packed_state:
             chan_spec = type(state_sds.chan)(
-                h=jax.tree.map(lambda _: P(wspec), state_sds.chan.h),
+                h=jax.tree.map(lambda _: pspec_plane, state_sds.chan.h),
                 age=P())
         else:
             chan_spec = type(state_sds.chan)(
@@ -202,7 +211,10 @@ def build_train_spec(arch: str, mesh: Mesh, *, multi_pod: bool,
                   fl_mode=flcfg.mode, n_workers=W,
                   sliding_window=cfg.sliding_window,
                   transport_backend=transport_backend,
-                  train_driver=train_driver, scenario=scenario),
+                  train_driver=train_driver, scenario=scenario,
+                  packed_uplink=packed_uplink,
+                  shard_local=bool(not sketched and model_parallel
+                                   and packed_uplink is not False)),
     )
 
 
@@ -285,14 +297,16 @@ def build_spec(arch: str, shape_name: str, mesh: Mesh, *, multi_pod: bool,
                reduced: bool = False,
                transport_backend: Optional[str] = None,
                train_driver: str = "scan",
-               scenario: Optional[str] = None) -> DryRunSpec:
+               scenario: Optional[str] = None,
+               packed_uplink: Optional[bool] = None) -> DryRunSpec:
     kind = SHAPES[shape_name]["kind"]
     if kind == "train":
         return build_train_spec(arch, mesh, multi_pod=multi_pod,
                                 reduced=reduced,
                                 transport_backend=transport_backend,
                                 train_driver=train_driver,
-                                scenario=scenario)
+                                scenario=scenario,
+                                packed_uplink=packed_uplink)
     if kind == "prefill":
         return build_prefill_spec(arch, mesh, multi_pod=multi_pod,
                                   reduced=reduced)

@@ -49,6 +49,11 @@ def main() -> None:
     ap.add_argument("--h-min", type=float, default=None,
                     help="deep-fade truncation threshold on the per-worker "
                          "RMS |h| (workers below it skip the round)")
+    ap.add_argument("--slots-per-round", type=int, default=None,
+                    help="wall-clock slots the scenario physics advances "
+                         "per round (default: the preset's 1; raise it so "
+                         "mobility/Doppler gain dynamics show up in short "
+                         "runs)")
     ap.add_argument("--rounds", type=int, default=50)
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--batch", type=int, default=2, help="per-worker batch")
@@ -76,7 +81,8 @@ def main() -> None:
                      local_steps=args.local_steps, local_lr=args.local_lr,
                      transport_backend=args.backend,
                      scenario=args.scenario, doppler_hz=args.doppler_hz,
-                     csi_err=args.csi_err, h_min=args.h_min)
+                     csi_err=args.csi_err, h_min=args.h_min,
+                     slots_per_round=args.slots_per_round)
     acfg = AdmmConfig(rho=args.rho, flip_on_change=False)
     ccfg = ChannelConfig(n_workers=W, snr_db=args.snr_db,
                          coherence_iters=args.coherence)

@@ -61,6 +61,14 @@ class PhyConfig:
     rho: float = 0.0
     #: rounds per fading update (legacy coherence block; 1 = every round)
     coherence_iters: int = 10
+    #: wall-clock slots the physics advances per round (1 = physically
+    #: honest but slow: mobility crawls one slot/round, so gain dynamics
+    #: are invisible in short runs).  RECORD of what :func:`make_scenario`
+    #: already resolved — the k-fold time step is baked into ``rho`` (the
+    #: k-slot Doppler update period) and ``geometry.slot_seconds`` (k slots
+    #: of waypoint distance) at build time; ``step`` never reads this
+    #: field, so setting it on a hand-built PhyConfig alone does nothing.
+    slots_per_round: int = 1
     #: worker CSI error std σ_e (0 = perfect CSI)
     csi_err: float = 0.0
     #: participation threshold on the per-worker RMS |h| (0 = everyone
@@ -275,6 +283,7 @@ def make_scenario(name: str, ccfg: Optional[ChannelConfig] = None, *,
                   rho: Optional[float] = None,
                   geometry: Optional[GeometryConfig] = None,
                   freq_flat: Optional[bool] = None,
+                  slots_per_round: Optional[int] = None,
                   backend: Optional[str] = None) -> Scenario:
     """Build a preset scenario, with per-experiment overrides.
 
@@ -286,12 +295,19 @@ def make_scenario(name: str, ccfg: Optional[ChannelConfig] = None, *,
     with the same slot the Doppler conversion uses, so fading decorrelation
     and waypoint mobility always advance in lock-step (a ``ChannelConfig``
     slot override would otherwise silently desynchronise them).
+    ``slots_per_round`` scales that shared clock: one round advances
+    ``k`` slots of physics (waypoint distance AND Doppler update period),
+    so gains evolve visibly in short runs.
     """
     if name not in PRESETS:
         raise ValueError(
             f"unknown scenario {name!r}; want one of {list_scenarios()}")
     p = dict(PRESETS[name])
-    slot = ccfg.slot_seconds if ccfg is not None else 1e-3
+    spr = int(slots_per_round if slots_per_round is not None
+              else p.get("slots_per_round", 1))
+    if spr < 1:
+        raise ValueError(f"slots_per_round must be >= 1, got {spr}")
+    slot = (ccfg.slot_seconds if ccfg is not None else 1e-3) * spr
     coh = coherence_iters if coherence_iters is not None else p.get(
         "coherence_iters", ccfg.coherence_iters if ccfg is not None else 10)
 
@@ -315,6 +331,7 @@ def make_scenario(name: str, ccfg: Optional[ChannelConfig] = None, *,
         freq_flat=bool(freq_flat if freq_flat is not None
                        else p.get("freq_flat", False)),
         geometry=geom,
+        slots_per_round=spr,
         backend=backend,
     )
     return Scenario(name=name, cfg=cfg)

@@ -8,6 +8,10 @@ Two execution modes (DESIGN.md §4):
   round (superposition = all-reduce over the worker axis) produces the new
   global model; duals update locally.  Per the paper's Appendix H the
   stochastic variant skips the time-varying flip rule (primal-only updates).
+  Duals/fading live persistently packed: one (W, D) Complex buffer each on
+  data-parallel meshes, the SHARD-LOCAL (W, d_pad) layout on model-parallel
+  meshes (``tree_ota.ota_tree_round_shard_local`` runs the round per model
+  shard inside shard_map — no leafwise fallback, scenarios included).
 
 * ``sketched`` — A-FADMM-CS for archs whose per-worker copies exceed HBM
   (qwen1.5-110b, deepseek-v3-671b; the paper's §6 "Large Models" extension).
@@ -38,13 +42,14 @@ from repro.core import cplx, transport
 from repro.core.admm import AdmmConfig
 from repro.core.channel import ChannelConfig
 from repro.core.cplx import Complex
-from repro.core.packing import build_packspec, unpack_cplx
+from repro.core.packing import build_packspec, build_shard_packspec, unpack_cplx
 from repro.core.sketch import decode_hashed_tree, encode_hashed_tree
 from repro.core.tree_ota import (TreeChannel, TreeFLState, _zmap,
                                  init_channel_packed, init_channel_tree,
                                  ota_tree_round, ota_tree_round_packed_state,
-                                 packing_pays_off, step_channel_packed,
-                                 step_channel_tree, tree_penalty_grad)
+                                 ota_tree_round_shard_local,
+                                 step_channel_packed, step_channel_tree,
+                                 tree_penalty_grad, unpack_cplx_shard_local)
 from repro.models.registry import Model
 from repro.models.sharding import shard
 from repro.optim.optimizers import adam, sgd
@@ -70,20 +75,28 @@ class FLConfig:
     #: kernel carries a custom VJP (Pallas backward kernels), so there is no
     #: "pallas transport but jnp grad path" split to manage anymore.
     transport_backend: Optional[str] = None
-    #: replicated mode: keep λ/h persistently packed as (W, D) buffers and
-    #: issue one fused uplink per round (True), keep the per-leaf tree
-    #: state + reference loop (False), or auto (None: packed except under a
-    #: model-parallel mesh — see tree_ota.packing_pays_off)
+    #: replicated mode: keep λ/h persistently packed and issue one fused
+    #: uplink per round (None/True — the default everywhere; under a
+    #: model-parallel mesh the buffers are SHARD-LOCAL packed (W, d_pad)
+    #: and the round runs per shard inside shard_map, see
+    #: tree_ota.ota_tree_round_shard_local), or keep the per-leaf tree
+    #: state + reference loop (False — the semantics oracle).
     packed_uplink: Optional[bool] = None
     #: ``repro.phy`` wireless scenario preset (replicated mode): None keeps
     #: the legacy i.i.d. block-fading channel bit-for-bit; a name from
     #: ``phy.list_scenarios()`` runs the scenario engine over the packed
-    #: (W, D) index space (forces the packed state layout).
+    #: (W, D) index space — shard-locally packed under model-parallel
+    #: meshes, where the (W,)-shaped masks/gains replicate across the
+    #: model axis (forces the packed state layout).
     scenario: Optional[str] = None
     #: scenario overrides (None = the preset's value)
     doppler_hz: Optional[float] = None
     csi_err: Optional[float] = None
     h_min: Optional[float] = None
+    #: wall-clock slots the scenario advances per round (None = preset's 1);
+    #: mobility/Doppler decorrelation speed up accordingly so gain dynamics
+    #: are visible in short runs
+    slots_per_round: Optional[int] = None
 
 
 def _local_opt(flcfg: FLConfig):
@@ -97,9 +110,20 @@ def _local_opt(flcfg: FLConfig):
 # ---------------------------------------------------------------------------
 
 def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
-                    ccfg: ChannelConfig):
+                    ccfg: ChannelConfig, mesh=None):
+    """``mesh`` (or the mesh active at build time) decides the dual/fading
+    layout: single-device and pure-data meshes keep ONE globally packed
+    (W, D) buffer; model-parallel meshes keep the SHARD-LOCAL packed
+    (W, d_pad) layout (``ShardPackSpec``) and run the round per shard
+    inside ``shard_map`` — scenarios included (the historical
+    scenario + model-parallel rejection is gone)."""
     W = flcfg.n_workers
     opt = _local_opt(flcfg)
+
+    if mesh is None:
+        from repro.models.sharding import current_mesh
+        mesh = current_mesh()
+    model_n = dict(mesh.shape).get("model", 1) if mesh is not None else 1
 
     scn = None
     if flcfg.scenario is not None:
@@ -113,23 +137,27 @@ def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
         scn = make_scenario(flcfg.scenario, ccfg,
                             doppler_hz=flcfg.doppler_hz,
                             csi_err=flcfg.csi_err, h_min=flcfg.h_min,
+                            slots_per_round=flcfg.slots_per_round,
                             backend=flcfg.transport_backend)
 
     def _packed_state() -> bool:
-        """Resolved at trace time of ``init_fn``; ``train_step`` then reads
-        the layout from the state structure itself (so init and step can't
-        disagree).  θ always stays a tree — the local steps run the model."""
+        """Resolved once at build time; ``train_step`` then reads the layout
+        from the state structure itself (so init and step can't disagree).
+        θ always stays a tree — the local steps run the model."""
         if scn is not None:
-            if not packing_pays_off():
-                raise ValueError(
-                    "FLConfig.scenario runs over the packed (W, D) state, "
-                    "which model-parallel meshes keep leafwise (GSPMD "
-                    "reshard storms — ROADMAP PR 2 notes); drop the "
-                    "scenario or the model axis")
             return True   # the scenario engine IS (W, D)-packed
         if flcfg.packed_uplink is not None:
             return flcfg.packed_uplink
-        return packing_pays_off()
+        return True
+
+    #: model-parallel mesh + packed state -> shard-local packed buffers
+    shard_local = _packed_state() and model_n > 1
+
+    def _shard_spec(theta):
+        from repro.launch.shardings import model_shard_dims
+        dims = model_shard_dims(theta, model.cfg, mesh,
+                                multi_pod="pod" in mesh.axis_names)
+        return build_shard_packspec(theta, dims, model_n, batch_dims=1)
 
     def init_fn(key: Array) -> TreeFLState:
         kp, kc = jax.random.split(key)
@@ -141,11 +169,14 @@ def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
             lambda l: jnp.mean(l.astype(jnp.float32), 0).astype(l.dtype),
             theta)
         if _packed_state():
-            # λ/h live packed between rounds: no per-round pack_cplx concat
-            spec = build_packspec(theta, batch_dims=1)
-            lam = cplx.czero((W, spec.d), jnp.float32)
-            chan = scn.init(kc, W, spec.d) if scn is not None \
-                else init_channel_packed(kc, W, spec.d)
+            # λ/h live packed between rounds: no per-round pack_cplx concat.
+            # Shard-local: the packed axis is d_pad wide (per-shard slices
+            # concatenated) and sharded over the model axis.
+            d = _shard_spec(theta).d_pad if shard_local \
+                else build_packspec(theta, batch_dims=1).d
+            lam = cplx.czero((W, d), jnp.float32)
+            chan = scn.init(kc, W, d) if scn is not None \
+                else init_channel_packed(kc, W, d)
         else:
             lam = jax.tree.map(
                 lambda l: cplx.czero(l.shape, jnp.float32), theta)
@@ -161,25 +192,47 @@ def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
                    ) -> Tuple[TreeFLState, dict]:
         """batch leaves: (W, B_local, ...) — worker-major, sharded w->data."""
         packed = isinstance(state.lam, Complex)   # state layout decides
+        if packed and not shard_local:
+            # the layout was latched at build time; tracing the GLOBAL
+            # (W, D) packed round under a model-parallel mesh would quietly
+            # recreate the GSPMD reshard storm shard-local packing exists
+            # to prevent — fail loudly instead of compiling it
+            from repro.models.sharding import current_mesh
+            active = current_mesh()
+            if active is not None and dict(active.shape).get("model", 1) > 1:
+                raise ValueError(
+                    "train_step traced under a model-parallel mesh but the "
+                    "trainer was built without one: pass mesh= to "
+                    "make_fl_train (or build inside the mesh context) so "
+                    "the state comes up in the shard-local packed layout")
         kc, kn = jax.random.split(key)
         mask = h_tx_p = Theta_prev = None
+        spec = sspec = None
+        if packed:
+            # slice-views of the packed buffers for the leafwise penalty —
+            # constant across the local steps, so unpack once per round.
+            # Shard-local layout: the unpack runs inside shard_map (each
+            # device rebuilds only its resident leaf shards).
+            if shard_local:
+                sspec = _shard_spec(state.theta)
+                unpack_tree = lambda buf: unpack_cplx_shard_local(
+                    sspec, buf, mesh)
+            else:
+                spec = build_packspec(state.theta, batch_dims=1)
+                unpack_tree = lambda buf: unpack_cplx(spec, buf)
         if scn is not None:
             chan = scn.step(kc, state.chan)       # PhyState, (W, D)-packed
-            spec = build_packspec(state.theta, batch_dims=1)
             # workers see their CSI everywhere they act: penalty + duals
-            lam_tree = unpack_cplx(spec, state.lam)
-            h_tree = unpack_cplx(spec, _phys_h_tx(chan))
+            lam_tree = unpack_tree(state.lam)
+            h_tree = unpack_tree(_phys_h_tx(chan))
             if scn.truncating:
                 mask, Theta_prev = chan.mask, state.Theta
             if scn.imperfect_csi:
                 h_tx_p = chan.h_hat
         elif packed:
-            spec = build_packspec(state.theta, batch_dims=1)
             chan, _changed = step_channel_packed(kc, state.chan, ccfg)
-            # slice-views of the packed buffers for the leafwise penalty —
-            # constant across the local steps, so unpack once per round
-            lam_tree = unpack_cplx(spec, state.lam)
-            h_tree = unpack_cplx(spec, chan.h)
+            lam_tree = unpack_tree(state.lam)
+            h_tree = unpack_tree(chan.h)
         else:
             chan, _changed = step_channel_tree(kc, state.chan, ccfg)
             lam_tree, h_tree = state.lam, chan.h
@@ -197,7 +250,12 @@ def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
             local_body, (state.theta, state.opt), None,
             length=flcfg.local_steps)
 
-        if packed:  # incl. every scenario: mask/h_tx/guard default to None
+        if shard_local:  # incl. scenarios: (W,) masks replicate over model
+            Theta_f32, lam_new, m = ota_tree_round_shard_local(
+                theta, state.lam, chan.h, kn, acfg, ccfg, sspec, mesh,
+                backend=flcfg.transport_backend, mask=mask, h_tx_p=h_tx_p,
+                Theta_prev=Theta_prev)
+        elif packed:  # incl. every scenario: mask/h_tx/guard default to None
             Theta_f32, lam_new, m = ota_tree_round_packed_state(
                 theta, state.lam, chan.h, kn, acfg, ccfg, spec,
                 backend=flcfg.transport_backend, mask=mask, h_tx_p=h_tx_p,
@@ -354,10 +412,14 @@ def make_sketched(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
 
 
 def make_fl_train(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
-                  ccfg: ChannelConfig):
+                  ccfg: ChannelConfig, mesh=None):
+    """``mesh`` picks the replicated-mode state layout (shard-local packed
+    under a model-parallel mesh); None falls back to the mesh active at
+    build time, then to the single-buffer packed layout."""
     if flcfg.scenario is None:
         orphans = {k: getattr(flcfg, k)
-                   for k in ("doppler_hz", "csi_err", "h_min")
+                   for k in ("doppler_hz", "csi_err", "h_min",
+                             "slots_per_round")
                    if getattr(flcfg, k) is not None}
         if orphans:
             raise ValueError(
@@ -366,7 +428,7 @@ def make_fl_train(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
                 "scenario='markov-doppler' (refusing to silently ignore "
                 "them)")
     if flcfg.mode == "replicated":
-        return make_replicated(model, flcfg, acfg, ccfg)
+        return make_replicated(model, flcfg, acfg, ccfg, mesh=mesh)
     if flcfg.mode == "sketched":
         if flcfg.scenario is not None:
             raise ValueError(

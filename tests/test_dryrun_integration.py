@@ -11,6 +11,33 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
+def test_collective_permute_counter_is_loop_corrected():
+    """`hlo_analysis.collective_permutes` multiplies through while-loop trip
+    counts — the reshard tripwire must count per ROUND, not per HLO line."""
+    from repro.launch.hlo_analysis import collective_permutes
+
+    hlo = """\
+%body (p: f32[4]) -> f32[4] {
+  %p = f32[4] parameter(0)
+  %cp = f32[4] collective-permute(%p), source_target_pairs={{0,1}}
+  ROOT %r = f32[4] add(%cp, %p)
+}
+
+%cond (c: f32[4]) -> pred[] {
+  %c = f32[4] parameter(0)
+  ROOT %lt = pred[] constant(true)
+}
+
+ENTRY %main (p0: f32[4]) -> f32[4] {
+  %p0 = f32[4] parameter(0)
+  %cp0 = f32[4] collective-permute(%p0), source_target_pairs={{0,1}}
+  ROOT %w = f32[4] while(%cp0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"3"}}
+}
+"""
+    # 1 top-level + 3 loop iterations x 1 in the body
+    assert collective_permutes(hlo) == 4.0
+
+
 @pytest.mark.parametrize("arch,shape", [("recurrentgemma-2b", "train_4k"),
                                         ("falcon-mamba-7b", "long_500k")])
 def test_dryrun_reduced(arch, shape):
@@ -32,4 +59,6 @@ def test_dryrun_reduced(arch, shape):
             assert key in rf
         assert rf["compute_s"] >= 0 and rf["memory_s"] > 0
         assert r["collectives"]["bytes_per_device"] >= 0
+        # reshard tripwire surfaced per run (loop-corrected, per round)
+        assert r["collectives"]["collective_permute_count"] >= 0
         assert r["hlo_loop_corrected"]["flops"] > 0

@@ -86,6 +86,170 @@ def test_pack_shape_mismatch_raises():
 
 
 # ---------------------------------------------------------------------------
+# shard-local packing (ShardPackSpec) — pure layout math, no devices needed
+# ---------------------------------------------------------------------------
+
+def _shard_tree(W=3):
+    """Mixed tree: model-sharded leaves (dims 1 / 0) + replicated leaves
+    whose total size (5 + 1 = 6) splits unevenly over 4 shards -> padding."""
+    k = jax.random.split(KEY, 4)
+    return {
+        "wq": jax.random.normal(k[0], (W, 4, 8)),
+        "wo": jax.random.normal(k[1], (W, 8, 4)),
+        "norm": jax.random.normal(k[2], (W, 5)),
+        "b": jax.random.normal(k[3], (W,)),
+    }
+
+
+#: flatten order is sorted keys: b, norm, wo, wq
+_SHARD_DIMS = [None, None, 0, 1]
+
+
+def _local_view(tree, ss, j):
+    """What shard j's devices hold: sharded leaves sliced, replicated whole."""
+    out = dict(tree)
+    out["wq"] = tree["wq"][:, :, j * (8 // ss.n_shards):(j + 1) * (8 // ss.n_shards)]
+    out["wo"] = tree["wo"][:, j * (8 // ss.n_shards):(j + 1) * (8 // ss.n_shards), :]
+    return out
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_shard_pack_global_roundtrip_bit_exact(n_shards):
+    from repro.core.packing import (build_shard_packspec, pack_shard_global,
+                                    unpack_shard_global)
+
+    tree = _shard_tree()
+    ss = build_shard_packspec(tree, _SHARD_DIMS, n_shards, batch_dims=1)
+    assert ss.d_pad == n_shards * ss.d_local >= ss.spec.d
+    buf = pack_shard_global(ss, tree)
+    assert buf.shape == (3, ss.d_pad)
+    out = unpack_shard_global(ss, buf)
+    for name in tree:
+        np.testing.assert_array_equal(np.asarray(out[name]),
+                                      np.asarray(tree[name]))
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_shard_pack_offsets_compose_into_global(n_shards):
+    """Σ_shard scatter(pack_shard_local(shard j), shard_perm_j) ==
+    pack(global): per-shard offsets compose into ONE global index space —
+    the identity that lets shard-local encodes stand in for the global
+    packed buffer (ISSUE 5 acceptance)."""
+    from repro.core.packing import (build_shard_packspec, pack,
+                                    pack_shard_local, shard_perm,
+                                    shard_valid_mask)
+
+    tree = _shard_tree()
+    ss = build_shard_packspec(tree, _SHARD_DIMS, n_shards, batch_dims=1)
+    perm = shard_perm(ss)
+    canon = np.asarray(pack(ss.spec, tree))
+    acc = np.zeros_like(canon)
+    for j in range(n_shards):
+        lp = np.asarray(pack_shard_local(ss, _local_view(tree, ss, j), j))
+        pj = perm[j * ss.d_local:(j + 1) * ss.d_local]
+        valid = pj >= 0
+        # padding is exactly where perm says, and shard_valid_mask agrees
+        np.testing.assert_array_equal(
+            np.asarray(shard_valid_mask(ss, j)), valid)
+        acc[:, pj[valid]] += lp[:, valid]
+    np.testing.assert_array_equal(acc, canon)
+    # every canonical position owned exactly once, padding only at the tail
+    owned = np.sort(perm[perm >= 0])
+    np.testing.assert_array_equal(owned, np.arange(ss.spec.d))
+    assert (perm < 0).sum() == ss.d_pad - ss.spec.d
+
+
+def test_shard_pack_local_is_global_slice():
+    """pack_shard_global is literally the concatenation of the per-shard
+    local packs — the (W, d_pad) buffer sharded over `model` IS the
+    shard-local layout, no translation between them."""
+    from repro.core.packing import (build_shard_packspec, pack_shard_global,
+                                    pack_shard_local)
+
+    tree = _shard_tree()
+    ss = build_shard_packspec(tree, _SHARD_DIMS, 2, batch_dims=1)
+    buf = np.asarray(pack_shard_global(ss, tree))
+    for j in range(2):
+        lp = np.asarray(pack_shard_local(ss, _local_view(tree, ss, j), j))
+        np.testing.assert_array_equal(
+            buf[:, j * ss.d_local:(j + 1) * ss.d_local], lp)
+
+
+def test_shard_unpack_local_rebuilds_from_psum_segment():
+    """unpack_shard_local + the scatter/psum replicated-segment exchange
+    (here an explicit sum, standing in for the shard_map psum) rebuild the
+    sharded slices AND the full replicated leaves on every shard."""
+    from repro.core.packing import (build_shard_packspec, pack_shard_local,
+                                    scatter_rep_chunk, shard_rep_chunk,
+                                    unpack_shard_local)
+
+    tree = _shard_tree()
+    ss = build_shard_packspec(tree, _SHARD_DIMS, 2, batch_dims=1)
+    locs = [pack_shard_local(ss, _local_view(tree, ss, j), j)
+            for j in range(2)]
+    seg = sum(scatter_rep_chunk(ss, shard_rep_chunk(ss, locs[j]), j)
+              for j in range(2))
+    for j in range(2):
+        out = unpack_shard_local(ss, locs[j], seg)
+        np.testing.assert_array_equal(np.asarray(out["norm"]),
+                                      np.asarray(tree["norm"]))
+        np.testing.assert_array_equal(np.asarray(out["b"]),
+                                      np.asarray(tree["b"]))
+        np.testing.assert_array_equal(
+            np.asarray(out["wq"]),
+            np.asarray(_local_view(tree, ss, j)["wq"]))
+
+
+def test_shard_packspec_rejects_indivisible_dim():
+    from repro.core.packing import build_shard_packspec
+
+    tree = _shard_tree()
+    with pytest.raises(ValueError, match="not divisible"):
+        build_shard_packspec(tree, _SHARD_DIMS, 3, batch_dims=1)
+    with pytest.raises(ValueError, match="entries"):
+        build_shard_packspec(tree, [None, None], 2, batch_dims=1)
+
+
+def test_shard_packspec_all_replicated_and_all_sharded():
+    """Degenerate splits both work: all-replicated (everything rides the
+    padded segment) and all-sharded (no segment at all)."""
+    from repro.core.packing import (build_shard_packspec, pack_shard_global,
+                                    unpack_shard_global)
+
+    tree = _shard_tree()
+    for dims in ([None] * 4, ):
+        ss = build_shard_packspec(tree, dims, 2, batch_dims=1)
+        assert ss.sharded_local == 0 and ss.rep_size == ss.spec.d
+        out = unpack_shard_global(ss, pack_shard_global(ss, tree))
+        for name in tree:
+            np.testing.assert_array_equal(np.asarray(out[name]),
+                                          np.asarray(tree[name]))
+    sub = {"wq": tree["wq"], "wo": tree["wo"]}
+    ss = build_shard_packspec(sub, [0, 1], 2, batch_dims=1)
+    assert ss.rep_chunk == 0 and not ss.has_padding
+    out = unpack_shard_global(ss, pack_shard_global(ss, sub))
+    for name in sub:
+        np.testing.assert_array_equal(np.asarray(out[name]),
+                                      np.asarray(sub[name]))
+
+
+def test_shard_pack_cplx_roundtrip():
+    from repro.core.packing import (build_shard_packspec,
+                                    pack_shard_global_cplx,
+                                    unpack_shard_global_cplx)
+
+    base = _shard_tree()
+    ctree = jax.tree.map(lambda l: cplx.Complex(l, 2.0 * l), base)
+    ss = build_shard_packspec(base, _SHARD_DIMS, 2, batch_dims=1)
+    out = unpack_shard_global_cplx(ss, pack_shard_global_cplx(ss, ctree))
+    for name in base:
+        np.testing.assert_array_equal(np.asarray(out[name].re),
+                                      np.asarray(ctree[name].re))
+        np.testing.assert_array_equal(np.asarray(out[name].im),
+                                      np.asarray(ctree[name].im))
+
+
+# ---------------------------------------------------------------------------
 # global packed codec
 # ---------------------------------------------------------------------------
 

@@ -504,23 +504,65 @@ def test_llm_trainer_scenario_rejects_leafwise_layout():
                       ChannelConfig(n_workers=2))
 
 
-def test_llm_trainer_scenario_rejects_model_parallel_mesh(monkeypatch):
-    """A scenario forces the packed (W, D) layout; where packing doesn't
-    pay (model-parallel mesh), init must raise — the same rejection
-    ``launch/specs.py`` gives launcher users — instead of silently
-    triggering the GSPMD reshard storm on library callers."""
+def test_llm_trainer_scenario_model_parallel_uses_shard_local_layout():
+    """Scenario + model-parallel mesh is no longer rejected: the state
+    comes up in the SHARD-LOCAL packed layout ((W, d_pad) with the packed
+    axis split over the model shards) and the round runs per shard inside
+    shard_map.  The multi-device execution contract (bitwise leafwise
+    parity, masked training) lives in ``tests/test_shard_local.py``; here
+    we pin the layout decision itself, which needs no devices."""
+    from repro.core.cplx import Complex
+    from repro.core.packing import build_shard_packspec
+    from repro.launch.shardings import model_shard_dims
     from repro.models import get_model
-    from repro.train import llm_trainer
     from repro.train.llm_trainer import FLConfig, make_fl_train
 
     m = get_model("granite-8b", reduced=True)
     flcfg = FLConfig(mode="replicated", n_workers=2,
                      scenario="markov-doppler")
-    init_fn, _ = make_fl_train(m, flcfg, AdmmConfig(),
-                               ChannelConfig(n_workers=2))
-    monkeypatch.setattr(llm_trainer, "packing_pays_off", lambda: False)
-    with pytest.raises(ValueError, match="model-parallel"):
-        init_fn(KEY)
+
+    # model=1 mesh: the canonical single-buffer packed layout
+    mesh1 = jax.make_mesh((1, 1), ("data", "model"))
+    init1, _ = make_fl_train(m, flcfg, AdmmConfig(),
+                             ChannelConfig(n_workers=2), mesh=mesh1)
+    st1 = jax.eval_shape(init1, KEY)
+    assert isinstance(st1.lam, Complex)
+
+    # model=2 mesh (abstract — the layout decision needs no devices): the
+    # shard-local (W, d_pad) layout, PhyState fading planes included
+    mesh2 = jax.sharding.AbstractMesh((("data", 1), ("model", 2)))
+    init2, _ = make_fl_train(m, flcfg, AdmmConfig(),
+                             ChannelConfig(n_workers=2), mesh=mesh2)
+    st2 = jax.eval_shape(init2, KEY)
+    assert isinstance(st2.lam, Complex)
+    dims = model_shard_dims(st2.theta, m.cfg, mesh2, multi_pod=False)
+    sspec = build_shard_packspec(st2.theta, dims, 2, batch_dims=1)
+    assert any(d is not None for d in dims)     # the model axis is real
+    assert sspec.d_pad >= sspec.spec.d
+    assert st1.lam.re.shape[-1] == sspec.spec.d
+    assert st2.lam.re.shape[-1] == sspec.d_pad
+    assert st2.chan.h.re.shape[-1] == sspec.d_pad
+
+
+def test_trainer_built_without_mesh_refuses_model_parallel_trace():
+    """The dual/fading layout is latched when the trainer is BUILT; tracing
+    a mesh-less (global (W, D) packed) trainer under a model-parallel mesh
+    would quietly recreate the GSPMD reshard storm — it must raise and tell
+    the caller to pass mesh= instead."""
+    from repro.models import get_model
+    from repro.models.sharding import axis_rules
+    from repro.train.llm_trainer import FLConfig, make_fl_train
+
+    m = get_model("granite-8b", reduced=True)
+    flcfg = FLConfig(mode="replicated", n_workers=2, local_steps=1)
+    init_fn, step = make_fl_train(m, flcfg, AdmmConfig(),
+                                  ChannelConfig(n_workers=2))   # no mesh
+    st = jax.eval_shape(init_fn, KEY)
+    batch = jax.ShapeDtypeStruct((2, 1, 8), jnp.int32)
+    mesh = jax.sharding.AbstractMesh((("data", 1), ("model", 2)))
+    with axis_rules(mesh):
+        with pytest.raises(ValueError, match="pass mesh="):
+            jax.eval_shape(step, st, {"tokens": batch}, KEY)
 
 
 # ---------------------------------------------------------------------------
@@ -634,6 +676,49 @@ def test_fl_config_rejects_orphan_scenario_overrides():
     acfg, ccfg = AdmmConfig(), ChannelConfig(n_workers=2)
     with pytest.raises(ValueError, match="scenario overrides"):
         make_fl_train(m, FLConfig(n_workers=2, h_min=0.5), acfg, ccfg)
+    with pytest.raises(ValueError, match="scenario overrides"):
+        make_fl_train(m, FLConfig(n_workers=2, slots_per_round=4),
+                      acfg, ccfg)
     with pytest.raises(ValueError, match="replicated-mode"):
         make_fl_train(m, FLConfig(mode="sketched", n_workers=2,
                                   scenario="markov-doppler"), acfg, ccfg)
+
+
+# ---------------------------------------------------------------------------
+# slots_per_round: visible physics in short runs
+# ---------------------------------------------------------------------------
+
+def test_slots_per_round_scales_the_shared_clock():
+    """One knob, one clock: k slots per round scales BOTH the mobility step
+    and the Doppler update period — rho decorrelates faster, geometry
+    advances k slots of distance, and the two stay in lock-step."""
+    ccfg = ChannelConfig(n_workers=8, slot_seconds=1e-3)
+    s1 = make_scenario("urban-mobility", ccfg)
+    s8 = make_scenario("urban-mobility", ccfg, slots_per_round=8)
+    assert s1.cfg.slots_per_round == 1 and s8.cfg.slots_per_round == 8
+    assert s8.cfg.geometry.slot_seconds == pytest.approx(8e-3)
+    assert s8.cfg.rho < s1.cfg.rho      # longer update period -> lower J0
+    with pytest.raises(ValueError, match="slots_per_round"):
+        make_scenario("urban-mobility", ccfg, slots_per_round=0)
+
+
+def test_slots_per_round_gains_drift_monotonically_faster():
+    """ROADMAP PR 4 note: one slot per round is physically honest but too
+    slow to see gain evolution in short runs.  More slots per round must
+    move the workers (and therefore their path-loss gains) monotonically
+    faster over the same number of rounds."""
+    ccfg = ChannelConfig(n_workers=16, slot_seconds=1e-3)
+    rounds, d = 6, 32
+    disp, gain_drift = [], []
+    for spr in (1, 8, 64):
+        scn = make_scenario("urban-mobility", ccfg, slots_per_round=spr)
+        st = scn.init(KEY, 16, d)
+        pos0, gain0 = np.asarray(st.pos), np.asarray(st.gain)
+        for i in range(rounds):
+            st = scn.step(jax.random.fold_in(KEY, i), st)
+        disp.append(float(np.mean(np.linalg.norm(
+            np.asarray(st.pos) - pos0, axis=-1))))
+        gain_drift.append(float(np.mean(np.abs(
+            np.asarray(st.gain) - gain0))))
+    assert disp[0] < disp[1] < disp[2], disp
+    assert gain_drift[0] < gain_drift[1] < gain_drift[2], gain_drift
