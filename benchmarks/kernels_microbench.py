@@ -26,13 +26,24 @@ from repro.kernels import ops, ref
 N = 1 << 20
 
 
-def _time(fn, iters: int = 10) -> float:
-    """Wall time per call in µs (post-warmup)."""
-    fn()
-    t0 = time.time()
-    for _ in range(iters):
+def _time(fn, iters: int = 10, warmup: int = 3) -> float:
+    """Median wall time per call in µs.
+
+    ``warmup`` calls absorb compile + first-touch allocation, then each of
+    ``iters`` calls is timed individually with ``time.perf_counter`` and the
+    MEDIAN is reported — one GC pause or scheduler hiccup cannot skew the
+    number the way a mean over one batched interval does.  Callers must
+    ``block_until_ready`` inside ``fn`` (async dispatch would otherwise time
+    the enqueue, not the work).
+    """
+    for _ in range(warmup):
         fn()
-    return (time.time() - t0) / iters * 1e6
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        samples.append(time.perf_counter() - t0)
+    return float(np.median(samples) * 1e6)
 
 
 def microbench():
@@ -94,6 +105,14 @@ def _uplink_case(W: int, d: int, label: str) -> dict:
                 jnp.max(jnp.abs(theta_out - ref_theta)))
         out[f"{backend}_us_per_round"] = _time(
             lambda f=f: f(theta, lam, h, key).block_until_ready())
+    # the one-pass fused round (ISSUE 6) on the same planes
+    fused = jax.jit(lambda t, l, hh, kk: transport.ota_round_fused(
+        t, l, hh, kk, 0.5, ccfg, backend="jnp")[0])
+    fused(theta, lam, h, key)
+    out["fused_us_per_round"] = _time(
+        lambda: fused(theta, lam, h, key).block_until_ready())
+    out["speedup_fused_over_composed"] = (
+        out["jnp_us_per_round"] / out["fused_us_per_round"])
     # elementwise HLO count the fusion collapses (modulate, scale, mul, sum,
     # noise-add, div, eps-max -> one kernel): traffic model as above.
     out["hbm_passes_unfused"] = 5
@@ -185,6 +204,9 @@ def transport_microbench():
         # have its end-to-end timing skewed by XLA executable-cache hits
         # from the first.
         "trainer_linreg_300r": _trainer_case(300, eval_every=1),
+        # wall-clock contract field (bench methodology: every BENCH json's
+        # optimised metric is a measured speedup, never a proxy count)
+        "optimised_metric": "uplink_mlp.speedup_fused_over_composed",
     }
 
 
@@ -192,23 +214,38 @@ def transport_microbench():
 # packed vs per-leaf pytree uplink (one fused receive per round)
 # ---------------------------------------------------------------------------
 
-def _count_receives(round_fn, *args) -> int:
-    """Trace ``round_fn`` once and count transport.receive dispatches —
-    each call is one modulate/receive kernel chain in the lowered HLO."""
+def _count_uplink_entries(round_fn, *args) -> int:
+    """Trace ``round_fn`` once and count uplink entry points: composed
+    ``transport.receive`` chains plus one-pass fused entries
+    (``ota_round_fused`` / ``ota_round_stats``).  Each is one receive
+    kernel chain in the lowered HLO — the dispatch contract is "one uplink
+    entry per round" whichever path is active."""
     from repro.core import transport
 
-    calls = {"n": 0}
-    orig = transport.receive
+    calls = {"n": 0, "depth": 0}
+    names = ("receive", "ota_round_fused", "ota_round_stats")
+    orig = {n: getattr(transport, n) for n in names}
 
-    def counting(*a, **kw):
-        calls["n"] += 1
-        return orig(*a, **kw)
+    def counting(n):
+        def f(*a, **kw):
+            # ota_round_fused reaches ota_round_stats internally: only the
+            # outermost entry is a round-level uplink
+            if calls["depth"] == 0:
+                calls["n"] += 1
+            calls["depth"] += 1
+            try:
+                return orig[n](*a, **kw)
+            finally:
+                calls["depth"] -= 1
+        return f
 
-    transport.receive = counting
+    for n in names:
+        setattr(transport, n, counting(n))
     try:
         jax.eval_shape(round_fn, *args)
     finally:
-        transport.receive = orig
+        for n in names:
+            setattr(transport, n, orig[n])
     return calls["n"]
 
 
@@ -229,7 +266,7 @@ def _tree_uplink_case(label: str, theta, lam, h, W: int) -> dict:
                      ("per_leaf", ota_tree_round_leafwise)):
         round_fn = lambda t, l, hh, k, fn=fn: fn(t, l, hh, k, acfg, ccfg,
                                                  backend="jnp")[0]
-        out[f"{name}_receive_dispatches_per_round"] = _count_receives(
+        out[f"{name}_uplink_entries_per_round"] = _count_uplink_entries(
             round_fn, theta, lam, h, key)
         j = jax.jit(round_fn)
         jax.block_until_ready(j(theta, lam, h, key))         # compile
@@ -237,13 +274,14 @@ def _tree_uplink_case(label: str, theta, lam, h, W: int) -> dict:
             lambda: jax.block_until_ready(j(theta, lam, h, key)), iters=30)
     out["speedup_packed_over_per_leaf"] = (
         out["per_leaf_us_per_round"] / out["packed_us_per_round"])
-    # Dispatch count is the optimised metric: each receive is a kernel-chain
-    # launch on TPU (hundreds/round on transformer configs before packing).
-    # CPU wall time additionally pays XLA's single-threaded concatenate for
-    # the pack/unpack layout ops, which is why large-D CPU numbers can go
-    # the other way; on TPU the concat is a DMA (bandwidth-bound, ~free
-    # next to the 5-plane modulate/receive traffic the round already pays).
-    out["optimised_metric"] = "receive_dispatches_per_round"
+    # Wall-clock is the optimised metric (bench methodology contract).  The
+    # entry count is still recorded — each uplink entry is a receive
+    # kernel-chain launch on TPU (hundreds/round on transformer configs
+    # before packing) — but the packed round now runs the one-pass fused
+    # receive, so the CPU wall-clock comparison is the honest headline.
+    # Note this case re-packs λ/h every round; the persistently-packed
+    # state path is the fused_round lane.
+    out["optimised_metric"] = "speedup_packed_over_per_leaf"
     return out
 
 
@@ -286,6 +324,122 @@ def packed_microbench() -> dict:
     tfm = _tree_uplink_case("transformer granite-8b (reduced)",
                             *_transformer_trees(W), W)
     return {"uplink_mlp_tree": mlp, "uplink_transformer_tree": tfm}
+
+
+# ---------------------------------------------------------------------------
+# fused one-pass OTA round (ISSUE 6): wall-clock vs composed + leafwise
+# ---------------------------------------------------------------------------
+
+def fused_round_microbench() -> dict:
+    """ISSUE 6 exit bar: on the persistently-packed state the ONE-PASS fused
+    receive (``transport.ota_round_fused`` — each worker plane read once per
+    round) must beat the composed packed chain AND at minimum match the
+    leafwise round on wall-clock, while issuing exactly one uplink entry per
+    round.  Also times the worker-chunked cohort stream and runs a W=256
+    streamed round (peak signal memory O(chunk·D) — pinned structurally in
+    ``tests/test_fused_round.py``)."""
+    from repro.core import transport
+    from repro.core.admm import AdmmConfig
+    from repro.core.channel import ChannelConfig, rayleigh
+    from repro.core.cplx import Complex
+    from repro.core.packing import build_packspec, pack_cplx
+    from repro.core.tree_ota import (ota_tree_round_leafwise,
+                                     ota_tree_round_packed_state)
+
+    W = 4
+    theta, lam, h = _transformer_trees(W)
+    spec = build_packspec(theta, batch_dims=1)
+    lam_p = pack_cplx(spec, lam)
+    h_p = pack_cplx(spec, h)
+    acfg = AdmmConfig(rho=0.5, power_control=True, flip_on_change=False)
+    ccfg = ChannelConfig(n_workers=W, noisy=True)
+    key = jax.random.PRNGKey(0)
+
+    def packed_round(fused, worker_chunk=None):
+        return jax.jit(lambda t, lp, hp, k: ota_tree_round_packed_state(
+            t, lp, hp, k, acfg, ccfg, spec, backend="jnp", fused=fused,
+            worker_chunk=worker_chunk)[0])
+
+    def leaf_round(t, l, hh, k):
+        return ota_tree_round_leafwise(t, l, hh, k, acfg, ccfg,
+                                       backend="jnp")[0]
+
+    out = {"W": W, "d": spec.d,
+           "n_leaves": len(jax.tree_util.tree_leaves(theta))}
+    out["fused_uplink_entries_per_round"] = _count_uplink_entries(
+        lambda t, lp, hp, k: ota_tree_round_packed_state(
+            t, lp, hp, k, acfg, ccfg, spec, backend="jnp")[0],
+        theta, lam_p, h_p, key)
+
+    # the in-repo autotune sweep, at round granularity: worker_chunk is THE
+    # lever on CPU (cohort streaming = cache blocking — a (chunk, D) working
+    # set instead of (W, D)); the tuned config is what a deployment sets via
+    # REPRO_OTA_WORKER_CHUNK / FLConfig.ota_worker_chunk, so the tuned
+    # number is the honest fused headline
+    T_ref = jax.block_until_ready(packed_round(None)(theta, lam_p, h_p, key))
+    sweep = {}
+    for wc in (0, 1, 2):
+        j = packed_round(None, worker_chunk=wc or None)
+        T = jax.block_until_ready(j(theta, lam_p, h_p, key))
+        errs = [float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                      - b.astype(jnp.float32))))
+                for a, b in zip(jax.tree_util.tree_leaves(T_ref),
+                                jax.tree_util.tree_leaves(T))]
+        assert max(errs) <= 1e-4, (wc, max(errs))
+        sweep[wc] = _time(
+            lambda j=j: jax.block_until_ready(j(theta, lam_p, h_p, key)),
+            iters=30)
+    best_chunk = min(sweep, key=sweep.get)
+    out["fused_chunk_sweep_us"] = {str(k): v for k, v in sweep.items()}
+    out["fused_worker_chunk"] = best_chunk
+    out["fused_packed_us_per_round"] = sweep[best_chunk]
+    out["fused_monolithic_us_per_round"] = sweep[0]
+
+    j_comp = packed_round(False)
+    T_comp = jax.block_until_ready(j_comp(theta, lam_p, h_p, key))
+    errs = [float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                  - b.astype(jnp.float32))))
+            for a, b in zip(jax.tree_util.tree_leaves(T_ref),
+                            jax.tree_util.tree_leaves(T_comp))]
+    out["composed_max_abs_err_vs_fused"] = max(errs)  # bitwise: 0.0
+    out["composed_packed_us_per_round"] = _time(
+        lambda: jax.block_until_ready(j_comp(theta, lam_p, h_p, key)),
+        iters=30)
+    j_leaf = jax.jit(leaf_round)
+    jax.block_until_ready(j_leaf(theta, lam, h, key))
+    out["leafwise_us_per_round"] = _time(
+        lambda: jax.block_until_ready(j_leaf(theta, lam, h, key)), iters=30)
+
+    out["speedup_fused_over_composed"] = (
+        out["composed_packed_us_per_round"]
+        / out["fused_packed_us_per_round"])
+    out["speedup_fused_over_leafwise"] = (
+        out["leafwise_us_per_round"] / out["fused_packed_us_per_round"])
+
+    # W=256 cohort-streamed smoke on flat planes: the scale the monolithic
+    # pass cannot hold at O(W·D) signal memory
+    Wb, db, chunk = 256, 1 << 15, 32
+    kb = jax.random.fold_in(key, 1)
+    tb = jax.random.normal(kb, (Wb, db), jnp.float32)
+    lb = Complex(0.3 * jax.random.normal(jax.random.fold_in(kb, 1),
+                                         (Wb, db)),
+                 0.3 * jax.random.normal(jax.random.fold_in(kb, 2),
+                                         (Wb, db)))
+    hb = rayleigh(jax.random.fold_in(kb, 3), (Wb, db))
+    cb = ChannelConfig(n_workers=Wb, noisy=True)
+    js = jax.jit(lambda t, l, hh, k: transport.ota_round_fused(
+        t, l, hh, k, 0.5, cb, worker_chunk=chunk, backend="jnp")[0])
+    jax.block_until_ready(js(tb, lb, hb, kb))
+    out["w256_streamed"] = {
+        "W": Wb, "d": db, "worker_chunk": chunk,
+        "us_per_round": _time(
+            lambda: jax.block_until_ready(js(tb, lb, hb, kb)), iters=5),
+        "peak_signal_plane_elems": 4 * chunk * db,
+        "monolithic_signal_plane_elems": 4 * Wb * db,
+    }
+    # wall-clock IS the optimised metric — the exit bar of this PR
+    out["optimised_metric"] = "speedup_fused_over_composed"
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -340,7 +494,7 @@ def shard_local_microbench() -> dict:
                                        backend="jnp")
 
     with mesh:
-        receive_dispatches = _count_receives(
+        uplink_entries = _count_uplink_entries(
             lambda t, lp, hp, k: shard_round(t, lp, hp, k)[0],
             theta, lam_p, h_p, key)
         j_shard = jax.jit(shard_round)
@@ -367,7 +521,7 @@ def shard_local_microbench() -> dict:
         "n_shards": n_shards, "W": W, "n_leaves": n_leaves,
         "d": sspec.spec.d, "d_local": sspec.d_local, "d_pad": sspec.d_pad,
         # ONE body trace = one fused receive chain per shard per round
-        "receive_dispatches_per_shard_per_round": receive_dispatches,
+        "uplink_entries_per_shard_per_round": uplink_entries,
         "leafwise_receive_dispatches_per_round": n_leaves,
         "noise_free_max_abs_err_vs_leafwise": max(errs),
         "noise_free_lam_max_abs_err_vs_leafwise": max(lam_errs),
@@ -375,12 +529,13 @@ def shard_local_microbench() -> dict:
                                 == float(m_l["inv_alpha"])),
         "shard_local_us_per_round": us_shard,
         "leafwise_us_per_round": us_leaf,
-        # Dispatch count + reshard avoidance are the optimised metrics: on
-        # the 16x16 dryrun the shard-local path compiles 5.6s vs 27s
-        # leafwise with 80 vs 164 per-round collective-permutes (the CI
-        # dryrun assert).  CPU wall time here simulates 2 host devices
-        # through shard_map and is NOT the production signal.
-        "optimised_metric": "receive_dispatches_per_shard_per_round",
+        "speedup_shard_local_over_leafwise": us_leaf / us_shard,
+        # Wall-clock is the optimised metric (bench methodology contract) —
+        # measured here through shard_map over 2 simulated host devices, so
+        # it is a weak proxy; the production evidence is the 16x16 dryrun:
+        # 5.6s vs 27s compile and 80 vs 164 per-round collective-permutes
+        # (the CI dryrun assert), with the entry count pinned at 1.
+        "optimised_metric": "speedup_shard_local_over_leafwise",
     }
 
 
@@ -444,6 +599,16 @@ def phy_microbench() -> dict:
     step_j = jax.jit(lambda s, k: scn.step(k, s))
     jax.block_until_ready(step_j(st, key))
     us = _time(lambda: jax.block_until_ready(step_j(st, key)))
+
+    # wall-clock: composed masked round vs the one-pass fused round on the
+    # same (W, d) planes — the scenario engine's per-round uplink cost
+    comp_j = jax.jit(lambda t, l, hh, k: transport.ota_uplink(
+        t, l, hh, k, 0.5, ccfg, mask=mask, backend="jnp")[0])
+    fuse_j = jax.jit(lambda t, l, hh, k: transport.ota_round_fused(
+        t, l, hh, k, 0.5, ccfg, mask=mask, backend="jnp")[0])
+    comp_j(theta, lam, h, kn), fuse_j(theta, lam, h, kn)
+    comp_us = _time(lambda: comp_j(theta, lam, h, kn).block_until_ready())
+    fuse_us = _time(lambda: fuse_j(theta, lam, h, kn).block_until_ready())
     return {
         "shape": {"W": W, "d": d, "rho": rho},
         # the per-round channel-step cost: one fused kernel launch
@@ -453,6 +618,11 @@ def phy_microbench() -> dict:
         "masked_vs_active_subset_max_err": subset_err,
         "scenario_step_us_per_round_jnp": us,
         "participation": float(jnp.mean(mask)),
+        "composed_masked_round_us": comp_us,
+        "fused_masked_round_us": fuse_us,
+        "speedup_fused_over_composed_masked_round": comp_us / fuse_us,
+        # wall-clock contract field (bench methodology)
+        "optimised_metric": "speedup_fused_over_composed_masked_round",
     }
 
 
@@ -515,11 +685,14 @@ def attn_bwd_microbench() -> dict:
 
     grad_j = jax.jit(jax.grad(loss, argnums=(0, 1, 2)))
     got = grad_j(q, k, v)
-    want = jax.grad(lambda *a: jnp.sum(jnp.sin(
-        ref.attention(*a, causal=True))), argnums=(0, 1, 2))(q, k, v)
+    naive_grad = jax.jit(jax.grad(lambda *a: jnp.sum(jnp.sin(
+        ref.attention(*a, causal=True))), argnums=(0, 1, 2)))
+    want = naive_grad(q, k, v)
     errs = {f"max_abs_err_d{n}": float(jnp.max(jnp.abs(g - w)))
             for n, g, w in zip("qkv", got, want)}
     us = _time(lambda: jax.block_until_ready(grad_j(q, k, v)), iters=3)
+    naive_us = _time(lambda: jax.block_until_ready(naive_grad(q, k, v)),
+                     iters=3)
     return {
         "shape": {"B": B, "H": H, "S": S, "hd": hd,
                   "block_q": bq, "block_k": bk},
@@ -533,6 +706,13 @@ def attn_bwd_microbench() -> dict:
         # what the naive jnp backward would materialise instead
         "naive_bwd_score_tensor_bytes": B * H * S * S * 4,
         "interpret_grad_us_per_call": us,
+        "naive_jnp_grad_us_per_call": naive_us,
+        # Wall-clock contract field (bench methodology).  On this CPU the
+        # kernel executes INTERPRETED, so the ratio is << 1 here by
+        # construction; the production (TPU) signal is the pinned dispatch
+        # counts + the (S,S)-tensor-free residual above.
+        "speedup_flash_grad_over_naive": naive_us / us,
+        "optimised_metric": "speedup_flash_grad_over_naive",
         **errs,
     }
 
@@ -557,6 +737,12 @@ def main() -> None:
                          "parity (CI smoke)")
     ap.add_argument("--out-phy", default="BENCH_phy.json",
                     help="where --phy writes its JSON")
+    ap.add_argument("--fused-round", action="store_true",
+                    help="fused one-pass OTA round section only: wall-clock "
+                         "fused vs composed-packed vs leafwise + W=256 "
+                         "cohort stream (CI smoke)")
+    ap.add_argument("--out-fused-round", default="BENCH_fused_round.json",
+                    help="where --fused-round writes its JSON")
     ap.add_argument("--shard-local", action="store_true",
                     help="shard-local packed uplink section only: 2-shard "
                          "model-parallel mesh, 1 receive/shard/round + "
@@ -574,7 +760,7 @@ def main() -> None:
                                    ).strip()
     derived = {}
     if not (args.packed_only or args.attn_bwd or args.phy
-            or args.shard_local):
+            or args.shard_local or args.fused_round):
         derived = {"kernels": microbench(),
                    "transport": transport_microbench()}
     out = dict(derived)
@@ -586,6 +772,8 @@ def main() -> None:
         out["attn_bwd"] = attn_bwd_microbench()
     if args.phy:
         out["phy"] = phy_microbench()
+    if args.fused_round:
+        out["fused_round"] = fused_round_microbench()
     if args.shard_local:
         out["shard_local"] = shard_local_microbench()
     text = json.dumps(out, indent=2, default=str)
@@ -603,6 +791,10 @@ def main() -> None:
     if args.phy:
         with open(args.out_phy, "w") as f:
             f.write(json.dumps(out["phy"], indent=2, default=str) + "\n")
+    if args.fused_round:
+        with open(args.out_fused_round, "w") as f:
+            f.write(json.dumps(out["fused_round"], indent=2, default=str)
+                    + "\n")
     if args.shard_local:
         with open(args.out_shard_local, "w") as f:
             f.write(json.dumps(out["shard_local"], indent=2, default=str)

@@ -33,6 +33,7 @@ full complex superposition).
 """
 from __future__ import annotations
 
+import math
 import os
 from typing import Callable, NamedTuple, Optional, Tuple
 
@@ -365,3 +366,310 @@ def ota_uplink(theta: Array, lam: Complex, h: Complex, key: Array,
     Theta = receive(signals, h, key, ccfg, inv_alpha,
                     reduce_fn=reduce_fn, mask=mask, backend=backend)
     return Theta, inv_alpha
+
+
+# ---------------------------------------------------------------------------
+# Fused one-pass round (ISSUE 6 / ROADMAP item 1): each worker plane read
+# from HBM exactly once per round
+# ---------------------------------------------------------------------------
+
+def matched_filter_noise_re(key: Array, shape, ccfg: ChannelConfig) -> Array:
+    """REAL plane of :func:`~repro.core.channel.matched_filter_noise`,
+    without generating the imaginary draw the receiver never reads.
+
+    Bitwise identical to ``matched_filter_noise(key, shape, ccfg).re``:
+    ``awgn`` splits the key and feeds the re plane from the FIRST subkey
+    only, so skipping the im draw changes no sampled value — it just halves
+    the threefry work of the round's only O(D) PRNG draw.
+    """
+    if not ccfg.noisy:
+        return jnp.zeros(shape, jnp.float32)
+    kr, _ = jax.random.split(key)
+    s = jnp.sqrt(jnp.asarray(ccfg.noise_var_matched / 2.0, jnp.float32))
+    return jax.random.normal(kr, shape, jnp.float32) * s
+
+
+def _chan_step_jnp(h: Complex, chan_step) -> Complex:
+    """AR(1) fading update from pre-drawn innovations — expression-for-
+    expression :func:`repro.phy.fading.gauss_markov_step` (given its ``w``),
+    so fusing the step into the round changes no bit."""
+    w, rho_fad, redraw = chan_step
+    if float(rho_fad) == 0.0:
+        return cplx.cwhere(redraw, w, h)
+    s = math.sqrt(max(1.0 - float(rho_fad) ** 2, 0.0))  # innovation_scale
+    nxt = Complex(rho_fad * h.re + s * w.re, rho_fad * h.im + s * w.im)
+    return cplx.cwhere(redraw, nxt, h)
+
+
+def ota_round_stats(theta: Array, lam: Complex, h: Complex, rho: float, *,
+                    mask: Optional[Array] = None,
+                    h_tx: Optional[Complex] = None,
+                    chan_step=None,
+                    backend: Optional[str] = None,
+                    block_cols: Optional[int] = None,
+                    ) -> Tuple[Array, Array, Array, Complex]:
+    """One pass over the ``(W, ...)`` worker planes: modulate → per-worker
+    energy → (mask) → superpose → pilot aggregate.
+
+    Returns ``(y_re, sumh2, energy, h_air)`` where ``y_re``/``sumh2`` have
+    the worker dim reduced away, ``energy`` is the per-worker ``(W,)``
+    energies the min-α consensus needs, and ``h_air`` is the channel the air
+    applied — ``h`` itself, or the AR(1)-stepped channel when
+    ``chan_step = (w, rho_fad, redraw)`` fuses the fading update
+    (:func:`repro.phy.fading.gauss_markov_step` with pre-drawn innovations
+    ``w``) into the same pass.
+
+    This is everything in the round that *touches the worker planes*; the
+    remaining receiver arithmetic (min-α, noise, demodulate) is O(d) and
+    worker-free.  The jnp path is expression-for-expression the composed
+    ``modulate`` → ``power_scale`` → ``receive`` chain (bitwise contract,
+    pinned in ``tests/test_fused_round.py``); the pallas path
+    (``kernels/ota_round.py``) runs it as ONE kernel launch, with per-block
+    energy partials whose reduction order makes energies tolerance-equal
+    (not bitwise) to :func:`worker_energy`.
+    """
+    backend = resolve_backend(backend)
+    if backend == "pallas":
+        from repro.kernels import ota_round as _k
+        W = theta.shape[0]
+        shape = theta.shape
+        pk = dict(mask=None if mask is None else mask.reshape(W),
+                  htx=None if h_tx is None else
+                  (h_tx.re.reshape(W, -1), h_tx.im.reshape(W, -1)),
+                  chan=None if chan_step is None else
+                  (chan_step[0].re.reshape(W, -1),
+                   chan_step[0].im.reshape(W, -1),
+                   float(chan_step[1]),
+                   math.sqrt(max(1.0 - float(chan_step[1]) ** 2, 0.0)),
+                   chan_step[2]),
+                  block_cols=block_cols, interpret=_interpret())
+        out = _k.ota_round_stats(
+            _f32(theta).reshape(W, -1), lam.re.reshape(W, -1),
+            lam.im.reshape(W, -1), h.re.reshape(W, -1),
+            h.im.reshape(W, -1), float(rho), **pk)
+        y, p2, energy = out[:3]
+        h_air = h if chan_step is None else Complex(
+            out[3].reshape(shape), out[4].reshape(shape))
+        return y.reshape(shape[1:]), p2.reshape(shape[1:]), energy, h_air
+    h_air = h if chan_step is None else _chan_step_jnp(h, chan_step)
+    signals = modulate(theta, lam, h_air if h_tx is None else h_tx, rho,
+                       backend="jnp")
+    energy = worker_energy(signals)
+    hm = h_air
+    if mask is not None:
+        signals = _mask_planes(signals, mask)
+        hm = _mask_planes(h_air, mask)
+    rx_re = hm.re * signals.re - hm.im * signals.im
+    sumh2 = cplx.abs2(hm)
+    return (jnp.sum(rx_re, axis=0), jnp.sum(sumh2, axis=0), energy, h_air)
+
+
+def _ota_round_streamed(theta: Array, lam: Complex, h: Complex, key: Array,
+                        rho: float, ccfg: ChannelConfig, chunk: int, *,
+                        power_control, mask, h_tx, chan_step, min_reduce_fn,
+                        block_cols, backend):
+    """Worker-chunked (cohort-streamed) round: ``lax.scan`` over
+    ``ceil(W/chunk)`` cohorts so peak signal-plane memory is O(chunk·D)
+    instead of O(W·D) — W in the hundreds-to-thousands with scenario-driven
+    participation masks.  The worker axis is zero-padded to a chunk
+    multiple: an all-zero worker row contributes exactly zero to the
+    superposition/pilot sums and zero energy (α = +inf never binds), so no
+    padding mask is needed.  Chunked accumulation changes the summation
+    grouping, so the result is tolerance-equal (not bitwise) to the
+    monolithic pass — pinned in ``tests/test_fused_round.py``.
+    """
+    W = theta.shape[0]
+    out_shape = theta.shape[1:]
+    d = theta.size // W
+    n_chunks = -(-W // chunk)
+    W_pad = n_chunks * chunk
+
+    def padw(x: Array) -> Array:
+        flat = _f32(x).reshape(W, -1)
+        return jnp.pad(flat, ((0, W_pad - W), (0, 0))).reshape(
+            n_chunks, chunk, d)
+
+    xs = {"theta": padw(theta),
+          "lre": padw(lam.re), "lim": padw(lam.im),
+          "hre": padw(h.re), "him": padw(h.im)}
+    if mask is not None:
+        xs["mask"] = jnp.pad(mask, (0, W_pad - W)).reshape(n_chunks, chunk)
+    if h_tx is not None:
+        xs["txre"], xs["txim"] = padw(h_tx.re), padw(h_tx.im)
+    if chan_step is not None:
+        w, rho_fad, redraw = chan_step
+        xs["wre"], xs["wim"] = padw(w.re), padw(w.im)
+
+    def body(carry, x):
+        y, p2 = carry
+        cs = None if chan_step is None else (
+            Complex(x["wre"], x["wim"]), rho_fad, redraw)
+        yi, p2i, ei, h_air_i = ota_round_stats(
+            x["theta"], Complex(x["lre"], x["lim"]),
+            Complex(x["hre"], x["him"]), rho,
+            mask=x.get("mask"),
+            h_tx=None if h_tx is None else Complex(x["txre"], x["txim"]),
+            chan_step=cs, backend=backend, block_cols=block_cols)
+        ys = (ei,) if chan_step is None else (ei, h_air_i)
+        return (y + yi, p2 + p2i), ys
+
+    zero = jnp.zeros((d,), jnp.float32)
+    (y, p2), ys = jax.lax.scan(body, (zero, zero), xs)
+    energy = ys[0].reshape(W_pad)[:W]
+    if chan_step is None:
+        h_air = h
+    else:
+        hs = ys[1]
+        h_air = Complex(hs.re.reshape(W_pad, d)[:W].reshape(theta.shape),
+                        hs.im.reshape(W_pad, d)[:W].reshape(theta.shape))
+    if power_control:
+        budget = ccfg.transmit_power * d
+        inv_alpha = inv_alpha_from_energy(energy, budget,
+                                          min_reduce_fn=min_reduce_fn,
+                                          mask=mask)
+    else:
+        inv_alpha = jnp.asarray(1.0, jnp.float32)
+    noise_re = matched_filter_noise_re(key, (d,), ccfg)
+    Theta = demodulate(y, p2, noise_re, inv_alpha, backend=backend)
+    return Theta.reshape(out_shape), inv_alpha, h_air
+
+
+def ota_round_fused(theta: Array, lam: Complex, h: Complex, key: Array,
+                    rho: float, ccfg: ChannelConfig, *,
+                    power_control: bool = True,
+                    mask: Optional[Array] = None,
+                    h_tx: Optional[Complex] = None,
+                    chan_step=None,
+                    min_reduce_fn: Optional[ReduceFn] = None,
+                    worker_chunk: Optional[int] = None,
+                    block_cols: Optional[int] = None,
+                    backend: Optional[str] = None,
+                    ) -> Tuple[Array, Array, Complex]:
+    """The whole uplink round in one pass over the worker planes.
+
+    Fused twin of :func:`ota_uplink`: modulate → power-scale → superpose
+    (+ participation ``mask``, imperfect-CSI ``h_tx``) → AWGN → matched
+    filter → demodulate, reading each ``(W, d)`` worker plane from HBM
+    exactly once (:func:`ota_round_stats`); with same-round power control
+    the only second pass is the O(d) worker-free demodulate epilogue, and
+    with ``power_control=False`` the pallas backend collapses the round
+    into a single kernel launch (``kernels/ota_round.ota_round_theta``).
+    Results are bitwise identical to the composed path given equal inputs
+    (the noise draw is :func:`matched_filter_noise_re` — the same bits
+    ``receive`` samples).
+
+    ``chan_step = (w, rho_fad, redraw)`` optionally fuses the AR(1) fading
+    step into the same pass; ``worker_chunk`` (default: the
+    ``REPRO_OTA_WORKER_CHUNK`` env knob) streams the workers through in
+    cohorts of that size (O(chunk·D) peak signal memory, tolerance-equal).
+
+    Returns ``(Theta, inv_alpha, h_air)`` — ``h_air`` is ``h`` or the
+    stepped channel when ``chan_step`` is given.
+    """
+    backend = resolve_backend(backend)
+    W = theta.shape[0]
+    d = theta.size // W
+    if worker_chunk is None:
+        from repro import optflags
+        worker_chunk = optflags.ota_worker_chunk()
+    chunk = int(worker_chunk)
+    if 0 < chunk < W:
+        return _ota_round_streamed(
+            theta, lam, h, key, rho, ccfg, chunk,
+            power_control=power_control, mask=mask, h_tx=h_tx,
+            chan_step=chan_step, min_reduce_fn=min_reduce_fn,
+            block_cols=block_cols, backend=backend)
+    out_shape = theta.shape[1:]
+    if backend == "pallas" and not power_control:
+        # α known a priori -> the epilogue fuses into the SAME launch
+        from repro.kernels import ota_round as _k
+        noise_re = matched_filter_noise_re(key, (d,), ccfg)
+        out = _k.ota_round_theta(
+            _f32(theta).reshape(W, -1), lam.re.reshape(W, -1),
+            lam.im.reshape(W, -1), h.re.reshape(W, -1),
+            h.im.reshape(W, -1), noise_re, 1.0, float(rho),
+            mask=None if mask is None else mask.reshape(W),
+            htx=None if h_tx is None else
+            (h_tx.re.reshape(W, -1), h_tx.im.reshape(W, -1)),
+            chan=None if chan_step is None else
+            (chan_step[0].re.reshape(W, -1), chan_step[0].im.reshape(W, -1),
+             float(chan_step[1]),
+             math.sqrt(max(1.0 - float(chan_step[1]) ** 2, 0.0)),
+             chan_step[2]),
+            block_cols=block_cols, interpret=_interpret())
+        h_air = h if chan_step is None else Complex(
+            out[1].reshape(theta.shape), out[2].reshape(theta.shape))
+        return (out[0].reshape(out_shape), jnp.asarray(1.0, jnp.float32),
+                h_air)
+    y, p2, energy, h_air = ota_round_stats(
+        theta, lam, h, rho, mask=mask, h_tx=h_tx, chan_step=chan_step,
+        backend=backend, block_cols=block_cols)
+    if power_control:
+        budget = ccfg.transmit_power * d
+        inv_alpha = inv_alpha_from_energy(energy, budget,
+                                          min_reduce_fn=min_reduce_fn,
+                                          mask=mask)
+    else:
+        inv_alpha = jnp.asarray(1.0, jnp.float32)
+    noise_re = matched_filter_noise_re(key, out_shape, ccfg)
+    Theta = demodulate(y, p2, noise_re, inv_alpha, backend=backend)
+    return Theta, inv_alpha, h_air
+
+
+def autotune_ota_round(W: int, d: int, ccfg: Optional[ChannelConfig] = None,
+                       *, rho: float = 1.0,
+                       block_cols_grid=(256, 512, 1024, 2048),
+                       worker_chunks=(0, 8, 32),
+                       iters: int = 10, backend: Optional[str] = None,
+                       seed: int = 0) -> dict:
+    """Small host-side sweep over the fused round's tiling knobs.
+
+    Times :func:`ota_round_fused` (jit, median of ``iters`` after warmup)
+    over a grid of ``(block_cols, worker_chunk)`` on random ``(W, d)``
+    planes and returns ``{"best": {...}, "table": [...]}``.  ``block_cols``
+    only reaches the pallas kernels, so on the jnp backend the sweep
+    degenerates to worker_chunk alone (one block_cols row is kept).  The
+    winning config maps 1:1 onto the env knobs
+    (``REPRO_OTA_BLOCK_COLS`` / ``REPRO_OTA_WORKER_CHUNK``) and the
+    ``FLConfig``/CLI fields.
+    """
+    import time
+
+    if ccfg is None:
+        ccfg = ChannelConfig(n_workers=W)
+    key = jax.random.PRNGKey(seed)
+    kt, kl, kh, kr = jax.random.split(key, 4)
+    from repro.core.channel import rayleigh
+    theta = jax.random.normal(kt, (W, d), jnp.float32)
+    lam = rayleigh(kl, (W, d))
+    h = rayleigh(kh, (W, d))
+
+    if resolve_backend(backend) != "pallas":
+        block_cols_grid = block_cols_grid[:1]
+    table = []
+    for bc in block_cols_grid:
+        for wc in worker_chunks:
+            if wc and wc >= W:
+                continue
+            fn = jax.jit(_round_timing_fn(rho, ccfg, wc, bc, backend))
+            jax.block_until_ready(fn(theta, lam, h, kr))
+            ts = []
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(theta, lam, h, kr))
+                ts.append(time.perf_counter() - t0)
+            ts.sort()
+            table.append({"block_cols": int(bc), "worker_chunk": int(wc),
+                          "us": 1e6 * ts[len(ts) // 2]})
+    best = min(table, key=lambda r: r["us"])
+    return {"best": best, "table": table}
+
+
+def _round_timing_fn(rho, ccfg, worker_chunk, block_cols, backend):
+    """Closure helper for :func:`autotune_ota_round` (keeps the sweep's
+    jitted round a hashable top-level callable per config)."""
+    def fn(theta, lam, h, key):
+        return ota_round_fused(theta, lam, h, key, rho, ccfg,
+                               worker_chunk=worker_chunk,
+                               block_cols=block_cols, backend=backend)[0]
+    return fn

@@ -164,6 +164,9 @@ def ota_tree_round_packed_state(theta: PyTree, lam_p: Complex, h_p: Complex,
                                 mask: Optional[Array] = None,
                                 h_tx_p: Optional[Complex] = None,
                                 Theta_prev: Optional[PyTree] = None,
+                                fused: Optional[bool] = None,
+                                worker_chunk: Optional[int] = None,
+                                block_cols: Optional[int] = None,
                                 ) -> Tuple[PyTree, Complex, dict]:
     """One OTA round where the duals/fading are ALREADY packed ``(W, D)``.
 
@@ -177,13 +180,30 @@ def ota_tree_round_packed_state(theta: PyTree, lam_p: Complex, h_p: Complex,
     their duals; ``h_tx_p`` is the packed worker-side CSI (imperfect CSI);
     ``Theta_prev`` (tree) guards the all-masked degenerate round — with
     nobody transmitting the global model is simply kept.
+
+    ``fused`` (default True) runs the uplink as
+    :func:`~repro.core.transport.ota_round_fused` — one pass over the
+    worker planes, bitwise identical to the composed
+    :func:`~repro.core.transport.ota_uplink` (``fused=False``, kept as the
+    benchmark baseline and for callers that need a custom ``reduce_fn``,
+    which forces the composed path).  ``worker_chunk``/``block_cols``
+    thread the streaming/tiling knobs through (None = the
+    ``REPRO_OTA_WORKER_CHUNK`` / ``REPRO_OTA_BLOCK_COLS`` env knobs).
     """
-    theta_p = pack(spec, theta)                    # the one concat per round
-    Theta_p, inv_alpha = transport.ota_uplink(
-        theta_p, lam_p, h_p, key, acfg.rho, ccfg,
-        power_control=acfg.power_control, reduce_fn=reduce_fn,
-        min_reduce_fn=min_reduce_fn, mask=mask, h_tx=h_tx_p,
-        backend=backend)
+    theta_p = pack(spec, theta)                    # the one layout op per round
+    use_fused = (fused is not False) and reduce_fn is None
+    if use_fused:
+        Theta_p, inv_alpha, _ = transport.ota_round_fused(
+            theta_p, lam_p, h_p, key, acfg.rho, ccfg,
+            power_control=acfg.power_control, mask=mask, h_tx=h_tx_p,
+            min_reduce_fn=min_reduce_fn, worker_chunk=worker_chunk,
+            block_cols=block_cols, backend=backend)
+    else:
+        Theta_p, inv_alpha = transport.ota_uplink(
+            theta_p, lam_p, h_p, key, acfg.rho, ccfg,
+            power_control=acfg.power_control, reduce_fn=reduce_fn,
+            min_reduce_fn=min_reduce_fn, mask=mask, h_tx=h_tx_p,
+            backend=backend)
     h_wkr = h_p if h_tx_p is None else h_tx_p
     lam_new_p = transport.dual_update(lam_p, h_wkr, theta_p, Theta_p,
                                       acfg.rho, backend=backend)
@@ -209,6 +229,8 @@ def ota_tree_round(theta: PyTree, lam: PyTree, h: PyTree, key: Array,
                    mask: Optional[Array] = None,
                    h_tx: Optional[PyTree] = None,
                    Theta_prev: Optional[PyTree] = None,
+                   fused: Optional[bool] = None,
+                   worker_chunk: Optional[int] = None,
                    ) -> Tuple[PyTree, PyTree, dict]:
     """Uplink + global + dual for one round (post-local-steps), packed.
 
@@ -247,7 +269,7 @@ def ota_tree_round(theta: PyTree, lam: PyTree, h: PyTree, key: Array,
         spec, backend=backend, reduce_fn=reduce_fn,
         min_reduce_fn=min_reduce_fn, mask=mask,
         h_tx_p=None if h_tx is None else pack_cplx(spec, h_tx),
-        Theta_prev=Theta_prev)
+        Theta_prev=Theta_prev, fused=fused, worker_chunk=worker_chunk)
     return Theta_new, unpack_cplx(spec, lam_new_p), metrics
 
 
@@ -409,6 +431,8 @@ def ota_tree_round_shard_local(theta: PyTree, lam_p: Complex, h_p: Complex,
                                h_tx_p: Optional[Complex] = None,
                                Theta_prev: Optional[PyTree] = None,
                                model_axis: str = "model",
+                               fused: Optional[bool] = None,
+                               block_cols: Optional[int] = None,
                                ) -> Tuple[PyTree, Complex, dict]:
     """One OTA round with SHARD-LOCAL packing under a model-parallel mesh.
 
@@ -436,6 +460,13 @@ def ota_tree_round_shard_local(theta: PyTree, lam_p: Complex, h_p: Complex,
     identical to :func:`ota_tree_round_leafwise`, pinned in
     ``tests/test_shard_local.py``).
 
+    ``fused`` (default True) runs step 2–4's worker-plane work as ONE
+    :func:`~repro.core.transport.ota_round_stats` pass per shard (modulate +
+    energy + mask + superposition + pilot fused; the energy psum / min-α /
+    demodulate epilogue never touches the worker planes) — bitwise identical
+    to the composed ``fused=False`` body, which is kept as the benchmark
+    baseline.
+
     Returns ``(Theta_tree_f32, lam_new_packed, metrics)``.
     """
     from jax.experimental.shard_map import shard_map
@@ -447,6 +478,7 @@ def ota_tree_round_shard_local(theta: PyTree, lam_p: Complex, h_p: Complex,
     #: worker axis entirely local -> run the fused (masked) receive kernel
     #: per shard instead of composing around a psum
     local_w = all(mesh.shape[a] == 1 for a in daxes)
+    use_fused = fused is not False
     has_mask = mask is not None
     has_htx = h_tx_p is not None
 
@@ -455,27 +487,53 @@ def ota_tree_round_shard_local(theta: PyTree, lam_p: Complex, h_p: Complex,
         h_tx = h_tx if has_htx else None
         j = jax.lax.axis_index(model_axis)
         theta_p = pack_shard_local(sspec, theta, j)       # (W_l, d_local)
-        h_wkr = h if h_tx is None else h_tx
-        signals = transport.modulate(theta_p, lam, h_wkr, rho,
-                                     backend=backend)
-        if acfg.power_control:
-            # per-worker TOTAL energy: every element owned by one shard
-            energy = jax.lax.psum(transport.worker_energy(signals),
-                                  model_axis)
-            budget = ccfg.transmit_power * sspec.spec.d   # real elements
-            inv_alpha = transport.inv_alpha_from_energy(
-                energy, budget,
-                min_reduce_fn=None if local_w
-                else (lambda a: jax.lax.pmin(a, daxes)),
-                mask=mask)
+        budget = ccfg.transmit_power * sspec.spec.d       # real elements
+        if use_fused:
+            # one pass over this shard's worker planes (modulate + energy +
+            # mask + superposition + pilot fused); only the O(d_local)
+            # epilogue and the scalar/energy consensus collectives remain
+            y_l, p2_l, energy_l, _ = transport.ota_round_stats(
+                theta_p, lam, h, rho, mask=mask, h_tx=h_tx,
+                backend=backend, block_cols=block_cols)
+            if acfg.power_control:
+                energy = jax.lax.psum(energy_l, model_axis)
+                inv_alpha = transport.inv_alpha_from_energy(
+                    energy, budget,
+                    min_reduce_fn=None if local_w
+                    else (lambda a: jax.lax.pmin(a, daxes)),
+                    mask=mask)
+            else:
+                inv_alpha = jnp.asarray(1.0, jnp.float32)
+            if not local_w:
+                y_l = jax.lax.psum(y_l, daxes)
+                p2_l = jax.lax.psum(p2_l, daxes)
+            noise_key = jax.random.fold_in(key, j)
+            noise_re = transport.matched_filter_noise_re(
+                noise_key, y_l.shape, ccfg)
+            Theta_p = transport.demodulate(y_l, p2_l, noise_re, inv_alpha,
+                                           backend=backend)
+            h_wkr = h if h_tx is None else h_tx
         else:
-            inv_alpha = jnp.asarray(1.0, jnp.float32)
-        noise_key = jax.random.fold_in(key, j)
-        Theta_p = transport.receive(
-            signals, h, noise_key, ccfg, inv_alpha,
-            reduce_fn=None if local_w
-            else (lambda x: jax.lax.psum(jnp.sum(x, axis=0), daxes)),
-            mask=mask, backend=backend)
+            h_wkr = h if h_tx is None else h_tx
+            signals = transport.modulate(theta_p, lam, h_wkr, rho,
+                                         backend=backend)
+            if acfg.power_control:
+                # per-worker TOTAL energy: every element owned by one shard
+                energy = jax.lax.psum(transport.worker_energy(signals),
+                                      model_axis)
+                inv_alpha = transport.inv_alpha_from_energy(
+                    energy, budget,
+                    min_reduce_fn=None if local_w
+                    else (lambda a: jax.lax.pmin(a, daxes)),
+                    mask=mask)
+            else:
+                inv_alpha = jnp.asarray(1.0, jnp.float32)
+            noise_key = jax.random.fold_in(key, j)
+            Theta_p = transport.receive(
+                signals, h, noise_key, ccfg, inv_alpha,
+                reduce_fn=None if local_w
+                else (lambda x: jax.lax.psum(jnp.sum(x, axis=0), daxes)),
+                mask=mask, backend=backend)
         lam_new = transport.dual_update(lam, h_wkr, theta_p, Theta_p, rho,
                                         backend=backend)
         if mask is not None:

@@ -14,7 +14,7 @@ TPU VPU).
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +25,22 @@ Array = jax.Array
 
 LANE = 1024               # 8 sublanes x 128 lanes
 DEFAULT_BLOCK_ROWS = 256  # 256*1024*4B = 1 MiB per f32 operand tile
+
+
+def _block_rows(block_rows: Optional[int]) -> int:
+    """Resolve the row-tile knob: explicit arg wins, else the live
+    ``REPRO_OTA_BLOCK_ROWS`` env read (``optflags.ota_block_rows``)."""
+    if block_rows is not None:
+        return block_rows
+    from repro import optflags
+    return optflags.ota_block_rows()
+
+
+def _block_cols(block_cols: Optional[int]) -> int:
+    if block_cols is not None:
+        return block_cols
+    from repro import optflags
+    return optflags.ota_block_cols()
 
 
 def _mod_kernel(theta_ref, lre_ref, lim_ref, hre_ref, him_ref,
@@ -81,9 +97,11 @@ def _rows_for(n: int, block_rows: int) -> int:
 
 
 def ota_modulate(theta: Array, lam_re: Array, lam_im: Array, h_re: Array,
-                 h_im: Array, rho: float, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                 h_im: Array, rho: float, *,
+                 block_rows: Optional[int] = None,
                  interpret: bool = False) -> Tuple[Array, Array]:
     """Fused s = conj(h)·θ + conj(λ)/ρ over a flat parameter vector."""
+    block_rows = _block_rows(block_rows)
     n = theta.size
     rows = _rows_for(n, block_rows)
     args = [_pad_2d(a.astype(jnp.float32), rows)
@@ -101,9 +119,10 @@ def ota_modulate(theta: Array, lam_re: Array, lam_im: Array, h_re: Array,
 
 
 def ota_demodulate(y_re: Array, noise_re: Array, sumh2: Array,
-                   inv_alpha: float, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                   inv_alpha: float, *, block_rows: Optional[int] = None,
                    interpret: bool = False) -> Array:
     """Fused Θ = (y_re + z_re/α) / max(Σ|h|², eps)."""
+    block_rows = _block_rows(block_rows)
     n = y_re.size
     rows = _rows_for(n, block_rows)
     args = [_pad_2d(a.astype(jnp.float32), rows)
@@ -127,10 +146,11 @@ def _scalar_spec():
 
 def ota_demodulate_dyn(y_re: Array, noise_re: Array, sumh2: Array,
                        inv_alpha: Array | float,
-                       *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                       *, block_rows: Optional[int] = None,
                        interpret: bool = False) -> Array:
     """Fused Θ = (y_re + z_re·inv_alpha) / max(Σ|h|², eps) with a *traced*
     inv_alpha scalar (the power-control α is data-dependent per round)."""
+    block_rows = _block_rows(block_rows)
     n = y_re.size
     rows = _rows_for(n, block_rows)
     args = [_pad_2d(a.astype(jnp.float32), rows)
@@ -150,7 +170,7 @@ def ota_demodulate_dyn(y_re: Array, noise_re: Array, sumh2: Array,
 
 def ota_accumulate(y_re: Array, sumh2: Array, s_re: Array, s_im: Array,
                    h_re: Array, h_im: Array,
-                   *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                   *, block_rows: Optional[int] = None,
                    interpret: bool = False) -> Tuple[Array, Array]:
     """Fused worker-at-a-time receiver update over a flat vector:
 
@@ -161,6 +181,7 @@ def ota_accumulate(y_re: Array, sumh2: Array, s_re: Array, s_im: Array,
     superposition of the time-multiplexed (sketched) uplink, whose final
     demodulate then runs once per round (``ota_demodulate_dyn``).
     """
+    block_rows = _block_rows(block_rows)
     n = y_re.size
     rows = _rows_for(n, block_rows)
     args = [_pad_2d(a.astype(jnp.float32), rows)
@@ -179,7 +200,8 @@ def ota_accumulate(y_re: Array, sumh2: Array, s_re: Array, s_im: Array,
 
 def ota_receive(s_re: Array, s_im: Array, h_re: Array, h_im: Array,
                 noise_re: Array, inv_alpha: Array | float,
-                *, block_cols: int = LANE, interpret: bool = False) -> Array:
+                *, block_cols: Optional[int] = None,
+                interpret: bool = False) -> Array:
     """Fully fused receive chain: Θ = (Re{Σ_n h_n⊙s_n} + z·α⁻¹)/max(Σ|h|²,eps).
 
     One pass over the (W, d) signal/fading planes — the superposition (worker
@@ -194,6 +216,7 @@ def ota_receive(s_re: Array, s_im: Array, h_re: Array, h_im: Array,
     shard-local round passes ``reduce_fn=None`` whenever the worker axis is
     local, so the whole receive stays one kernel per shard).
     """
+    block_cols = _block_cols(block_cols)
     W, n = s_re.shape
     cols = -(-n // block_cols) * block_cols
 

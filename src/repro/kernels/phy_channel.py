@@ -21,7 +21,7 @@ Layout matches the rest of the kernel set: flat f32 planes reshaped to
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +30,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 # one tiling scheme for the whole OTA/phy kernel set — a layout change in
 # kernels/ota.py (lane width, padding rule) must reach these kernels too
-from repro.kernels.ota import DEFAULT_BLOCK_ROWS, LANE, _pad_2d, _rows_for
+from repro.kernels.ota import (DEFAULT_BLOCK_ROWS, LANE, _block_cols,
+                               _block_rows, _pad_2d, _rows_for)
 
 Array = jax.Array
 
@@ -52,7 +53,7 @@ def _fading_step_kernel(p_ref, hre_ref, him_ref, wre_ref, wim_ref,
 
 def fading_step(h_re: Array, h_im: Array, w_re: Array, w_im: Array,
                 rho: float, scale: float, redraw: Array | bool,
-                *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                *, block_rows: Optional[int] = None,
                 interpret: bool = False) -> Tuple[Array, Array]:
     """Fused AR(1) fading update over flat planes.
 
@@ -61,6 +62,7 @@ def fading_step(h_re: Array, h_im: Array, w_re: Array, w_im: Array,
     are trace-time floats; ``redraw`` is a traced bool scalar (the coherence
     counter lives in jit-compiled round loops).
     """
+    block_rows = _block_rows(block_rows)
     n = h_re.size
     rows = _rows_for(n, block_rows)
     args = [_pad_2d(a.astype(jnp.float32), rows)
@@ -98,7 +100,7 @@ def _receive_masked_kernel(ia_ref, m_ref, sre_ref, sim_ref, hre_ref, him_ref,
 def ota_receive_masked(s_re: Array, s_im: Array, h_re: Array, h_im: Array,
                        mask: Array, noise_re: Array,
                        inv_alpha: Array | float,
-                       *, block_cols: int = LANE,
+                       *, block_cols: Optional[int] = None,
                        interpret: bool = False) -> Array:
     """Participation-aware fused receive chain.
 
@@ -115,6 +117,7 @@ def ota_receive_masked(s_re: Array, s_im: Array, h_re: Array, h_im: Array,
     shard's launch unchanged — scenario participation is worker-level, so
     it is independent of how the packed axis is split.
     """
+    block_cols = _block_cols(block_cols)
     W, n = s_re.shape
     cols = -(-n // block_cols) * block_cols
 

@@ -54,6 +54,21 @@ def main() -> None:
                          "per round (default: the preset's 1; raise it so "
                          "mobility/Doppler gain dynamics show up in short "
                          "runs)")
+    ap.add_argument("--ota-fused", default=None,
+                    choices=["on", "off"],
+                    help="one-pass fused OTA receive (default on; off keeps "
+                         "the composed per-primitive chain)")
+    ap.add_argument("--ota-worker-chunk", type=int, default=None,
+                    help="stream the receive over worker cohorts of this "
+                         "size (peak signal memory O(chunk*D) instead of "
+                         "O(W*D); 0/None = monolithic, or set "
+                         "REPRO_OTA_WORKER_CHUNK)")
+    ap.add_argument("--ota-block-rows", type=int, default=None,
+                    help="pallas OTA kernel row tile (sets "
+                         "REPRO_OTA_BLOCK_ROWS)")
+    ap.add_argument("--ota-block-cols", type=int, default=None,
+                    help="pallas fused-round kernel column tile (default "
+                         "1024, or REPRO_OTA_BLOCK_COLS)")
     ap.add_argument("--rounds", type=int, default=50)
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--batch", type=int, default=2, help="per-worker batch")
@@ -67,6 +82,12 @@ def main() -> None:
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
+
+    if args.ota_block_rows is not None:
+        # knobs are read lazily at trace time (repro.optflags), so setting
+        # the env here — after import — still takes effect
+        import os
+        os.environ["REPRO_OTA_BLOCK_ROWS"] = str(args.ota_block_rows)
 
     key = jax.random.PRNGKey(args.seed)
     model = get_model(args.arch, reduced=args.reduced)
@@ -82,7 +103,11 @@ def main() -> None:
                      transport_backend=args.backend,
                      scenario=args.scenario, doppler_hz=args.doppler_hz,
                      csi_err=args.csi_err, h_min=args.h_min,
-                     slots_per_round=args.slots_per_round)
+                     slots_per_round=args.slots_per_round,
+                     ota_fused=None if args.ota_fused is None
+                     else args.ota_fused == "on",
+                     ota_worker_chunk=args.ota_worker_chunk,
+                     ota_block_cols=args.ota_block_cols)
     acfg = AdmmConfig(rho=args.rho, flip_on_change=False)
     ccfg = ChannelConfig(n_workers=W, snr_db=args.snr_db,
                          coherence_iters=args.coherence)

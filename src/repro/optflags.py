@@ -26,3 +26,31 @@ SCAN_CHUNK = int(os.environ.get("REPRO_SCAN_CHUNK", "512"))
 
 def enabled(name: str) -> bool:
     return name in os.environ.get("REPRO_OPT", "").split(",")
+
+
+# ---------------------------------------------------------------------------
+# OTA kernel tiling knobs — read at TRACE time (functions, not constants), so
+# a CLI/config can set the env var after import and still take effect, and an
+# autotune sweep (``transport.autotune_ota_round``) can report values that
+# drop straight into a launch script.
+# ---------------------------------------------------------------------------
+
+def ota_block_rows() -> int:
+    """Row-block of the flat elementwise OTA kernels (modulate/demodulate/
+    fading step): ``REPRO_OTA_BLOCK_ROWS`` rows × 1024 lanes per tile."""
+    return int(os.environ.get("REPRO_OTA_BLOCK_ROWS", "256"))
+
+
+def ota_block_cols() -> int:
+    """Column-block of the worker-grid receive/round kernels
+    (``kernels/ota_round.py``, ``ota_receive``): ``REPRO_OTA_BLOCK_COLS``
+    lanes per grid step over the packed axis."""
+    return int(os.environ.get("REPRO_OTA_BLOCK_COLS", "1024"))
+
+
+def ota_worker_chunk() -> int:
+    """Worker-chunk size of the streamed OTA round
+    (``transport.ota_round_fused``): 0 (default) = monolithic one-shot over
+    all W workers; C > 0 = lax.scan over ceil(W/C) cohorts so peak signal
+    memory is O(C·D) instead of O(W·D)."""
+    return int(os.environ.get("REPRO_OTA_WORKER_CHUNK", "0"))

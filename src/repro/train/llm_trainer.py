@@ -97,6 +97,17 @@ class FLConfig:
     #: mobility/Doppler decorrelation speed up accordingly so gain dynamics
     #: are visible in short runs
     slots_per_round: Optional[int] = None
+    #: one-pass fused receive (``transport.ota_round_fused``): None/True uses
+    #: the fused round on the packed paths (modulate → power-scale →
+    #: superpose → AWGN → demodulate over each worker plane ONCE); False
+    #: keeps the composed per-primitive chain (the semantics oracle).
+    ota_fused: Optional[bool] = None
+    #: worker-cohort streaming: 0/None processes all W planes in one pass;
+    #: k>0 scans ceil(W/k) cohorts so peak signal memory is O(k·D) — W in
+    #: the hundreds-to-thousands.  None defers to REPRO_OTA_WORKER_CHUNK.
+    ota_worker_chunk: Optional[int] = None
+    #: fused-kernel column tile; None defers to REPRO_OTA_BLOCK_COLS
+    ota_block_cols: Optional[int] = None
 
 
 def _local_opt(flcfg: FLConfig):
@@ -254,12 +265,15 @@ def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
             Theta_f32, lam_new, m = ota_tree_round_shard_local(
                 theta, state.lam, chan.h, kn, acfg, ccfg, sspec, mesh,
                 backend=flcfg.transport_backend, mask=mask, h_tx_p=h_tx_p,
-                Theta_prev=Theta_prev)
+                Theta_prev=Theta_prev, fused=flcfg.ota_fused,
+                block_cols=flcfg.ota_block_cols)
         elif packed:  # incl. every scenario: mask/h_tx/guard default to None
             Theta_f32, lam_new, m = ota_tree_round_packed_state(
                 theta, state.lam, chan.h, kn, acfg, ccfg, spec,
                 backend=flcfg.transport_backend, mask=mask, h_tx_p=h_tx_p,
-                Theta_prev=Theta_prev)
+                Theta_prev=Theta_prev, fused=flcfg.ota_fused,
+                worker_chunk=flcfg.ota_worker_chunk,
+                block_cols=flcfg.ota_block_cols)
         else:
             Theta_f32, lam_new, m = ota_tree_round(
                 theta, state.lam, chan.h, kn, acfg, ccfg,

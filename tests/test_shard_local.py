@@ -65,7 +65,7 @@ h_p = pack_shard_global_cplx(ss, h)
 ccfg = ChannelConfig(n_workers=W, noisy=False)
 
 
-def check_parity(power_control, mask=None, h_tx=None, label=""):
+def check_parity(power_control, mask=None, h_tx=None, label="", fused=None):
     acfg = AdmmConfig(rho=0.5, power_control=power_control,
                       flip_on_change=False)
     h_tx_p = None if h_tx is None else pack_shard_global_cplx(ss, h_tx)
@@ -77,7 +77,8 @@ def check_parity(power_control, mask=None, h_tx=None, label=""):
         T_s, l_s, m_s = jax.jit(
             lambda t, lp, hp, k: ota_tree_round_shard_local(
                 t, lp, hp, k, acfg, ccfg, ss, mesh, backend="jnp",
-                mask=mask, h_tx_p=h_tx_p))(theta, lam_p, h_p, KEY)
+                mask=mask, h_tx_p=h_tx_p, fused=fused))(
+            theta, lam_p, h_p, KEY)
     l_s_tree = unpack_shard_global_cplx(ss, l_s)
     for name in theta:
         np.testing.assert_array_equal(np.asarray(T_s[name]),
@@ -96,10 +97,13 @@ mask = jnp.array([True, False, True])
 h_hat = jax.tree.map(
     lambda c: cplx.Complex(c.re + 0.1, c.im - 0.05), h,
     is_leaf=lambda x: isinstance(x, cplx.Complex))
-check_parity(False, label="plain pc=False")
-check_parity(True, label="plain pc=True")
-check_parity(True, mask=mask, label="masked")
-check_parity(True, mask=mask, h_tx=h_hat, label="masked+csi")
+for fz in (None, False):            # fused one-pass body AND composed body
+    tag = "fused" if fz is None else "composed"
+    check_parity(False, label=f"plain pc=False [{tag}]", fused=fz)
+    check_parity(True, label=f"plain pc=True [{tag}]", fused=fz)
+    check_parity(True, mask=mask, label=f"masked [{tag}]", fused=fz)
+    check_parity(True, mask=mask, h_tx=h_hat, label=f"masked+csi [{tag}]",
+                 fused=fz)
 print("PARITY_BITWISE_OK")
 
 # --- worker axis split over data: the psum-composed reduction branch -------
@@ -144,26 +148,41 @@ for pc, msk in ((True, None), (True, mask4), (False, None)):
                                float(m_l["inv_alpha"]), rtol=1e-6)
 print("DATA_SPLIT_PARITY_OK")
 
-# --- exactly one receive per shard per round (no leafwise fallback) --------
-calls = {"n": 0}
-orig = transport.receive
+# --- exactly one uplink entry per shard per round (no leafwise fallback):
+# the fused default runs ONE ota_round_stats pass (receive never called);
+# the composed fused=False body runs ONE receive
+calls = {"receive": 0, "stats": 0}
+orig_recv, orig_stats = transport.receive, transport.ota_round_stats
 
 
-def counting(*a, **kw):
-    calls["n"] += 1
-    return orig(*a, **kw)
+def counting_recv(*a, **kw):
+    calls["receive"] += 1
+    return orig_recv(*a, **kw)
 
 
-transport.receive = counting
+def counting_stats(*a, **kw):
+    calls["stats"] += 1
+    return orig_stats(*a, **kw)
+
+
+transport.receive = counting_recv
+transport.ota_round_stats = counting_stats
 try:
     acfg = AdmmConfig(rho=0.5, power_control=True, flip_on_change=False)
     with mesh:
         jax.eval_shape(lambda t, lp, hp, k: ota_tree_round_shard_local(
             t, lp, hp, k, acfg, ccfg, ss, mesh, backend="jnp")[0],
             theta, lam_p, h_p, KEY)
+    assert calls == {"receive": 0, "stats": 1}, calls
+    calls["stats"] = 0
+    with mesh:
+        jax.eval_shape(lambda t, lp, hp, k: ota_tree_round_shard_local(
+            t, lp, hp, k, acfg, ccfg, ss, mesh, backend="jnp",
+            fused=False)[0], theta, lam_p, h_p, KEY)
+    assert calls == {"receive": 1, "stats": 0}, calls
 finally:
-    transport.receive = orig
-assert calls["n"] == 1, calls
+    transport.receive = orig_recv
+    transport.ota_round_stats = orig_stats
 print("ONE_RECEIVE_PER_SHARD_OK")
 
 # --- pallas backend composes inside the shard_map body ---------------------

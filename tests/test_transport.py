@@ -275,27 +275,56 @@ def test_packed_tree_round_noise_equals_flat_uplink():
 
 
 def test_packed_tree_round_single_receive_dispatch(monkeypatch):
-    """The acceptance contract: one transport.receive per round for a
-    multi-leaf model (leafwise: one per leaf)."""
+    """The acceptance contract: one uplink entry per round for a multi-leaf
+    model — the packed round enters the transport exactly once, through the
+    fused one-pass round (``ota_round_fused``) by default or the composed
+    ``receive`` with ``fused=False`` (leafwise: one receive per leaf)."""
     from repro.core import tree_ota
 
     theta, lam, h = _tree_problem(4, SIZES, seed=9)
     acfg = AdmmConfig(rho=0.5, power_control=True)
     ccfg = ChannelConfig(n_workers=4, noisy=True)
-    calls = {"n": 0}
-    orig = transport.receive
+    calls = {"receive": 0, "fused": 0}
+    orig_recv, orig_fused = transport.receive, transport.ota_round_fused
 
-    def counting(*a, **kw):
-        calls["n"] += 1
-        return orig(*a, **kw)
+    def counting_recv(*a, **kw):
+        calls["receive"] += 1
+        return orig_recv(*a, **kw)
 
-    monkeypatch.setattr(transport, "receive", counting)
+    def counting_fused(*a, **kw):
+        calls["fused"] += 1
+        return orig_fused(*a, **kw)
+
+    monkeypatch.setattr(transport, "receive", counting_recv)
+    monkeypatch.setattr(transport, "ota_round_fused", counting_fused)
     tree_ota.ota_tree_round(theta, lam, h, KEY, acfg, ccfg, backend="jnp")
-    assert calls["n"] == 1
-    calls["n"] = 0
+    assert calls["fused"] == 1 and calls["receive"] == 0
+    calls["fused"] = calls["receive"] = 0
+    tree_ota.ota_tree_round(theta, lam, h, KEY, acfg, ccfg, backend="jnp",
+                            fused=False)
+    assert calls["fused"] == 0 and calls["receive"] == 1
+    calls["fused"] = calls["receive"] = 0
     tree_ota.ota_tree_round_leafwise(theta, lam, h, KEY, acfg, ccfg,
                                      backend="jnp")
-    assert calls["n"] == len(SIZES)
+    assert calls["fused"] == 0 and calls["receive"] == len(SIZES)
+
+
+def test_packed_tree_round_fused_equals_composed_noisy():
+    """fused default vs fused=False composed path: bitwise under AWGN (the
+    fused round draws the SAME noise bits via matched_filter_noise_re)."""
+    from repro.core import tree_ota
+
+    theta, lam, h = _tree_problem(4, SIZES, seed=11)
+    acfg = AdmmConfig(rho=0.5, power_control=True)
+    ccfg = ChannelConfig(n_workers=4, noisy=True)
+    T1, l1, m1 = tree_ota.ota_tree_round(theta, lam, h, KEY, acfg, ccfg,
+                                         backend="jnp")
+    T2, l2, m2 = tree_ota.ota_tree_round(theta, lam, h, KEY, acfg, ccfg,
+                                         backend="jnp", fused=False)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), T1, T2)
+    np.testing.assert_array_equal(np.asarray(m1["inv_alpha"]),
+                                  np.asarray(m2["inv_alpha"]))
 
 
 # ---------------------------------------------------------------------------
