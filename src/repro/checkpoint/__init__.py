@@ -1,1 +1,2 @@
-from repro.checkpoint.np_checkpoint import restore, save  # noqa: F401
+from repro.checkpoint.np_checkpoint import (latest_round,  # noqa: F401
+                                            restore, round_path, save)

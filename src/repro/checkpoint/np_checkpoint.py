@@ -47,6 +47,25 @@ def save(path: str, tree: PyTree) -> None:
     np.savez(path, **arrays)
 
 
+_ROUND_RE = re.compile(r"^round_(\d+)\.npz$")
+
+
+def round_path(directory: str, r: int) -> str:
+    """Canonical per-round checkpoint filename (fixed width so lexical
+    order == round order)."""
+    return os.path.join(directory, f"round_{int(r):08d}.npz")
+
+
+def latest_round(directory: str):
+    """Highest round number with a ``round_*.npz`` checkpoint in
+    ``directory``, or None if there is none (missing dir included)."""
+    if not os.path.isdir(directory):
+        return None
+    rounds = [int(m.group(1)) for f in os.listdir(directory)
+              if (m := _ROUND_RE.match(f))]
+    return max(rounds) if rounds else None
+
+
 def restore(path: str, like: PyTree) -> PyTree:
     """Restore into the structure of ``like`` (shape/dtype-checked)."""
     with np.load(path if path.endswith(".npz") else path + ".npz") as zf:

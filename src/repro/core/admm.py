@@ -66,10 +66,13 @@ class AFadmmState(NamedTuple):
     blk: ChannelBlock
     step: Array  # int32
     phys: Optional[NamedTuple] = None
+    #: ``repro.faults`` fault-injection state (worker liveness, straggler
+    #: snapshots) when the algorithm runs under a FaultPlan; None otherwise.
+    flt: Optional[NamedTuple] = None
 
 
 def init_state(key: Array, theta0: Array, blk: ChannelBlock,
-               phys=None) -> AFadmmState:
+               phys=None, flt=None) -> AFadmmState:
     """theta0: (W, d) initial local models (paper: random init)."""
     W, d = theta0.shape
     return AFadmmState(
@@ -79,6 +82,7 @@ def init_state(key: Array, theta0: Array, blk: ChannelBlock,
         blk=blk,
         step=jnp.zeros((), jnp.int32),
         phys=phys,
+        flt=flt,
     )
 
 
@@ -111,6 +115,8 @@ def afadmm_round(
     backend: Optional[str] = None,
     mask: Optional[Array] = None,
     h_tx: Optional[Complex] = None,
+    guard=None,
+    faults=None,
 ) -> Tuple[AFadmmState, dict]:
     """One synchronous round of Algorithm 1 (with Appendix-B noise handling).
 
@@ -122,11 +128,21 @@ def afadmm_round(
       grad_fn: ``theta -> ∂f(θ)`` per worker, used by the flip rule. Shapes
         (W, d) -> (W, d).
       backend: OTA transport backend ("jnp"/"pallas"/None = REPRO_USE_PALLAS).
-      mask: (W,) participation mask (``repro.phy`` deep-fade truncation).
-        A masked worker skips the round: zero superposition contribution,
-        excluded from min-α, dual frozen.  All-masked rounds keep Θ (no-op).
+      mask: (W,) participation mask (``repro.phy`` deep-fade truncation
+        and/or ``repro.faults`` crash liveness).  A masked worker skips the
+        round: zero superposition contribution, excluded from min-α, dual
+        frozen.  All-masked rounds keep Θ (no-op).
       h_tx: worker-side CSI ``h_hat`` (imperfect CSI): workers precode,
         locally solve, and dual-update against it; the air applies ``h``.
+      guard: a ``repro.faults.GuardConfig`` — replaces the uplink with the
+        guarded receive cascade (Θ finiteness + SNR floor, then
+        skip/retransmit/evict).  A healthy guarded round is BITWISE the
+        unguarded round.  Incompatible with a custom ``reduce_fn``.
+      faults: ``(FaultPlan, RoundFaults, stale)`` — substitutes the
+        UPLINKED planes per the round's fault draw (straggler staleness,
+        corruption, bursts); worker bookkeeping (θ, duals) stays truthful.
+        Refreshed stale buffers / evicted rows ride in
+        ``metrics["_fault_aux"]``.
     """
     h = blk_next.h
     changed = blk_next.changed
@@ -144,18 +160,63 @@ def afadmm_round(
         theta_new = theta_solved
         lam_pre = state.lam
 
+    # --- fault injection: what the AIR sees (worker state stays truthful) --
+    aux = {}
+    burst_std = None
+    theta_tx = theta_new
+    if faults is not None:
+        from repro.faults import plan as _fplan
+        fplan, rf, stale = faults
+        theta_tx, stale_next = _fplan.apply_uplink(fplan, rf, theta_new,
+                                                   stale)
+        burst_std = rf.burst_std
+        if stale_next is not None:
+            aux["stale"] = stale_next
+
     # --- uplink: modulate, power-scale, superpose, matched-filter ---------
-    Theta_new, inv_alpha = ota_uplink(
-        theta_new, lam_pre, h, key, rho, ccfg,
-        power_control=acfg.power_control, reduce_fn=reduce_fn,
-        min_reduce_fn=min_reduce_fn, mask=mask,
-        h_tx=h_tx, backend=backend)
-    if mask is not None:
-        # all workers in a deep fade -> nobody transmitted: keep Θ rather
-        # than demodulating pure noise over an ε-clamped zero pilot
-        Theta_new = jnp.where(jnp.any(mask), Theta_new, state.Theta)
+    healthy = None
+    evicted = None
+    guard_metrics = {}
+    if guard is not None or burst_std is not None:
+        from repro.faults import guards as _fguards
+        if reduce_fn is not None:
+            raise ValueError("round guards/bursts are incompatible with a "
+                             "custom reduce_fn (they need the fused stats)")
+        gcfg = guard if guard is not None else _fguards.GuardConfig()
+        gr = _fguards.guarded_ota_round(
+            theta_tx, lam_pre, h, key, rho, ccfg, gcfg,
+            power_control=acfg.power_control, mask=mask, h_tx=h_tx,
+            min_reduce_fn=min_reduce_fn, backend=backend,
+            burst_std=burst_std)
+        Theta_new, inv_alpha = gr.Theta, gr.inv_alpha
+        if guard is not None:   # burst-only: no policy, accept the round
+            healthy, evicted = gr.healthy, gr.evicted
+            guard_metrics = gr.metrics
+            aux["evicted"] = evicted
+    else:
+        Theta_new, inv_alpha = ota_uplink(
+            theta_tx, lam_pre, h, key, rho, ccfg,
+            power_control=acfg.power_control, reduce_fn=reduce_fn,
+            min_reduce_fn=min_reduce_fn, mask=mask,
+            h_tx=h_tx, backend=backend)
+    keep = None
+    if mask is not None or evicted is not None:
+        # all workers in a deep fade (or evicted) -> nobody transmitted:
+        # keep Θ rather than demodulating pure noise over a zero pilot
+        active = (jnp.ones((state.theta.shape[0],), bool) if mask is None
+                  else mask)
+        if evicted is not None:
+            active = active & ~evicted
+        keep = jnp.any(active)
+    if healthy is not None:
+        keep = healthy if keep is None else keep & healthy
+    if keep is not None:
+        Theta_new = jnp.where(keep, Theta_new, state.Theta)
 
     # --- downlink + dual ---------------------------------------------------
+    # duals update from the worker's TRUE planes (theta_new, not the faulted
+    # theta_tx): a straggler/corrupter's bookkeeping is healthy even when
+    # its transmission was not
     if ccfg.analog_downlink:
         kd = jax.random.fold_in(key, 1)
         dn = matched_filter_noise(kd, state.theta.shape, ccfg)
@@ -164,21 +225,33 @@ def afadmm_round(
     else:
         lam_new = dual_update(lam_pre, h_wkr, theta_new, Theta_new, rho,
                               backend=backend)
-    if mask is not None:
+    freeze = mask
+    if evicted is not None:
+        freeze = ~evicted if freeze is None else freeze & ~evicted
+    if freeze is not None:
         # truncated workers sat the round out: their duals stay frozen at
         # the PRE-round value — state.lam, not lam_pre, which under
         # flip_on_change already includes this round's channel-redraw flip
-        lam_new = cplx.cwhere(mask[:, None], lam_new, state.lam)
+        lam_new = cplx.cwhere(freeze[:, None], lam_new, state.lam)
+    if healthy is not None:
+        lam_new = cplx.cwhere(healthy, lam_new, state.lam)
+    if evicted is not None:
+        lam_new = cplx.cwhere(evicted[:, None],
+                              cplx.czero(lam_new.re.shape, lam_new.re.dtype),
+                              lam_new)
 
     new_state = AFadmmState(theta=theta_new, lam=lam_new, Theta=Theta_new,
                             blk=blk_next, step=state.step + 1,
-                            phys=state.phys)
+                            phys=state.phys, flt=state.flt)
     metrics = {
         "primal_residual": jnp.sqrt(jnp.mean((theta_new - Theta_new[None, :]) ** 2)),
         "dual_residual": jnp.sqrt(jnp.mean(
             (cplx.abs2(h) * (Theta_new - state.Theta)[None, :]) ** 2)) * rho,
         "inv_alpha": jnp.asarray(inv_alpha),
+        **guard_metrics,
     }
     if mask is not None:
         metrics["participation"] = jnp.mean(mask.astype(jnp.float32))
+    if aux:
+        metrics["_fault_aux"] = aux
     return new_state, metrics

@@ -113,18 +113,28 @@ class AFadmm(ScanRounds):
     #: imperfect CSI / deep-fade truncation).  None keeps the legacy
     #: i.i.d. block-fading channel bit-for-bit.
     scenario: Optional[Any] = None
+    #: optional ``repro.faults.FaultPlan`` (crash / straggler / corruption /
+    #: burst injection) and ``repro.faults.GuardConfig`` (round health
+    #: guard).  None keeps the fault-free round bit-for-bit — the fault key
+    #: is a ``fold_in`` side-branch, never a ``split`` of the round key.
+    faults: Optional[Any] = None
+    guard: Optional[Any] = None
 
     name = "afadmm"
 
     def init(self, key: Array, theta0: Array) -> AFadmmState:
         kc, _ = jax.random.split(key)
+        W, d = theta0.shape
+        flt = None
+        if self.faults is not None:
+            from repro import faults as _faults
+            flt = _faults.init(self.faults, W, d)
         if self.scenario is None:
             blk = init_channel(kc, self.ccfg, n_coeffs=theta0.shape[-1])
-            return admm.init_state(key, theta0, blk)
-        W, d = theta0.shape
+            return admm.init_state(key, theta0, blk, flt=flt)
         phys = self.scenario.init(kc, W, d)
         blk = self._as_block(phys, phys.h, jnp.zeros((), bool))
-        return admm.init_state(key, theta0, blk, phys=phys)
+        return admm.init_state(key, theta0, blk, phys=phys, flt=flt)
 
     @staticmethod
     def _as_block(phys, h_prev, changed: Array) -> ChannelBlock:
@@ -149,10 +159,27 @@ class AFadmm(ScanRounds):
                 mask = phys.mask
             if self.scenario.imperfect_csi:
                 h_tx = phys.h_hat
+        faults = None
+        fmetrics = {}
+        if self.faults is not None:
+            from repro import faults as _faults
+            # fold_in side-branch: the fault-free kc/kn schedule is untouched
+            kf = jax.random.fold_in(key, _faults.FAULT_SALT)
+            rf, st_mid, fmetrics = _faults.draw(self.faults, kf, st.flt)
+            st = st._replace(flt=st_mid)
+            mask = rf.alive if mask is None else mask & rf.alive
+            faults = (self.faults, rf, st.flt.stale)
         st, metrics = admm.afadmm_round(
             st, blk_next, local_solve, grad_fn, self.acfg, self.ccfg, kn,
             reduce_fn=self.reduce_fn, min_reduce_fn=self.min_reduce_fn,
-            backend=self.backend, mask=mask, h_tx=h_tx)
+            backend=self.backend, mask=mask, h_tx=h_tx,
+            guard=self.guard, faults=faults)
+        if self.faults is not None:
+            from repro import faults as _faults
+            aux = metrics.pop("_fault_aux", {})
+            st = st._replace(flt=_faults.commit(
+                st.flt, aux.get("stale"), aux.get("evicted")))
+        metrics.update(fmetrics)
         metrics["channel_uses"] = jnp.asarray(
             float(subcarrier.analog_channel_uses(self.plan)))
         return st, metrics

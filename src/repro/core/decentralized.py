@@ -37,11 +37,19 @@ class GadmmState(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class AnalogGadmm(ScanRounds):
-    """Decentralized chain ADMM with analog neighbour links."""
+    """Decentralized chain ADMM with analog neighbour links.
+
+    ``mask`` (optional, (W,) bool) is the participation mask shared with the
+    PS-side algorithms: a dead worker degrades to a **pass-through hop** —
+    its alive neighbours splice together into a shorter chain (nearest-alive
+    gathers) instead of the dead row poisoning both adjacent edges.  The
+    dead worker's model freezes and edges with a dead endpoint zero their
+    dual.  ``mask=None`` is bitwise the original unmasked round."""
 
     ccfg: ChannelConfig
     plan: SubcarrierPlan
     rho: float = 0.5
+    mask: Optional[Array] = None
 
     name = "analog_gadmm"
 
@@ -68,6 +76,8 @@ class AnalogGadmm(ScanRounds):
         n_nbrs) -> theta' — minimises f_n + edge penalties (see
         ``optim.local_solvers.gadmm_quadratic_solver``)."""
         del grad_fn
+        if self.mask is not None:
+            return self._round_masked(key, st, quad_solve_neighbors)
         W, d = st.theta.shape
         rho = self.rho
         k1, k2 = jax.random.split(key)
@@ -112,7 +122,80 @@ class AnalogGadmm(ScanRounds):
         return GadmmState(theta=theta_new, lam=lam_new,
                           step=st.step + 1), metrics
 
+    def _round_masked(self, key: Array, st: GadmmState,
+                      quad_solve_neighbors: Callable
+                      ) -> Tuple[GadmmState, dict]:
+        """Masked round: dead workers become pass-through hops.
+
+        Nearest-alive gathers (exclusive cummax/cummin over the chain)
+        splice each alive worker to its closest alive left/right neighbour;
+        head/tail parity is the worker's RANK among the alive, so the
+        masked chain is the compacted (alive-only) chain elementwise.  The
+        dual of edge (u, v) lives at row u (its left endpoint); edges with
+        a dead endpoint are zeroed, dead workers' models freeze."""
+        W, d = st.theta.shape
+        rho = self.rho
+        k1, k2 = jax.random.split(key)
+        alive = jnp.asarray(self.mask, bool)
+        idx = jnp.arange(W)
+
+        # nearest alive strictly left / right of each worker
+        l = jnp.concatenate([jnp.full((1,), -1, idx.dtype),
+                             jax.lax.cummax(jnp.where(alive, idx, -1))[:-1]])
+        r = jnp.concatenate([jax.lax.cummin(
+            jnp.where(alive, idx, W), reverse=True)[1:],
+            jnp.full((1,), W, idx.dtype)])
+        has_l, has_r = (l >= 0)[:, None], (r < W)[:, None]
+        lc, rc = jnp.clip(l, 0, W - 1), jnp.clip(r, 0, W - 1)
+        n_nbrs = jnp.maximum(has_l[:, 0].astype(jnp.float32)
+                             + has_r[:, 0].astype(jnp.float32), 1.0)
+        pos = jnp.cumsum(alive.astype(jnp.int32)) - 1  # rank among alive
+        is_head = (alive & (pos % 2 == 0))[:, None]
+        is_tail = (alive & (pos % 2 == 1))[:, None]
+        lam_pad = jnp.concatenate([st.lam, jnp.zeros((1, d))], axis=0)
+
+        def gather_terms(theta_rx: Array):
+            left = jnp.where(has_l, theta_rx[lc], 0.0)
+            right = jnp.where(has_r, theta_rx[rc], 0.0)
+            lam_l = jnp.where(has_l, lam_pad[lc], 0.0)   # edge (l_n, n)
+            lam_r = jnp.where(has_r, lam_pad[idx], 0.0)  # edge (n, r_n)
+            return left, right, lam_l, lam_r
+
+        # --- heads (even rank) update on noisy neighbour receptions -------
+        left, right, lam_l, lam_r = gather_terms(
+            self._noisy_link(k1, st.theta))
+        theta_heads = quad_solve_neighbors(st.theta, left, right, lam_l,
+                                           lam_r, n_nbrs)
+        theta_mid = jnp.where(is_head, theta_heads, st.theta)
+
+        # --- tails respond ---------------------------------------------------
+        left, right, lam_l, lam_r = gather_terms(
+            self._noisy_link(k2, theta_mid))
+        theta_tails = quad_solve_neighbors(theta_mid, left, right, lam_l,
+                                           lam_r, n_nbrs)
+        theta_new = jnp.where(is_tail, theta_tails, theta_mid)
+
+        # --- edge duals (row n holds edge (n, r_n); dead endpoint -> 0) ---
+        valid_e = (alive & (r < W))[:W - 1, None]
+        diffs = theta_new[:W - 1] - theta_new[rc[:W - 1]]
+        lam_new = jnp.where(valid_e, st.lam + rho * diffs, 0.0)
+
+        n_edges = jnp.maximum(jnp.sum(valid_e.astype(jnp.float32)), 1.0)
+        metrics = {
+            "consensus_gap": jnp.sqrt(
+                jnp.sum(jnp.where(valid_e, diffs ** 2, 0.0))
+                / (n_edges * d)),
+            "channel_uses": jnp.asarray(2.0 * self.plan.n_slots),
+            "gadmm_alive": jnp.sum(alive.astype(jnp.float32)),
+        }
+        return GadmmState(theta=theta_new, lam=lam_new,
+                          step=st.step + 1), metrics
+
     def global_model(self, st: GadmmState) -> Array:
+        if self.mask is not None:
+            alive = jnp.asarray(self.mask, jnp.float32)[:, None]
+            return jnp.sum(st.theta * alive, axis=0) \
+                / jnp.maximum(jnp.sum(alive), 1.0)
         return jnp.mean(st.theta, axis=0)
 
 

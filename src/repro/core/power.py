@@ -38,6 +38,20 @@ def alpha_from_energy(energy: Array, power_budget: float) -> Array:
                      jnp.inf)
 
 
+def retry_power_budget(power_budget: float, attempt: Array | int,
+                       backoff: float) -> Array:
+    """Per-attempt budget ``P·γ^attempt`` for SNR-triggered retransmission
+    (``faults.guards``): attempt 0 is the original slot (``γ⁰ = 1`` exactly,
+    so a guarded round with no retries is bitwise the unguarded round), and
+    each retry raises the budget by ``backoff`` — the exponential power
+    ramp flows through :func:`alpha_from_energy` unchanged, so the
+    zero-/NaN-energy guards apply to retransmissions too.  ``attempt`` may
+    be a traced int32 (the guard's ``lax.while_loop`` counter)."""
+    g = jnp.asarray(backoff, jnp.float32)
+    boost = g ** jnp.asarray(attempt, jnp.float32)
+    return jnp.asarray(power_budget, jnp.float32) * boost
+
+
 def per_worker_alpha(signals: Complex, power_budget: float) -> Array:
     """α_n = sqrt(P / Σ_i |s_{n,i}|²), per worker; +inf for zero-energy
     rows (no signal ⇒ no constraint).  signals: (W, d)."""

@@ -47,6 +47,10 @@ class TreeFLState(NamedTuple):
     chan: TreeChannel
     opt: Any        # per-worker local optimizer state (leaves (W, ...))
     step: Array
+    #: ``repro.faults`` fault-process state (worker liveness, straggler
+    #: snapshot in the packed/shard-packed layout); None when fault
+    #: injection is off.
+    flt: Any = None
 
 
 def _is_cplx(x) -> bool:
@@ -167,6 +171,8 @@ def ota_tree_round_packed_state(theta: PyTree, lam_p: Complex, h_p: Complex,
                                 fused: Optional[bool] = None,
                                 worker_chunk: Optional[int] = None,
                                 block_cols: Optional[int] = None,
+                                guard=None,
+                                faults=None,
                                 ) -> Tuple[PyTree, Complex, dict]:
     """One OTA round where the duals/fading are ALREADY packed ``(W, D)``.
 
@@ -189,34 +195,101 @@ def ota_tree_round_packed_state(theta: PyTree, lam_p: Complex, h_p: Complex,
     which forces the composed path).  ``worker_chunk``/``block_cols``
     thread the streaming/tiling knobs through (None = the
     ``REPRO_OTA_WORKER_CHUNK`` / ``REPRO_OTA_BLOCK_COLS`` env knobs).
+
+    Fault tolerance (``repro.faults``): ``faults=(plan, rf, stale)``
+    substitutes the UPLINKED planes per the round's
+    :class:`~repro.faults.plan.RoundFaults` draw (straggler staleness,
+    corruption, burst interference) — worker-local state (θ, duals) stays
+    truthful, only the air sees the faulted planes.  ``guard`` (a
+    :class:`~repro.faults.guards.GuardConfig`) replaces the fused receive
+    with the guarded cascade: on a healthy round it is BITWISE the
+    unguarded monolithic fused round (``worker_chunk`` is ignored; requires
+    ``Theta_prev`` for the skip fallback and the fused path).  An unhealthy
+    round that exhausts recovery keeps the previous Θ and freezes every
+    dual (the PR 4 all-masked machinery); evicted offenders get their dual
+    zeroed.  Aux state the caller must thread back (refreshed stale buffer,
+    evicted rows) rides in ``metrics["_fault_aux"]``.
     """
     theta_p = pack(spec, theta)                    # the one layout op per round
+    aux = {}
+    burst_std = None
+    theta_tx_p = theta_p
+    if faults is not None:
+        from repro.faults import plan as _fplan
+        fplan, rf, stale = faults
+        theta_tx_p, stale_next = _fplan.apply_uplink(fplan, rf, theta_p,
+                                                     stale)
+        burst_std = rf.burst_std
+        if stale_next is not None:
+            aux["stale"] = stale_next
     use_fused = (fused is not False) and reduce_fn is None
-    if use_fused:
+    healthy = None
+    evicted = None
+    guard_metrics = {}
+    if guard is not None or burst_std is not None:
+        from repro.faults import guards as _fguards
+        if not use_fused:
+            raise ValueError("round guards/bursts require the fused path "
+                             "(fused=True, reduce_fn=None)")
+        if guard is not None and Theta_prev is None:
+            raise ValueError("guard needs Theta_prev for the skip fallback")
+        gcfg = guard if guard is not None else _fguards.GuardConfig()
+        gr = _fguards.guarded_ota_round(
+            theta_tx_p, lam_p, h_p, key, acfg.rho, ccfg, gcfg,
+            power_control=acfg.power_control, mask=mask, h_tx=h_tx_p,
+            min_reduce_fn=min_reduce_fn, block_cols=block_cols,
+            backend=backend, burst_std=burst_std)
+        Theta_p, inv_alpha = gr.Theta, gr.inv_alpha
+        if guard is not None:   # burst-only: no policy, accept the round
+            healthy, evicted = gr.healthy, gr.evicted
+            guard_metrics = gr.metrics
+            aux["evicted"] = evicted
+    elif use_fused:
         Theta_p, inv_alpha, _ = transport.ota_round_fused(
-            theta_p, lam_p, h_p, key, acfg.rho, ccfg,
+            theta_tx_p, lam_p, h_p, key, acfg.rho, ccfg,
             power_control=acfg.power_control, mask=mask, h_tx=h_tx_p,
             min_reduce_fn=min_reduce_fn, worker_chunk=worker_chunk,
             block_cols=block_cols, backend=backend)
     else:
         Theta_p, inv_alpha = transport.ota_uplink(
-            theta_p, lam_p, h_p, key, acfg.rho, ccfg,
+            theta_tx_p, lam_p, h_p, key, acfg.rho, ccfg,
             power_control=acfg.power_control, reduce_fn=reduce_fn,
             min_reduce_fn=min_reduce_fn, mask=mask, h_tx=h_tx_p,
             backend=backend)
     h_wkr = h_p if h_tx_p is None else h_tx_p
+    # duals update from the worker's TRUE planes: a straggler/corrupter's
+    # bookkeeping is healthy even when its transmission was not
     lam_new_p = transport.dual_update(lam_p, h_wkr, theta_p, Theta_p,
                                       acfg.rho, backend=backend)
-    metrics = {"inv_alpha": jnp.asarray(inv_alpha)}
+    metrics = {"inv_alpha": jnp.asarray(inv_alpha), **guard_metrics}
+    freeze = mask
+    if evicted is not None:
+        freeze = ~evicted if freeze is None else freeze & ~evicted
+    if freeze is not None:
+        lam_new_p = cplx.cwhere(freeze[:, None], lam_new_p, lam_p)
+    if healthy is not None:
+        lam_new_p = cplx.cwhere(healthy, lam_new_p, lam_p)
+    if evicted is not None:
+        lam_new_p = cplx.cwhere(evicted[:, None],
+                                cplx.czero(lam_new_p.re.shape,
+                                           lam_new_p.re.dtype), lam_new_p)
     if mask is not None:
-        lam_new_p = cplx.cwhere(mask[:, None], lam_new_p, lam_p)
         metrics["participation"] = jnp.mean(mask.astype(jnp.float32))
     Theta_new = unpack(spec, Theta_p, cast=False)  # analog path stays f32
-    if mask is not None and Theta_prev is not None:
-        keep = jnp.any(mask)
+    keep = None
+    if mask is not None or evicted is not None:
+        active = jnp.ones((theta_p.shape[0],), bool) if mask is None else mask
+        if evicted is not None:
+            active = active & ~evicted
+        keep = jnp.any(active)
+    if healthy is not None:
+        keep = healthy if keep is None else keep & healthy
+    if keep is not None and Theta_prev is not None:
         Theta_new = jax.tree.map(
             lambda new, old: jnp.where(keep, new, old.astype(new.dtype)),
             Theta_new, Theta_prev)
+    if aux:
+        metrics["_fault_aux"] = aux
     return Theta_new, lam_new_p, metrics
 
 
@@ -433,6 +506,8 @@ def ota_tree_round_shard_local(theta: PyTree, lam_p: Complex, h_p: Complex,
                                model_axis: str = "model",
                                fused: Optional[bool] = None,
                                block_cols: Optional[int] = None,
+                               guard=None,
+                               faults=None,
                                ) -> Tuple[PyTree, Complex, dict]:
     """One OTA round with SHARD-LOCAL packing under a model-parallel mesh.
 
@@ -467,6 +542,23 @@ def ota_tree_round_shard_local(theta: PyTree, lam_p: Complex, h_p: Complex,
     to the composed ``fused=False`` body, which is kept as the benchmark
     baseline.
 
+    Fault tolerance (``repro.faults``): ``faults=(plan, rf, stale)`` and
+    ``guard`` mirror :func:`ota_tree_round_packed_state`, with SPMD-safe
+    differences (both require the fused path):
+
+    * eviction is *proactive*: offender rows (non-finite θ/λ/h planes,
+      OR-reduced over the model shards that each hold part of the row) are
+      cut from the mask BEFORE the receive, so no collective ever sits
+      inside a ``lax.cond`` branch;
+    * retransmission attempts are statically unrolled ``where``-selects
+      (same fold_in noise keys and power backoff as the packed guard's
+      ``while_loop``, so the accepted attempt's bits match what lazy
+      retries would have produced);
+    * noise AND burst interference draw per model shard
+      (``fold_in(key, j)``), the shard-local noise layout;
+    * straggler snapshots live in the shard-packed ``(W, d_pad)`` layout
+      (``FaultState.stale`` sharded like λ).
+
     Returns ``(Theta_tree_f32, lam_new_packed, metrics)``.
     """
     from jax.experimental.shard_map import shard_map
@@ -481,37 +573,128 @@ def ota_tree_round_shard_local(theta: PyTree, lam_p: Complex, h_p: Complex,
     use_fused = fused is not False
     has_mask = mask is not None
     has_htx = h_tx_p is not None
+    has_guard = guard is not None
+    has_faults = faults is not None
+    if (has_guard or has_faults) and not use_fused:
+        raise ValueError("round guards/faults require the fused shard-local "
+                         "path (fused=True)")
+    if has_guard and Theta_prev is None:
+        raise ValueError("guard needs Theta_prev for the skip fallback")
+    if has_faults:
+        fplan, rf, stale = faults
+        has_stale = rf.straggler is not None
+        has_corrupt = rf.corrupt is not None
+        has_burst = rf.burst_std is not None
+    else:
+        fplan = rf = stale = None
+        has_stale = has_corrupt = has_burst = False
+    dummy = jnp.zeros((), jnp.float32)
 
-    def body(theta, lam, h, key, mask, h_tx):
+    def body(theta, lam, h, key, mask, h_tx, stale_b, strag, corr, due,
+             burst):
+        from repro.faults import guards as _fg, plan as _fp
         mask = mask if has_mask else None      # dummies stand in for None
         h_tx = h_tx if has_htx else None
         j = jax.lax.axis_index(model_axis)
         theta_p = pack_shard_local(sspec, theta, j)       # (W_l, d_local)
         budget = ccfg.transmit_power * sspec.spec.d       # real elements
+        theta_tx = theta_p
+        stale_next = None
+        if has_faults:
+            rf_l = _fp.RoundFaults(
+                alive=None, straggler=strag if has_stale else None,
+                corrupt=corr if has_corrupt else None,
+                snapshot_due=due if has_stale else None,
+                burst_std=burst if has_burst else None)
+            theta_tx, stale_next = _fp.apply_uplink(
+                fplan, rf_l, theta_p, stale_b if has_stale else None)
+        evicted_l = None
+        if has_guard and guard.evicts:
+            planes = [theta_tx, lam.re, lam.im, h.re, h.im]
+            if h_tx is not None:
+                planes += [h_tx.re, h_tx.im]
+            # a worker's row spans every model shard: OR the local verdicts
+            bad = _fg._rows_nonfinite(*planes).astype(jnp.float32)
+            bad = jax.lax.psum(bad, model_axis) > 0.0
+            base = jnp.ones(bad.shape, bool) if mask is None else mask
+            evicted_l = bad & base
+            mask = base & ~evicted_l
+        healthy_l = retries_l = None
         if use_fused:
             # one pass over this shard's worker planes (modulate + energy +
             # mask + superposition + pilot fused); only the O(d_local)
             # epilogue and the scalar/energy consensus collectives remain
             y_l, p2_l, energy_l, _ = transport.ota_round_stats(
-                theta_p, lam, h, rho, mask=mask, h_tx=h_tx,
+                theta_tx, lam, h, rho, mask=mask, h_tx=h_tx,
                 backend=backend, block_cols=block_cols)
-            if acfg.power_control:
-                energy = jax.lax.psum(energy_l, model_axis)
-                inv_alpha = transport.inv_alpha_from_energy(
-                    energy, budget,
-                    min_reduce_fn=None if local_w
-                    else (lambda a: jax.lax.pmin(a, daxes)),
-                    mask=mask)
-            else:
-                inv_alpha = jnp.asarray(1.0, jnp.float32)
+            mrf = None if local_w else (lambda a: jax.lax.pmin(a, daxes))
+            energy = (jax.lax.psum(energy_l, model_axis)
+                      if acfg.power_control else None)
             if not local_w:
                 y_l = jax.lax.psum(y_l, daxes)
                 p2_l = jax.lax.psum(p2_l, daxes)
             noise_key = jax.random.fold_in(key, j)
-            noise_re = transport.matched_filter_noise_re(
-                noise_key, y_l.shape, ccfg)
-            Theta_p = transport.demodulate(y_l, p2_l, noise_re, inv_alpha,
-                                           backend=backend)
+            if has_guard:
+                from repro.core import power as _power
+
+                def gsum(s):
+                    return jax.lax.psum(s, model_axis)
+
+                def epi(k, attempt, with_burst):
+                    if acfg.power_control:
+                        b = _power.retry_power_budget(budget, attempt,
+                                                      guard.power_backoff)
+                        ia = transport.inv_alpha_from_energy(
+                            energy, b, min_reduce_fn=mrf, mask=mask)
+                    else:
+                        ia = jnp.asarray(1.0, jnp.float32)
+                    n = transport.matched_filter_noise_re(k, y_l.shape,
+                                                          ccfg)
+                    if with_burst:
+                        kb = jax.random.fold_in(k, _fg.BURST_SALT)
+                        n = n + burst * jax.random.normal(kb, n.shape,
+                                                          jnp.float32)
+                    n_eff = n * ia
+                    Th = transport.demodulate(y_l, p2_l, n_eff, 1.0,
+                                              backend=backend)
+                    bad = gsum(jnp.sum((~jnp.isfinite(Th))
+                                       .astype(jnp.float32)))
+                    ok = bad == 0.0
+                    if guard.snr_floor_db is not None:
+                        thr = 10.0 ** (guard.snr_floor_db / 10.0)
+                        sig = gsum(jnp.sum(y_l * y_l))
+                        npw = gsum(jnp.sum(n_eff * n_eff))
+                        ok &= sig >= thr * npw
+                    return Th, ia, ok
+
+                Theta_p, inv_alpha, ok = epi(noise_key, jnp.int32(0),
+                                             has_burst)
+                retries_l = jnp.zeros((), jnp.int32)
+                # statically unrolled retries: SPMD-safe (no collective in
+                # control flow), same keys/backoff a lazy loop would use
+                for a in range(1, guard.retries + 1):
+                    ka = jax.random.fold_in(noise_key, _fg.RETRY_SALT + a)
+                    Th_a, ia_a, ok_a = epi(ka, jnp.int32(a), False)
+                    take = ~ok
+                    Theta_p = jnp.where(take, Th_a, Theta_p)
+                    inv_alpha = jnp.where(take, ia_a, inv_alpha)
+                    retries_l = retries_l + take.astype(jnp.int32)
+                    ok = jnp.where(take, ok_a, ok)
+                healthy_l = ok
+            else:
+                if acfg.power_control:
+                    inv_alpha = transport.inv_alpha_from_energy(
+                        energy, budget, min_reduce_fn=mrf, mask=mask)
+                else:
+                    inv_alpha = jnp.asarray(1.0, jnp.float32)
+                noise_re = transport.matched_filter_noise_re(
+                    noise_key, y_l.shape, ccfg)
+                if has_burst:
+                    kb = jax.random.fold_in(noise_key, _fg.BURST_SALT)
+                    noise_re = noise_re + burst * jax.random.normal(
+                        kb, noise_re.shape, jnp.float32)
+                Theta_p = transport.demodulate(y_l, p2_l, noise_re,
+                                               inv_alpha, backend=backend)
             h_wkr = h if h_tx is None else h_tx
         else:
             h_wkr = h if h_tx is None else h_tx
@@ -534,10 +717,17 @@ def ota_tree_round_shard_local(theta: PyTree, lam_p: Complex, h_p: Complex,
                 reduce_fn=None if local_w
                 else (lambda x: jax.lax.psum(jnp.sum(x, axis=0), daxes)),
                 mask=mask, backend=backend)
+        # duals update from the worker's TRUE planes (theta_p, not the
+        # faulted theta_tx); `mask` already excludes evicted offenders
         lam_new = transport.dual_update(lam, h_wkr, theta_p, Theta_p, rho,
                                         backend=backend)
         if mask is not None:
             lam_new = cplx.cwhere(mask[:, None], lam_new, lam)
+        if healthy_l is not None:
+            lam_new = cplx.cwhere(healthy_l, lam_new, lam)
+        if evicted_l is not None:
+            lam_new = cplx.cwhere(evicted_l[:, None],
+                                  cplx.czero(lam_new.re.shape), lam_new)
         if sspec.has_padding:
             # padding never re-enters the air: Θ is garbage there, so the
             # dual update would otherwise seed non-zero λ at padded slots
@@ -546,7 +736,14 @@ def ota_tree_round_shard_local(theta: PyTree, lam_p: Complex, h_p: Complex,
                                   cplx.czero(lam_new.re.shape))
         seg = _rep_seg_psum(sspec, Theta_p, j, model_axis)
         Theta_tree = unpack_shard_local(sspec, Theta_p, seg)
-        return Theta_tree, lam_new, inv_alpha
+        out = [Theta_tree, lam_new, inv_alpha]
+        if has_stale:
+            out.append(stale_next)
+        if has_guard:
+            out += [healthy_l, retries_l]
+            if guard.evicts:
+                out.append(evicted_l)
+        return tuple(out)
 
     theta_specs = _shard_theta_specs(sspec, wentry, model_axis,
                                      worker_dim=True)
@@ -555,21 +752,63 @@ def ota_tree_round_shard_local(theta: PyTree, lam_p: Complex, h_p: Complex,
     buf_spec = P(wentry, model_axis)
     in_specs = (theta_specs, buf_spec, buf_spec, P(),
                 P(wentry) if has_mask else P(),
-                buf_spec if has_htx else P())
-    out_specs = (Theta_specs, buf_spec, P())
-    Theta_new, lam_new_p, inv_alpha = shard_map(
-        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                buf_spec if has_htx else P(),
+                buf_spec if has_stale else P(),
+                P(wentry) if has_stale else P(),
+                P(wentry) if has_corrupt else P(),
+                P(), P())
+    out_specs = [Theta_specs, buf_spec, P()]
+    if has_stale:
+        out_specs.append(buf_spec)
+    if has_guard:
+        out_specs += [P(), P()]
+        if guard.evicts:
+            out_specs.append(P(wentry))
+    outs = shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=tuple(out_specs),
         check_rep=False)(
         theta, lam_p, h_p, key,
-        mask if has_mask else jnp.zeros((), jnp.float32),
-        h_tx_p if has_htx else jnp.zeros((), jnp.float32))
+        mask if has_mask else dummy,
+        h_tx_p if has_htx else dummy,
+        stale if has_stale else dummy,
+        rf.straggler if has_stale else dummy,
+        rf.corrupt if has_corrupt else dummy,
+        rf.snapshot_due if has_stale else dummy,
+        rf.burst_std if has_burst else dummy)
+    outs = list(outs)
+    Theta_new, lam_new_p, inv_alpha = outs[:3]
+    outs = outs[3:]
+    aux = {}
+    healthy = evicted = None
+    guard_metrics = {}
+    if has_stale:
+        aux["stale"] = outs.pop(0)
+    if has_guard:
+        healthy = outs.pop(0)
+        guard_metrics["guard_healthy"] = healthy.astype(jnp.float32)
+        guard_metrics["guard_retries"] = outs.pop(0).astype(jnp.float32)
+        if guard.evicts:
+            evicted = outs.pop(0)
+            aux["evicted"] = evicted
+            guard_metrics["guard_evicted"] = jnp.sum(
+                evicted.astype(jnp.float32))
 
-    metrics = {"inv_alpha": jnp.asarray(inv_alpha)}
+    metrics = {"inv_alpha": jnp.asarray(inv_alpha), **guard_metrics}
     if mask is not None:
         metrics["participation"] = jnp.mean(mask.astype(jnp.float32))
-        if Theta_prev is not None:
-            keep = jnp.any(mask)
-            Theta_new = jax.tree.map(
-                lambda new, old: jnp.where(keep, new, old.astype(new.dtype)),
-                Theta_new, Theta_prev)
+    keep = None
+    if mask is not None or evicted is not None:
+        active = (jnp.ones(lam_p.re.shape[:1], bool) if mask is None
+                  else mask)
+        if evicted is not None:
+            active = active & ~evicted
+        keep = jnp.any(active)
+    if healthy is not None:
+        keep = healthy if keep is None else keep & healthy
+    if keep is not None and Theta_prev is not None:
+        Theta_new = jax.tree.map(
+            lambda new, old: jnp.where(keep, new, old.astype(new.dtype)),
+            Theta_new, Theta_prev)
+    if aux:
+        metrics["_fault_aux"] = aux
     return Theta_new, lam_new_p, metrics

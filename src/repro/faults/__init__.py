@@ -1,0 +1,21 @@
+"""Fault tolerance for OTA rounds: injection → detection → recovery.
+
+* :mod:`repro.faults.plan` — :class:`FaultPlan`/:class:`FaultState`: PRNG-
+  keyed, scan-compatible injection of worker crashes, straggler staleness,
+  corrupted uplink planes, and PS burst interference.
+* :mod:`repro.faults.guards` — :class:`GuardConfig` and the lax.cond-gated
+  round health guard (Θ finiteness + receive-SNR floor) with the
+  skip / retransmit / evict degradation cascade.
+"""
+from repro.faults.guards import (GuardConfig, GuardedRound,
+                                 guarded_ota_round, guarded_receive)
+from repro.faults.plan import (FAULT_SALT, FaultPlan, FaultState,
+                               RoundFaults, apply_uplink, commit, draw,
+                               init)
+
+__all__ = [
+    "FAULT_SALT", "FaultPlan", "FaultState", "RoundFaults",
+    "GuardConfig", "GuardedRound",
+    "apply_uplink", "commit", "draw", "init",
+    "guarded_ota_round", "guarded_receive",
+]

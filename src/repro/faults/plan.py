@@ -1,0 +1,219 @@
+"""Fault injection for OTA rounds: crash, straggle, corrupt, interfere.
+
+A :class:`FaultPlan` is a *static* (frozen, hashable) description of the
+fault process; the evolving part lives in a :class:`FaultState` pytree that
+threads through the round loop exactly like ``PhyState`` — every draw is
+keyed off the round's PRNG key via ``fold_in`` salts, so fault trajectories
+are reproducible, scan-compatible, and bitwise invariant under
+checkpoint/resume (the same global round index always sees the same draw).
+
+Fault taxonomy (composable with every ``repro.phy`` scenario preset):
+
+* **crash / dropout** — permanent departure.  Distinct from a scenario
+  fading mask: a deep-faded worker comes back next coherence block, a
+  crashed worker never does (``FaultState.alive`` is monotone decreasing).
+  Crashes come from a per-round hazard (``crash_prob``, active from
+  ``crash_start``, capped by ``max_crash_frac``) and/or a deterministic
+  ``crash_at=((round, worker), ...)`` schedule.  The last live worker is
+  never hazard-crashed (an empty round is a scenario/guard concern).
+* **straggler staleness** — a straggling worker uploads the model it held
+  at the last snapshot round: at round ``r = m·delay + j`` it transmits the
+  round-``m·delay`` planes (staleness ``j ∈ [0, delay)``), implementing the
+  "uploads its round-k model at round k+d" failure mode without buffering
+  ``delay`` copies (one ``(W, D)`` snapshot, refreshed every ``delay``
+  rounds).
+* **corrupted uplink** — a worker's transmitted planes are replaced by
+  NaN / Inf or scaled by ``spike_gain`` (``corrupt_mode``).  Transient rows
+  come from ``corrupt_prob``; workers ``[0, nan_workers)`` corrupt *every*
+  upload (the persistent-byzantine case eviction exists for).
+* **burst interference** — with probability ``burst_prob`` a round's PS
+  front-end picks up an interference burst of std ``burst_std`` at the
+  matched-filter output (added to the effective noise plane, so it is
+  scaled by ``1/α`` exactly like receiver noise and degrades the measured
+  receive SNR the guard checks).
+
+Faults apply to the *uplinked* planes (what the air sees), never to the
+worker's local state: a corrupt worker still holds a healthy θ locally and
+keeps training after its bad round is evicted or skipped.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = Any
+
+#: fold_in salt separating the fault process from batch/noise/channel keys
+FAULT_SALT = 0x0FA17
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Static fault-process description (hashable -> safe to close over
+    in jit).  All-zero defaults mean "no faults of that kind"."""
+
+    crash_prob: float = 0.0          # per-round per-worker hazard
+    crash_start: int = 0             # first round the hazard is active
+    max_crash_frac: float = 0.5      # hazard stops once this frac is dead
+    crash_at: Tuple[Tuple[int, int], ...] = ()   # ((round, worker), ...)
+    straggler_prob: float = 0.0      # per-round per-worker staleness
+    straggler_delay: int = 4         # snapshot cadence; staleness < delay
+    nan_workers: int = 0             # workers [0, k) corrupt every round
+    corrupt_prob: float = 0.0        # transient corruption hazard
+    corrupt_mode: str = "nan"        # "nan" | "inf" | "spike"
+    spike_gain: float = 1e4          # gain for corrupt_mode="spike"
+    burst_prob: float = 0.0          # per-round PS interference hazard
+    burst_std: float = 10.0          # interference std at matched filter
+
+    def __post_init__(self):
+        if self.corrupt_mode not in ("nan", "inf", "spike"):
+            raise ValueError(f"unknown corrupt_mode {self.corrupt_mode!r}")
+        if self.straggler_prob > 0 and self.straggler_delay < 1:
+            raise ValueError("straggler_delay must be >= 1")
+
+    @property
+    def has_stragglers(self) -> bool:
+        return self.straggler_prob > 0.0
+
+    @property
+    def has_corruption(self) -> bool:
+        return self.corrupt_prob > 0.0 or self.nan_workers > 0
+
+    @property
+    def has_bursts(self) -> bool:
+        return self.burst_prob > 0.0
+
+
+class FaultState(NamedTuple):
+    """Evolving fault process state (a pytree leaf set decided statically
+    by the plan, like ``PhyState``'s None-elided fields)."""
+
+    alive: Array                 # (W,) bool, monotone decreasing
+    stale: Optional[Array]       # (W, D) f32 snapshot, None: stragglers off
+    round: Array                 # () int32 global round counter
+    n_evicted: Array             # () int32 guard evictions so far
+
+
+class RoundFaults(NamedTuple):
+    """One round's fault draw — everything :func:`apply_uplink` and the
+    transport need, with no dependence on θ (so it can be drawn in the
+    trainer and sliced per shard like the participation mask)."""
+
+    alive: Array                 # (W,) bool, post-crash
+    straggler: Optional[Array]   # (W,) bool
+    corrupt: Optional[Array]     # (W,) bool
+    snapshot_due: Optional[Array]  # () bool: refresh the stale buffer
+    burst_std: Optional[Array]   # () f32, 0.0 on burst-free rounds
+
+
+def init(plan: FaultPlan, n_workers: int, d: int) -> FaultState:
+    """Fresh state: everyone alive, stale buffer zeroed (round 0 is always
+    a snapshot round, so the zeros are never uploaded)."""
+    stale = (jnp.zeros((n_workers, d), jnp.float32)
+             if plan.has_stragglers else None)
+    return FaultState(alive=jnp.ones((n_workers,), bool), stale=stale,
+                      round=jnp.zeros((), jnp.int32),
+                      n_evicted=jnp.zeros((), jnp.int32))
+
+
+def draw(plan: FaultPlan, key: Array, st: FaultState,
+         ) -> Tuple[RoundFaults, FaultState, dict]:
+    """Draw one round's faults.  Pure in ``(key, st)`` — θ-free, so the
+    same call works for the flat, packed, and shard-local trainers (the
+    (W,) flags are sliced per shard exactly like the scenario mask).
+
+    Returns ``(rf, st_mid, metrics)``; ``st_mid`` has the post-crash
+    ``alive`` and the bumped round counter but NOT the snapshot refresh or
+    evictions (those land in :func:`apply_uplink` / :func:`commit`).
+    """
+    W = st.alive.shape[0]
+    r = st.round
+    kc, ks, kx, kb = jax.random.split(jax.random.fold_in(key, FAULT_SALT), 4)
+
+    crashed = jnp.zeros((W,), bool)
+    if plan.crash_prob > 0.0:
+        hazard = ((jax.random.uniform(kc, (W,)) < plan.crash_prob)
+                  & (r >= plan.crash_start))
+        # coarse cap: no NEW hazard crashes once the dead fraction is hit
+        dead = W - jnp.sum(st.alive.astype(jnp.int32))
+        room = dead < jnp.int32(plan.max_crash_frac * W)
+        crashed |= hazard & room
+    for rr, ww in plan.crash_at:
+        crashed |= (r == rr) & (jnp.arange(W) == ww)
+    alive = st.alive & ~crashed
+    # never hazard-crash the last live worker
+    alive = jnp.where(jnp.any(alive), alive, st.alive)
+
+    straggler = None
+    snapshot_due = None
+    if plan.has_stragglers:
+        straggler = (jax.random.uniform(ks, (W,)) < plan.straggler_prob)
+        snapshot_due = (r % plan.straggler_delay) == 0
+
+    corrupt = None
+    if plan.has_corruption:
+        corrupt = jax.random.uniform(kx, (W,)) < plan.corrupt_prob
+        corrupt |= jnp.arange(W) < plan.nan_workers
+
+    burst = None
+    if plan.has_bursts:
+        hit = jax.random.uniform(kb, ()) < plan.burst_prob
+        burst = jnp.where(hit, plan.burst_std, 0.0).astype(jnp.float32)
+
+    rf = RoundFaults(alive=alive, straggler=straggler, corrupt=corrupt,
+                     snapshot_due=snapshot_due, burst_std=burst)
+    st_mid = st._replace(alive=alive, round=r + 1)
+    f32 = lambda x: jnp.sum(x.astype(jnp.float32))
+    metrics = {"fault_alive": f32(alive)}
+    if straggler is not None:
+        metrics["fault_stragglers"] = f32(straggler & alive)
+    if corrupt is not None:
+        metrics["fault_corrupt"] = f32(corrupt & alive)
+    if burst is not None:
+        metrics["fault_burst"] = (burst > 0).astype(jnp.float32)
+    return rf, st_mid, metrics
+
+
+def apply_uplink(plan: FaultPlan, rf: RoundFaults, theta_p: Array,
+                 stale: Optional[Array],
+                 ) -> Tuple[Array, Optional[Array]]:
+    """Substitute one round's uplinked planes: snapshot-refresh the stale
+    buffer, swap straggler rows for it, then corrupt.  Row-elementwise over
+    the packed axis, so it runs unchanged inside ``shard_map`` on a
+    ``(W, d_local)`` slice (with ``stale`` sharded like λ and the (W,)
+    flags sliced like the mask).  Crashed rows are untouched — they simply
+    never transmit (the participation mask handles that).
+    """
+    t = theta_p
+    stale_next = stale
+    if rf.straggler is not None:
+        if stale is None:
+            raise ValueError("straggler faults need a stale buffer "
+                             "(FaultState.stale) — got None")
+        stale_next = jnp.where(rf.snapshot_due, theta_p, stale)
+        t = jnp.where(rf.straggler[:, None], stale_next, t)
+    if rf.corrupt is not None:
+        if plan.corrupt_mode == "spike":
+            bad = t * plan.spike_gain
+        else:
+            fill = jnp.nan if plan.corrupt_mode == "nan" else jnp.inf
+            bad = jnp.full_like(t, fill)
+        t = jnp.where(rf.corrupt[:, None], bad, t)
+    return t, stale_next
+
+
+def commit(st_mid: FaultState, stale_next: Optional[Array],
+           evicted: Optional[Array]) -> FaultState:
+    """Fold a round's outcomes back into the state: the refreshed stale
+    buffer and any guard evictions (an evicted worker is permanently
+    departed — same as a crash, but detected rather than injected)."""
+    st = st_mid if stale_next is None else st_mid._replace(stale=stale_next)
+    if evicted is None:
+        return st
+    ev = evicted & st.alive
+    return st._replace(alive=st.alive & ~ev,
+                       n_evicted=st.n_evicted
+                       + jnp.sum(ev.astype(jnp.int32)))

@@ -87,7 +87,9 @@ def build_train_spec(arch: str, mesh: Mesh, *, multi_pod: bool,
                      transport_backend: Optional[str] = None,
                      train_driver: str = "scan",
                      scenario: Optional[str] = None,
-                     packed_uplink: Optional[bool] = None) -> DryRunSpec:
+                     packed_uplink: Optional[bool] = None,
+                     faults: Optional[Any] = None,
+                     guard: Optional[Any] = None) -> DryRunSpec:
     """``transport_backend`` ("jnp" | "pallas" | None = REPRO_USE_PALLAS
     env var), ``train_driver`` ("scan" | "loop"), ``scenario`` (a
     ``repro.phy`` preset; None = legacy block fading — scenarios now run on
@@ -96,7 +98,10 @@ def build_train_spec(arch: str, mesh: Mesh, *, multi_pod: bool,
     (None/True = packed — shard-local under model-parallel; False = the
     per-leaf leafwise oracle, the baseline the CI reshard assert compares
     against) are per-experiment fields threaded into the trainer /
-    recorded in meta — not env-only."""
+    recorded in meta — not env-only.  ``faults``/``guard`` (a
+    ``repro.faults`` FaultPlan / GuardConfig) ride the replicated packed
+    path and add the per-worker fault-tracker state (``flt``) to the
+    sharded train-state contract."""
     if train_driver not in ("scan", "loop"):
         raise ValueError(f"unknown train driver {train_driver!r}")
     shp = SHAPES["train_4k"]
@@ -115,6 +120,9 @@ def build_train_spec(arch: str, mesh: Mesh, *, multi_pod: bool,
         if scenario is not None:
             raise ValueError("phy scenarios are a replicated-mode feature; "
                              f"{arch} trains sketched")
+        if faults is not None or guard is not None:
+            raise ValueError("faults/guards are a replicated-mode feature; "
+                             f"{arch} trains sketched")
         W = 8
         flcfg = FLConfig(mode="sketched", n_workers=W, local_steps=1,
                          local_lr=1e-3, sketch_ratio=256,
@@ -125,7 +133,7 @@ def build_train_spec(arch: str, mesh: Mesh, *, multi_pod: bool,
         flcfg = FLConfig(mode="replicated", n_workers=W, local_steps=1,
                          local_lr=1e-3, transport_backend=transport_backend,
                          packed_uplink=packed_uplink,
-                         scenario=scenario)
+                         scenario=scenario, faults=faults, guard=guard)
         bw = gbatch // W
     acfg = AdmmConfig(rho=0.5, flip_on_change=False)
     ccfg = ChannelConfig(n_workers=W, snr_db=40.0)
@@ -187,6 +195,12 @@ def build_train_spec(arch: str, mesh: Mesh, *, multi_pod: bool,
         else:
             chan_spec = type(state_sds.chan)(
                 h=SH.tree_pspecs(state_sds.chan.h, **worker), age=P())
+        # FaultState: (W,) alive + () counters worker-major like the masks;
+        # the (W, D | d_pad) straggler snapshot shards like the λ/h planes
+        flt_spec = None if state_sds.flt is None else jax.tree.map(
+            lambda l: (pspec_plane if l.ndim == 2 else
+                       P(wspec) if l.ndim == 1 else P()),
+            state_sds.flt)
         state_spec = type(state_sds)(
             theta=SH.tree_pspecs(state_sds.theta, **worker),
             lam=lam_spec,
@@ -198,6 +212,7 @@ def build_train_spec(arch: str, mesh: Mesh, *, multi_pod: bool,
                 nu=SH.tree_pspecs(state_sds.opt.nu, **worker),
                 count=P()),
             step=P(),
+            flt=flt_spec,
         )
         batch_spec = {k: P(*((wspec,) + (None,) * (len(v.shape) - 1)))
                       for k, v in batch.items()}
@@ -213,6 +228,7 @@ def build_train_spec(arch: str, mesh: Mesh, *, multi_pod: bool,
                   transport_backend=transport_backend,
                   train_driver=train_driver, scenario=scenario,
                   packed_uplink=packed_uplink,
+                  faulted=faults is not None, guarded=guard is not None,
                   shard_local=bool(not sketched and model_parallel
                                    and packed_uplink is not False)),
     )
@@ -298,7 +314,9 @@ def build_spec(arch: str, shape_name: str, mesh: Mesh, *, multi_pod: bool,
                transport_backend: Optional[str] = None,
                train_driver: str = "scan",
                scenario: Optional[str] = None,
-               packed_uplink: Optional[bool] = None) -> DryRunSpec:
+               packed_uplink: Optional[bool] = None,
+               faults: Optional[Any] = None,
+               guard: Optional[Any] = None) -> DryRunSpec:
     kind = SHAPES[shape_name]["kind"]
     if kind == "train":
         return build_train_spec(arch, mesh, multi_pod=multi_pod,
@@ -306,7 +324,8 @@ def build_spec(arch: str, shape_name: str, mesh: Mesh, *, multi_pod: bool,
                                 transport_backend=transport_backend,
                                 train_driver=train_driver,
                                 scenario=scenario,
-                                packed_uplink=packed_uplink)
+                                packed_uplink=packed_uplink,
+                                faults=faults, guard=guard)
     if kind == "prefill":
         return build_prefill_spec(arch, mesh, multi_pod=multi_pod,
                                   reduced=reduced)

@@ -81,6 +81,45 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--log-every", type=int, default=10)
+    # --- fault injection / round health guard (repro.faults) ---------------
+    ap.add_argument("--crash-prob", type=float, default=0.0,
+                    help="per-round per-worker permanent-crash hazard")
+    ap.add_argument("--crash-at", default=None,
+                    help="deterministic crash schedule 'round:worker,...' "
+                         "(e.g. '10:0,25:3')")
+    ap.add_argument("--straggler-prob", type=float, default=0.0,
+                    help="per-round probability a worker uploads its stale "
+                         "snapshot instead of the fresh model")
+    ap.add_argument("--straggler-delay", type=int, default=4)
+    ap.add_argument("--nan-workers", type=int, default=0,
+                    help="workers [0,k) corrupt every upload (persistent "
+                         "byzantine rows the evict policy removes)")
+    ap.add_argument("--corrupt-prob", type=float, default=0.0)
+    ap.add_argument("--corrupt-mode", default="nan",
+                    choices=["nan", "inf", "spike"])
+    ap.add_argument("--burst-prob", type=float, default=0.0,
+                    help="per-round PS interference-burst hazard")
+    ap.add_argument("--burst-std", type=float, default=10.0)
+    ap.add_argument("--guard", default=None,
+                    choices=["skip", "retransmit", "evict",
+                             "evict-retransmit"],
+                    help="round health guard policy (default: no guard)")
+    ap.add_argument("--snr-floor-db", type=float, default=None,
+                    help="guard receive-SNR floor (default: finiteness "
+                         "check only)")
+    ap.add_argument("--max-retries", type=int, default=2)
+    ap.add_argument("--power-backoff", type=float, default=2.0,
+                    help="per-retry transmit power ramp gamma")
+    # --- durable progress (checkpoint/resume) ------------------------------
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="directory for periodic full-state snapshots "
+                         "(round_NNNNNNNN.npz)")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="snapshot cadence in rounds (scan driver: at the "
+                         "first block boundary crossing each multiple)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest snapshot in "
+                         "--checkpoint-dir; bitwise the uninterrupted run")
     args = ap.parse_args()
 
     if args.ota_block_rows is not None:
@@ -98,6 +137,34 @@ def main() -> None:
         raise SystemExit("--scenario requires --mode replicated (the "
                          "scenario engine runs over the packed (W, D) "
                          "replicated state)")
+
+    faults = guard = None
+    crash_at = ()
+    if args.crash_at:
+        crash_at = tuple(tuple(int(x) for x in pair.split(":"))
+                         for pair in args.crash_at.split(","))
+    if (args.crash_prob > 0 or crash_at or args.straggler_prob > 0
+            or args.nan_workers > 0 or args.corrupt_prob > 0
+            or args.burst_prob > 0):
+        from repro.faults import FaultPlan
+        faults = FaultPlan(
+            crash_prob=args.crash_prob, crash_at=crash_at,
+            straggler_prob=args.straggler_prob,
+            straggler_delay=args.straggler_delay,
+            nan_workers=args.nan_workers, corrupt_prob=args.corrupt_prob,
+            corrupt_mode=args.corrupt_mode, burst_prob=args.burst_prob,
+            burst_std=args.burst_std)
+    if args.guard is not None:
+        from repro.faults import GuardConfig
+        guard = GuardConfig(policy=args.guard,
+                            snr_floor_db=args.snr_floor_db,
+                            max_retries=args.max_retries,
+                            power_backoff=args.power_backoff)
+    if (faults is not None or guard is not None) \
+            and args.mode != "replicated":
+        raise SystemExit("fault injection / round guards require "
+                         "--mode replicated")
+
     flcfg = FLConfig(mode=args.mode, n_workers=W,
                      local_steps=args.local_steps, local_lr=args.local_lr,
                      transport_backend=args.backend,
@@ -107,7 +174,8 @@ def main() -> None:
                      ota_fused=None if args.ota_fused is None
                      else args.ota_fused == "on",
                      ota_worker_chunk=args.ota_worker_chunk,
-                     ota_block_cols=args.ota_block_cols)
+                     ota_block_cols=args.ota_block_cols,
+                     faults=faults, guard=guard)
     acfg = AdmmConfig(rho=args.rho, flip_on_change=False)
     ccfg = ChannelConfig(n_workers=W, snr_db=args.snr_db,
                          coherence_iters=args.coherence)
@@ -122,6 +190,28 @@ def main() -> None:
     # zeros-initialised leaves may alias one buffer; donation needs them
     # distinct (only matters for the very first execute)
     st = jax.tree.map(jnp.array, st)
+
+    r0 = 0
+    if args.resume and args.checkpoint_dir:
+        from repro.checkpoint import latest_round, restore, round_path
+        latest = latest_round(args.checkpoint_dir)
+        if latest is not None:
+            st = restore(round_path(args.checkpoint_dir, latest), st)
+            r0 = latest
+            print(f"resumed from round {r0} "
+                  f"({round_path(args.checkpoint_dir, latest)})", flush=True)
+
+    def maybe_checkpoint(stop: int, st, last: int) -> int:
+        """Snapshot the FULL train state (θ, λ, Θ, channel/fault state —
+        every PRNG input is re-derived from the global round index, so the
+        snapshot alone resumes bitwise)."""
+        if (args.checkpoint_dir and args.checkpoint_every > 0
+                and (stop - last >= args.checkpoint_every
+                     or stop == args.rounds)):
+            from repro.checkpoint import round_path, save as save_tree
+            save_tree(round_path(args.checkpoint_dir, stop), st)
+            return stop
+        return last
 
     def make_batch(data, kb):
         idx = jax.random.randint(kb, (W, args.batch), 0, data.shape[1])
@@ -144,12 +234,15 @@ def main() -> None:
     t0 = time.time()
     if args.driver == "scan":
         # batch sampling folded into the scan body: one dispatch per block
-        # instead of one per round.  Block = gcd(log_every, rounds) so every
-        # block has the SAME static length — one XLA compile even when
+        # instead of one per round.  Block = gcd(log_every, remaining) so
+        # every block has the SAME static length — one XLA compile even when
         # log_every doesn't divide rounds (a ragged tail block would force a
-        # second full compile of the scanned train_step).
+        # second full compile of the scanned train_step).  A fresh run
+        # (r0 = 0) keeps the historical gcd(log_every, rounds) blocks; batch
+        # and round keys fold in the GLOBAL round index, so a resumed run's
+        # shifted block boundaries change nothing about the math.
         import math
-        block = math.gcd(args.log_every, args.rounds)
+        block = max(1, math.gcd(args.log_every, args.rounds - r0))
 
         def block_body(data, s, r):
             batch = make_batch(data, jax.random.fold_in(key, 1000 + r))
@@ -161,17 +254,21 @@ def main() -> None:
             lambda d, s, rs: jax.lax.scan(
                 lambda ss, r: block_body(d, ss, r), s, rs),
             donate_argnums=(1,))
-        for start in range(0, args.rounds, block):
+        last = r0
+        for start in range(r0, args.rounds, block):
             st, ms = run_block(data, st, jnp.arange(start, start + block,
                                                     dtype=jnp.int32))
             log(start + block - 1, jax.tree.map(lambda x: x[-1], ms))
+            last = maybe_checkpoint(start + block, st, last)
     else:
         step = jax.jit(train_step, donate_argnums=(0,))
-        for r in range(args.rounds):
+        last = r0
+        for r in range(r0, args.rounds):
             batch = make_batch(data, jax.random.fold_in(key, 1000 + r))
             st, metrics = step(st, batch, jax.random.fold_in(key, 2000 + r))
             if r % args.log_every == 0 or r == args.rounds - 1:
                 log(r, metrics)
+            last = maybe_checkpoint(r + 1, st, last)
     dt = time.time() - t0
     print(f"done: {args.rounds} rounds in {dt:.1f}s "
           f"({dt / args.rounds:.2f}s/round)")

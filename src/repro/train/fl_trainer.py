@@ -66,18 +66,32 @@ def train_scan(algorithm, theta0: Array, local_solve: Callable,
                grad_fn: Callable, n_rounds: int, key: Array,
                eval_fn: Optional[Callable[[Array], Dict[str, Array]]] = None,
                eval_every: int = 1,
-               block_rounds: Optional[int] = None) -> History:
+               block_rounds: Optional[int] = None,
+               start_round: int = 0,
+               init_state=None,
+               checkpoint_dir: Optional[str] = None,
+               checkpoint_every: int = 0) -> History:
     """Scan-compiled driver: ≤ ``ceil(n_rounds / block_rounds)`` dispatches.
 
     ``block_rounds`` defaults to the algorithm's channel coherence block
     (``ccfg.coherence_iters``) so one dispatch spans exactly the rounds that
     share a fading realisation.
+
+    Durable progress: with ``checkpoint_dir`` + ``checkpoint_every > 0`` the
+    algorithm state is snapshotted (``checkpoint.np_checkpoint``) at every
+    block boundary that crosses a ``checkpoint_every`` multiple.  Resume by
+    passing the restored state as ``init_state`` and its round as
+    ``start_round`` (see :func:`resume_state`).  Every round's PRNG key is
+    ``fold_in(key, r + 1)`` of the GLOBAL round index, so a killed-and-
+    resumed history is bitwise the uninterrupted one, whatever block
+    boundaries either run used.
     """
-    st = algorithm.init(key, theta0)
+    st = algorithm.init(key, theta0) if init_state is None else init_state
     if block_rounds is None:
         ccfg = getattr(algorithm, "ccfg", None)
         block_rounds = ccfg.coherence_iters if ccfg is not None else 16
-    block_rounds = max(1, min(int(block_rounds), n_rounds, MAX_BLOCK_ROUNDS))
+    span = max(1, n_rounds - start_round)
+    block_rounds = max(1, min(int(block_rounds), span, MAX_BLOCK_ROUNDS))
 
     @jax.jit
     def chunk_fn(st, rounds, mask):
@@ -91,7 +105,8 @@ def train_scan(algorithm, theta0: Array, local_solve: Callable,
     do_eval = _eval_rounds(n_rounds, eval_every) if eval_fn is not None \
         else [False] * n_rounds
     hist = History()
-    for start in range(0, n_rounds, block_rounds):
+    last_ckpt = start_round
+    for start in range(start_round, n_rounds, block_rounds):
         stop = min(start + block_rounds, n_rounds)
         rounds = jnp.arange(start, stop, dtype=jnp.int32)
         mask = jnp.asarray(do_eval[start:stop])
@@ -105,7 +120,30 @@ def train_scan(algorithm, theta0: Array, local_solve: Callable,
                     if "accuracy" in evals:
                         hist.accuracy.append(
                             float(np.asarray(evals["accuracy"])[i]))
+        if (checkpoint_dir and checkpoint_every > 0
+                and (stop - last_ckpt >= checkpoint_every
+                     or stop == n_rounds)):
+            from repro.checkpoint import round_path, save
+            save(round_path(checkpoint_dir, stop), st)
+            last_ckpt = stop
     return hist
+
+
+def resume_state(algorithm, theta0: Array, key: Array, checkpoint_dir: str):
+    """Restore the latest ``round_*.npz`` snapshot from ``checkpoint_dir``.
+
+    Returns ``(state, round)`` — feed them to :func:`train_scan` as
+    ``init_state``/``start_round`` — or ``(None, 0)`` when the directory
+    holds no checkpoint (fresh start).  The restore target structure comes
+    from ``algorithm.init``, so shapes/dtypes are validated leaf by leaf.
+    """
+    from repro.checkpoint import latest_round, restore, round_path
+    r = latest_round(checkpoint_dir)
+    if r is None:
+        return None, 0
+    like = jax.eval_shape(lambda k, t: algorithm.init(k, t), key, theta0)
+    like = jax.tree.map(lambda sd: np.zeros(sd.shape, sd.dtype), like)
+    return restore(round_path(checkpoint_dir, r), like), r
 
 
 def train_loop(algorithm, theta0: Array, local_solve: Callable,
@@ -145,7 +183,9 @@ def train(algorithm, theta0: Array, local_solve: Callable, grad_fn: Callable,
           n_rounds: int, key: Array,
           eval_fn: Optional[Callable[[Array], Dict[str, Array]]] = None,
           eval_every: int = 1, driver: str = "scan",
-          block_rounds: Optional[int] = None) -> History:
+          block_rounds: Optional[int] = None,
+          checkpoint_dir: Optional[str] = None,
+          checkpoint_every: int = 0, resume: bool = False) -> History:
     """Run ``n_rounds`` of federated optimisation.
 
     Args:
@@ -155,10 +195,21 @@ def train(algorithm, theta0: Array, local_solve: Callable, grad_fn: Callable,
       eval_fn: global-model evaluator -> {"loss": ..., ("accuracy": ...)}.
         Must be jit-traceable under the scan driver (all shipped evals are).
       driver: "scan" (compiled coherence blocks) or "loop" (reference).
+      checkpoint_dir/checkpoint_every: scan-driver durable progress (state
+        snapshots at block boundaries); ``resume=True`` restarts from the
+        latest snapshot in ``checkpoint_dir`` — bitwise the uninterrupted
+        run.
     """
     if driver == "scan":
+        init_state, start_round = None, 0
+        if resume and checkpoint_dir:
+            init_state, start_round = resume_state(algorithm, theta0, key,
+                                                   checkpoint_dir)
         return train_scan(algorithm, theta0, local_solve, grad_fn, n_rounds,
-                          key, eval_fn, eval_every, block_rounds)
+                          key, eval_fn, eval_every, block_rounds,
+                          start_round=start_round, init_state=init_state,
+                          checkpoint_dir=checkpoint_dir,
+                          checkpoint_every=checkpoint_every)
     if driver == "loop":
         return train_loop(algorithm, theta0, local_solve, grad_fn, n_rounds,
                           key, eval_fn, eval_every)

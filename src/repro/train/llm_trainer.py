@@ -108,6 +108,16 @@ class FLConfig:
     ota_worker_chunk: Optional[int] = None
     #: fused-kernel column tile; None defers to REPRO_OTA_BLOCK_COLS
     ota_block_cols: Optional[int] = None
+    #: ``repro.faults.FaultPlan`` — fault injection (worker crash /
+    #: straggler staleness / corrupted uplink / burst interference),
+    #: replicated mode with the packed state layout.  None keeps the
+    #: fault-free trainer bit-for-bit (the fault key is a ``fold_in``
+    #: side-branch of the round key, never a ``split``).
+    faults: Optional[Any] = None
+    #: ``repro.faults.GuardConfig`` — round health guard (Θ finiteness +
+    #: receive-SNR floor, skip/retransmit/evict cascade) compiled into the
+    #: fused receive.  A healthy guarded round is bitwise the unguarded one.
+    guard: Optional[Any] = None
 
 
 def _local_opt(flcfg: FLConfig):
@@ -151,6 +161,14 @@ def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
                             slots_per_round=flcfg.slots_per_round,
                             backend=flcfg.transport_backend)
 
+    fplan, gcfg = flcfg.faults, flcfg.guard
+    if fplan is not None or gcfg is not None:
+        if flcfg.packed_uplink is False:
+            raise ValueError(
+                "FLConfig.faults/guard apply to the packed uplink and "
+                "require the packed state layout (packed_uplink != False)")
+        from repro import faults as _faults
+
     def _packed_state() -> bool:
         """Resolved once at build time; ``train_step`` then reads the layout
         from the state structure itself (so init and step can't disagree).
@@ -179,6 +197,7 @@ def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
         Theta = jax.tree.map(
             lambda l: jnp.mean(l.astype(jnp.float32), 0).astype(l.dtype),
             theta)
+        flt = None
         if _packed_state():
             # λ/h live packed between rounds: no per-round pack_cplx concat.
             # Shard-local: the packed axis is d_pad wide (per-shard slices
@@ -188,12 +207,16 @@ def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
             lam = cplx.czero((W, d), jnp.float32)
             chan = scn.init(kc, W, d) if scn is not None \
                 else init_channel_packed(kc, W, d)
+            if fplan is not None:
+                # straggler snapshots live in the same packed layout as λ
+                flt = _faults.init(fplan, W, d)
         else:
             lam = jax.tree.map(
                 lambda l: cplx.czero(l.shape, jnp.float32), theta)
             chan = init_channel_tree(kc, theta)
         return TreeFLState(theta=theta, lam=lam, Theta=Theta, chan=chan,
-                           opt=opt.init(theta), step=jnp.zeros((), jnp.int32))
+                           opt=opt.init(theta), step=jnp.zeros((), jnp.int32),
+                           flt=flt)
 
     def loss_w(p: PyTree, b: PyTree) -> Array:
         l, _ = model.loss(p, b)
@@ -248,6 +271,19 @@ def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
             chan, _changed = step_channel_tree(kc, state.chan, ccfg)
             lam_tree, h_tree = state.lam, chan.h
 
+        faults_arg = None
+        fmetrics = {}
+        flt_mid = state.flt
+        if fplan is not None:
+            # fold_in side-branch of the ROUND key: the fault-free kc/kn
+            # schedule (and so every fault-free bit) is untouched
+            kf = jax.random.fold_in(key, _faults.FAULT_SALT)
+            rf, flt_mid, fmetrics = _faults.draw(fplan, kf, state.flt)
+            mask = rf.alive if mask is None else mask & rf.alive
+            faults_arg = (fplan, rf, state.flt.stale)
+        if fplan is not None or gcfg is not None:
+            Theta_prev = state.Theta   # skip fallback / all-crashed keep
+
         def local_body(carry, _):
             theta, opt_state = carry
             losses, grads = jax.vmap(jax.value_and_grad(loss_w))(theta, batch)
@@ -266,23 +302,30 @@ def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
                 theta, state.lam, chan.h, kn, acfg, ccfg, sspec, mesh,
                 backend=flcfg.transport_backend, mask=mask, h_tx_p=h_tx_p,
                 Theta_prev=Theta_prev, fused=flcfg.ota_fused,
-                block_cols=flcfg.ota_block_cols)
+                block_cols=flcfg.ota_block_cols,
+                guard=gcfg, faults=faults_arg)
         elif packed:  # incl. every scenario: mask/h_tx/guard default to None
             Theta_f32, lam_new, m = ota_tree_round_packed_state(
                 theta, state.lam, chan.h, kn, acfg, ccfg, spec,
                 backend=flcfg.transport_backend, mask=mask, h_tx_p=h_tx_p,
                 Theta_prev=Theta_prev, fused=flcfg.ota_fused,
                 worker_chunk=flcfg.ota_worker_chunk,
-                block_cols=flcfg.ota_block_cols)
+                block_cols=flcfg.ota_block_cols,
+                guard=gcfg, faults=faults_arg)
         else:
             Theta_f32, lam_new, m = ota_tree_round(
                 theta, state.lam, chan.h, kn, acfg, ccfg,
                 backend=flcfg.transport_backend, packed=False)
+        flt_new = state.flt
+        if fplan is not None:
+            aux = m.pop("_fault_aux", {})
+            flt_new = _faults.commit(flt_mid, aux.get("stale"),
+                                     aux.get("evicted"))
         Theta_new = _zmap(lambda T, t: T.astype(t.dtype), Theta_f32, state.Theta)
         new_state = TreeFLState(theta=theta, lam=lam_new, Theta=Theta_new,
                                 chan=chan, opt=opt_state,
-                                step=state.step + 1)
-        metrics = {"loss": losses[-1], **m,
+                                step=state.step + 1, flt=flt_new)
+        metrics = {"loss": losses[-1], **m, **fmetrics,
                    "theta_drift": _tree_rms_gap(theta, Theta_new)}
         return new_state, metrics
 

@@ -1,0 +1,266 @@
+"""Durable progress (ISSUE 7): round-file checkpoints + bitwise kill/resume.
+
+* ``np_checkpoint`` round-trips every dtype — including bfloat16, which npz
+  cannot hold natively (saved as f32, re-cast to the prototype's dtype on
+  restore, losslessly) — and errors with the LEAF PATH on shape mismatches
+  or missing leaves.
+* ``round_path``/``latest_round`` give fixed-width ``round_NNNNNNNN.npz``
+  names whose lexical order is round order.
+* Kill/resume is bitwise: a faulted+guarded flat A-FADMM run checkpointed
+  at an arbitrary NON-block-aligned round and resumed reproduces the
+  uninterrupted run's final state and loss trace exactly (every per-round
+  PRNG key folds in the GLOBAL round index, so block boundaries are
+  immaterial).  Pinned at three levels: the ``train_scan`` driver, the
+  ``launch/train.py`` CLI, and a shard-local (1, 2)-mesh subprocess.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_round, restore, round_path, save
+from repro.core.aggregators import AFadmm
+from repro.faults import FaultPlan, GuardConfig
+from repro.train.fl_trainer import resume_state, train_scan
+
+from helpers import default_cfgs, make_linreg, make_solver
+
+KEY = jax.random.PRNGKey(0)
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# np_checkpoint primitives
+# ---------------------------------------------------------------------------
+
+def test_round_path_and_latest_round(tmp_path):
+    d = str(tmp_path)
+    assert latest_round(d) is None
+    assert latest_round(os.path.join(d, "nope")) is None  # missing dir
+    assert round_path(d, 7).endswith("round_00000007.npz")
+    for r in (2, 40, 7):
+        save(round_path(d, r), {"x": jnp.zeros(3)})
+    assert latest_round(d) == 40
+    # fixed width: lexical order == round order
+    names = sorted(f for f in os.listdir(d) if f.endswith(".npz"))
+    assert names == ["round_00000002.npz", "round_00000007.npz",
+                     "round_00000040.npz"]
+
+
+def test_bf16_roundtrip_is_lossless(tmp_path):
+    """npz can't hold ml_dtypes: bf16 is saved as f32 and re-cast to the
+    prototype dtype on restore — exact, since bf16 -> f32 is an embedding."""
+    path = str(tmp_path / "ck.npz")
+    tree = {"w": (jnp.arange(37, dtype=jnp.bfloat16) - 11.0) / 3.0,
+            "b": jnp.float32(1.5),
+            "n": jnp.arange(4, dtype=jnp.int32),
+            "m": jnp.array([True, False])}
+    save(path, tree)
+    like = jax.tree.map(lambda a: np.zeros(a.shape, a.dtype), tree)
+    out = restore(path, like)
+    assert out["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(out["w"], np.float32),
+                                  np.asarray(tree["w"], np.float32))
+    for k in ("b", "n", "m"):
+        assert out[k].dtype == tree[k].dtype
+        np.testing.assert_array_equal(np.asarray(out[k]),
+                                      np.asarray(tree[k]))
+
+
+def test_restore_shape_mismatch_names_leaf(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    save(path, {"opt": {"mu": jnp.zeros(3)}})
+    bad = {"opt": {"mu": np.zeros(4, np.float32)}}
+    with pytest.raises(ValueError, match=r"opt\|mu"):
+        restore(path, bad)
+
+
+def test_restore_missing_leaf_names_leaf(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    save(path, {"a": jnp.zeros(2)})
+    with pytest.raises(KeyError, match="extra"):
+        restore(path, {"a": np.zeros(2, np.float32),
+                       "extra": np.zeros(1, np.float32)})
+
+
+# ---------------------------------------------------------------------------
+# bitwise kill/resume: train_scan driver (flat, faulted + guarded)
+# ---------------------------------------------------------------------------
+
+def _npz_equal(pa, pb):
+    with np.load(pa) as za, np.load(pb) as zb:
+        assert set(za.files) == set(zb.files)
+        for k in za.files:
+            np.testing.assert_array_equal(za[k], zb[k], err_msg=k)
+
+
+def test_scan_resume_bitwise_at_non_block_aligned_round(tmp_path):
+    """2k faulted rounds, killed at round 1337 (the coherence blocks are 10
+    rounds, so 1337 is NOT a boundary of the uninterrupted run), resumed:
+    final checkpoint and loss trace are bitwise the uninterrupted run's."""
+    W, rounds, kill = 8, 2000, 1337
+    prob = make_linreg(KEY, W=W)
+    acfg, ccfg, plan = default_cfgs(W, prob["d"], noisy=True, snr_db=30.0,
+                                    power_control=True, flip=False)
+    fp = FaultPlan(crash_at=((100, 2),), straggler_prob=0.2,
+                   straggler_delay=4, nan_workers=1, burst_prob=0.1,
+                   burst_std=5.0)
+    gc = GuardConfig(policy="evict-retransmit", snr_floor_db=-20.0)
+    alg = AFadmm(acfg, ccfg, plan, faults=fp, guard=gc)
+    solver = make_solver(prob, acfg.rho)
+    eval_fn = lambda th: {"loss": prob["f_total"](th)}  # noqa: E731
+
+    da, db = str(tmp_path / "a"), str(tmp_path / "b")
+    hist_a = train_scan(alg, prob["theta0"], solver, prob["grad_fn"],
+                        rounds, KEY, eval_fn, eval_every=200,
+                        checkpoint_dir=da, checkpoint_every=rounds)
+    # "kill": the run ends at the arbitrary round; the final-block snapshot
+    # is the durable state the resume starts from
+    train_scan(alg, prob["theta0"], solver, prob["grad_fn"], kill, KEY,
+               eval_fn, eval_every=200, checkpoint_dir=db,
+               checkpoint_every=10 ** 9)
+    st, r0 = resume_state(alg, prob["theta0"], KEY, db)
+    assert r0 == kill
+    hist_b = train_scan(alg, prob["theta0"], solver, prob["grad_fn"],
+                        rounds, KEY, eval_fn, eval_every=200,
+                        start_round=r0, init_state=st,
+                        checkpoint_dir=db, checkpoint_every=10 ** 9)
+    _npz_equal(round_path(da, rounds), round_path(db, rounds))
+    # resumed loss trace == uninterrupted trace at the shared eval rounds
+    # (1400, 1600, 1800, 1999), bitwise
+    assert hist_b.loss == hist_a.loss[-len(hist_b.loss):]
+    assert len(hist_b.loss) == 4
+    # the faults were live across the kill point
+    assert sum(hist_a.extra["guard_evicted"]) >= 1
+
+
+def test_resume_state_empty_dir_is_fresh_start(tmp_path):
+    prob = make_linreg(KEY, W=4)
+    acfg, ccfg, plan = default_cfgs(4, prob["d"])
+    alg = AFadmm(acfg, ccfg, plan)
+    st, r0 = resume_state(alg, prob["theta0"], KEY, str(tmp_path))
+    assert st is None and r0 == 0
+
+
+# ---------------------------------------------------------------------------
+# bitwise kill/resume: launch/train.py CLI
+# ---------------------------------------------------------------------------
+
+_FAULT_FLAGS = ["--nan-workers", "1", "--burst-prob", "0.5",
+                "--burst-std", "20", "--straggler-prob", "0.3",
+                "--guard", "evict-retransmit", "--snr-floor-db", "-40"]
+
+
+def _launch(ckpt_dir, rounds, resume=False):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"),
+               JAX_PLATFORMS="cpu")
+    cmd = [sys.executable, "-m", "repro.launch.train", "--arch", "granite-8b",
+           "--reduced", "--rounds", str(rounds), "--workers", "2",
+           "--local-steps", "1", "--seq", "16", "--driver", "scan",
+           "--log-every", "2", "--checkpoint-dir", ckpt_dir,
+           "--checkpoint-every", "2", *_FAULT_FLAGS]
+    if resume:
+        cmd.append("--resume")
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=560, cwd=REPO)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    return proc.stdout
+
+
+def test_launcher_kill_resume_bitwise(tmp_path):
+    """The CLI-level contract, faults + guard active: run 6 rounds; run 4
+    rounds, then resume to 6 in a fresh process — final round_00000006.npz
+    snapshots (θ, λ, Θ, channel AND fault state) are bitwise identical."""
+    da, db = str(tmp_path / "a"), str(tmp_path / "b")
+    _launch(da, 6)
+    _launch(db, 4)
+    out = _launch(db, 6, resume=True)
+    assert "resumed from round 4" in out
+    _npz_equal(round_path(da, 6), round_path(db, 6))
+
+
+# ---------------------------------------------------------------------------
+# bitwise kill/resume: shard-local (1, 2) mesh (subprocess — real 2-device
+# mesh needs the XLA device-count flag set before jax initialises)
+# ---------------------------------------------------------------------------
+
+_SHARD_SCRIPT = r"""
+import jax, jax.numpy as jnp
+import numpy as np
+import sys
+from repro.checkpoint import restore, round_path, save
+from repro.core.admm import AdmmConfig
+from repro.core.channel import ChannelConfig
+from repro.faults import FaultPlan, GuardConfig
+from repro.models import get_model
+from repro.models.sharding import axis_rules
+from repro.train.llm_trainer import FLConfig, make_fl_train
+
+assert jax.device_count() == 2, jax.devices()
+KEY = jax.random.PRNGKey(0)
+mesh = jax.sharding.Mesh(
+    np.array(jax.devices()).reshape(1, 2), ("data", "model"))
+ckdir = sys.argv[1]
+
+m = get_model("granite-8b", reduced=True)
+W, B, T = 2, 2, 16
+batch = {"tokens": jax.random.randint(KEY, (W, B, T), 0, m.cfg.vocab_size)}
+fp = FaultPlan(crash_at=((4, 1),), straggler_prob=0.3,
+               burst_prob=0.5, burst_std=20.0)
+gc = GuardConfig(policy="evict-retransmit", snr_floor_db=-40.0)
+flcfg = FLConfig(mode="replicated", n_workers=W, local_steps=1,
+                 local_lr=1e-2, scenario="markov-doppler",
+                 faults=fp, guard=gc)
+acfg = AdmmConfig(rho=0.5, flip_on_change=False)
+ccfg = ChannelConfig(n_workers=W, snr_db=40.0)
+init_fn, train_step = make_fl_train(m, flcfg, acfg, ccfg, mesh=mesh)
+
+
+def run(r0, r1, st):
+    with mesh:
+        with axis_rules(mesh):
+            step = jax.jit(train_step)
+            for r in range(r0, r1):
+                st, met = step(st, batch, jax.random.fold_in(KEY, 2000 + r))
+                assert np.isfinite(float(met["loss"])), (r, met)
+    return st
+
+
+st = jax.tree.map(jnp.array, init_fn(KEY))
+st_full = run(0, 6, st)
+
+# killed run: 3 rounds, snapshot, fresh-process-style restore, resume
+st_k = run(0, 3, jax.tree.map(jnp.array, init_fn(KEY)))
+save(round_path(ckdir, 3), st_k)
+like = jax.tree.map(jnp.array, init_fn(KEY))   # fresh target structure
+st_r = restore(round_path(ckdir, 3), like)
+st_res = run(3, 6, st_r)
+
+flat_a = jax.tree_util.tree_flatten_with_path(st_full)[0]
+flat_b = jax.tree_util.tree_flatten_with_path(st_res)[0]
+bad = 0
+for (pa, va), (pb, vb) in zip(flat_a, flat_b):
+    if not np.array_equal(np.asarray(va), np.asarray(vb), equal_nan=True):
+        print("MISMATCH", jax.tree_util.keystr(pa)); bad += 1
+assert bad == 0, bad
+assert not bool(np.asarray(st_res.flt.alive)[1]), "crash_at must survive resume"
+print("SHARD_LOCAL_RESUME_BITWISE_OK")
+"""
+
+
+def test_shard_local_kill_resume_subprocess(tmp_path):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src"),
+               JAX_PLATFORMS="cpu",
+               XLA_FLAGS=(os.environ.get("XLA_FLAGS", "")
+                          + " --xla_force_host_platform_device_count=2"
+                          ).strip())
+    proc = subprocess.run([sys.executable, "-c", _SHARD_SCRIPT,
+                           str(tmp_path)], env=env, capture_output=True,
+                          text=True, timeout=540, cwd=REPO)
+    assert "SHARD_LOCAL_RESUME_BITWISE_OK" in proc.stdout, \
+        proc.stdout + proc.stderr

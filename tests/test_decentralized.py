@@ -1,9 +1,11 @@
 """Decentralized analog GADMM (paper §6 extension): chain consensus."""
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.channel import ChannelConfig
-from repro.core.decentralized import AnalogGadmm, gadmm_quadratic_solver
+from repro.core.decentralized import (AnalogGadmm, GadmmState,
+                                      gadmm_quadratic_solver)
 from repro.core.subcarrier import SubcarrierPlan
 
 from helpers import make_linreg
@@ -35,6 +37,76 @@ def test_gadmm_noise_free_consensus():
 def test_gadmm_noisy_links():
     gap, _ = _run(noisy=True)
     assert gap < 1e-2
+
+
+def test_gadmm_mask_none_is_bitwise_unchanged():
+    """The promoted mask field defaults to the original unmasked round."""
+    key = jax.random.PRNGKey(2)
+    prob = make_linreg(key, W=5)
+    W, d = prob["theta0"].shape
+    ccfg = ChannelConfig(n_workers=W, n_subcarriers=d, noisy=True,
+                         snr_db=30.0)
+    plan = SubcarrierPlan.build(d, d)
+    solver = gadmm_quadratic_solver(prob["X"], prob["y"], 1.0)
+    sts = {}
+    for mask in (None, jnp.ones((W,), bool)):
+        alg = AnalogGadmm(ccfg=ccfg, plan=plan, rho=1.0, mask=mask)
+        st = alg.init(key, prob["theta0"])
+        for i in range(5):
+            st, _ = alg.round(jax.random.fold_in(key, i), st, solver, None)
+        sts[mask is None] = st
+    # all-alive mask == mask=None up to the masked path's where-selects
+    # (same neighbour indices, same solver rows -> identical arithmetic)
+    np.testing.assert_array_equal(np.asarray(sts[True].theta),
+                                  np.asarray(sts[False].theta))
+    np.testing.assert_array_equal(np.asarray(sts[True].lam),
+                                  np.asarray(sts[False].lam))
+
+
+def test_gadmm_crashed_neighbor_is_passthrough_hop():
+    """ISSUE 7 satellite: a dead worker degrades to a pass-through hop —
+    the masked W-chain IS the compacted (alive-only) chain, the dead row
+    freezes, and its edges' duals zero (noise-free, elementwise equal)."""
+    key = jax.random.PRNGKey(0)
+    prob = make_linreg(key, W=6)
+    W, d = prob["theta0"].shape
+    plan = SubcarrierPlan.build(d, d)
+    alive = jnp.array([True, True, False, True, True, True])
+    keep = jnp.array([0, 1, 3, 4, 5])
+
+    algm = AnalogGadmm(ccfg=ChannelConfig(n_workers=W, n_subcarriers=d,
+                                          noisy=False),
+                       plan=plan, rho=1.0, mask=alive)
+    algc = AnalogGadmm(ccfg=ChannelConfig(n_workers=5, n_subcarriers=d,
+                                          noisy=False),
+                       plan=plan, rho=1.0)
+    solverm = gadmm_quadratic_solver(prob["X"], prob["y"], 1.0)
+    solverc = gadmm_quadratic_solver(prob["X"][keep], prob["y"][keep], 1.0)
+    stm = algm.init(key, prob["theta0"])
+    stc = GadmmState(theta=prob["theta0"][keep], lam=jnp.zeros((4, d)),
+                     step=jnp.zeros((), jnp.int32))
+    for i in range(20):
+        k = jax.random.fold_in(key, i)
+        stm, mm = algm.round(k, stm, solverm, None)
+        stc, mc = algc.round(k, stc, solverc, None)
+    np.testing.assert_array_equal(np.asarray(stm.theta[keep]),
+                                  np.asarray(stc.theta))
+    # edge (u, v) lives at its left endpoint u: alive edges 0-1, 1-3, 3-4,
+    # 4-5 map to masked rows 0, 1, 3, 4
+    np.testing.assert_array_equal(np.asarray(stm.lam[jnp.array([0, 1, 3, 4])]),
+                                  np.asarray(stc.lam))
+    assert float(mm["consensus_gap"]) == float(mc["consensus_gap"])
+    assert float(mm["gadmm_alive"]) == 5.0
+    # dead worker frozen, its edge dual zeroed
+    np.testing.assert_array_equal(np.asarray(stm.theta[2]),
+                                  np.asarray(prob["theta0"][2]))
+    np.testing.assert_array_equal(np.asarray(stm.lam[2]), np.zeros(d))
+    # and the masked chain still solves the (alive-only) problem
+    Xa = prob["X"][keep].reshape(-1, d)
+    ya = prob["y"][keep].reshape(-1)
+    th_star = jnp.linalg.solve(Xa.T @ Xa + 1e-8 * jnp.eye(d), Xa.T @ ya)
+    gm = algm.global_model(stm)
+    assert float(jnp.max(jnp.abs(gm - th_star))) < 1e-2
 
 
 def test_gadmm_channel_uses_independent_of_n():

@@ -1,0 +1,410 @@
+"""Fault injection + round health guards (ISSUE 7 contracts).
+
+* ``FaultPlan`` draws are monotone (crashes are permanent), capped, never
+  empty the cohort, and follow the deterministic ``crash_at`` schedule;
+  stragglers upload the last snapshot (delay-cadence), corrupt rows carry
+  NaN/Inf/spike payloads; ``commit`` accounts evictions exactly once.
+* ``guarded_ota_round`` on a healthy slot is BITWISE the unguarded fused
+  round (the guard only adds the O(d) health check); ``evict`` reproduces
+  the round that never admitted the offender (same key — tolerance-equal,
+  the SNR instrumentation changes XLA fusion); ``retransmit`` clears a
+  transient interference burst (bursts do not recur on retries); a zero
+  burst is a bitwise no-op.
+* The flat ``AFadmm`` aggregator with faults + guard is scan-compatible:
+  ``scan_rounds`` reproduces the Python round loop bit-for-bit, and the
+  fault key is a ``fold_in`` side-branch so the fault-free PRNG schedule is
+  untouched.
+* Chaos acceptance: a W=8 MLP under ``markov-doppler`` with 25% crashed
+  workers, a persistent NaN worker (evicted), and burst-forced
+  retransmissions lands within 10% of the fault-free final loss.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import faults
+from repro.core import transport
+from repro.core.admm import AdmmConfig
+from repro.core.aggregators import AFadmm
+from repro.core.channel import ChannelConfig, rayleigh
+from repro.core.subcarrier import SubcarrierPlan
+from repro.faults import FaultPlan, GuardConfig, guarded_ota_round
+
+from helpers import default_cfgs, make_linreg, make_solver
+
+KEY = jax.random.PRNGKey(0)
+RHO = 0.7
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan / FaultState unit contracts
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError, match="corrupt_mode"):
+        FaultPlan(corrupt_mode="zalgo")
+    with pytest.raises(ValueError, match="straggler_delay"):
+        FaultPlan(straggler_prob=0.1, straggler_delay=0)
+
+
+def test_guard_config_validation():
+    with pytest.raises(ValueError, match="policy"):
+        GuardConfig(policy="pray")
+    with pytest.raises(ValueError, match="max_retries"):
+        GuardConfig(max_retries=-1)
+    assert GuardConfig(policy="evict").evicts
+    assert GuardConfig(policy="evict").retries == 0
+    assert GuardConfig(policy="retransmit", max_retries=3).retries == 3
+    assert GuardConfig(policy="evict-retransmit").evicts
+    assert GuardConfig(policy="evict-retransmit").retries == 2
+    assert not GuardConfig(policy="skip").evicts
+
+
+def test_crash_hazard_monotone_and_never_empty():
+    W = 8
+    plan = FaultPlan(crash_prob=0.5, max_crash_frac=1.0)
+    st = faults.init(plan, W, 4)
+    prev = np.ones(W, bool)
+    for r in range(40):
+        _, st, m = faults.draw(plan, jax.random.fold_in(KEY, r), st)
+        alive = np.asarray(st.alive)
+        assert (alive <= prev).all(), "crashes must be permanent"
+        assert alive.any(), "the last worker is never hazard-crashed"
+        assert float(m["fault_alive"]) == alive.sum()
+        prev = alive
+
+
+def test_crash_hazard_start_and_cap():
+    W, cap = 8, 2  # int(0.25 * 8)
+    plan = FaultPlan(crash_prob=0.3, crash_start=5, max_crash_frac=0.25)
+    st = faults.init(plan, W, 4)
+    deads = []
+    for r in range(60):
+        _, st, _ = faults.draw(plan, jax.random.fold_in(KEY, r), st)
+        dead = W - int(np.asarray(st.alive).sum())
+        if r < 5:
+            assert dead == 0, "hazard inactive before crash_start"
+        deads.append(dead)
+    first = next(i for i, dd in enumerate(deads) if dd >= cap)
+    # once the dead fraction is reached, no NEW hazard crashes
+    assert all(dd == deads[first] for dd in deads[first:])
+
+
+def test_crash_at_schedule_deterministic():
+    W = 4
+    plan = FaultPlan(crash_at=((2, 1), (4, 3)))
+    st = faults.init(plan, W, 4)
+    expect = {0: [1, 1, 1, 1], 1: [1, 1, 1, 1], 2: [1, 0, 1, 1],
+              3: [1, 0, 1, 1], 4: [1, 0, 1, 0], 5: [1, 0, 1, 0]}
+    for r in range(6):
+        _, st, _ = faults.draw(plan, jax.random.fold_in(KEY, r), st)
+        np.testing.assert_array_equal(np.asarray(st.alive),
+                                      np.array(expect[r], bool), err_msg=str(r))
+
+
+def test_straggler_uploads_last_snapshot():
+    W, d = 3, 5
+    plan = FaultPlan(straggler_prob=1.0, straggler_delay=3)
+    st = faults.init(plan, W, d)
+    thetas = [jnp.full((W, d), float(r + 1)) for r in range(7)]
+    for r in range(7):
+        rf, st_mid, _ = faults.draw(plan, jax.random.fold_in(KEY, r), st)
+        tx, stale_next = faults.apply_uplink(plan, rf, thetas[r], st.stale)
+        # a straggler uploads its round-(3*(r//3)) model at round r
+        np.testing.assert_array_equal(np.asarray(tx),
+                                      np.asarray(thetas[(r // 3) * 3]),
+                                      err_msg=f"round {r}")
+        st = faults.commit(st_mid, stale_next, None)
+
+
+def test_straggler_without_buffer_raises():
+    plan = FaultPlan(straggler_prob=1.0)
+    st = faults.init(plan, 3, 5)
+    rf, _, _ = faults.draw(plan, KEY, st)
+    with pytest.raises(ValueError, match="stale"):
+        faults.apply_uplink(plan, rf, jnp.ones((3, 5)), None)
+
+
+@pytest.mark.parametrize("mode,check", [
+    ("nan", lambda x: np.isnan(x).all()),
+    ("inf", lambda x: np.isinf(x).all()),
+])
+def test_corrupt_modes_fill(mode, check):
+    plan = FaultPlan(nan_workers=2, corrupt_mode=mode)
+    rf, _, _ = faults.draw(plan, KEY, faults.init(plan, 4, 6))
+    tx, _ = faults.apply_uplink(plan, rf, jnp.ones((4, 6)), None)
+    tx = np.asarray(tx)
+    assert check(tx[:2]) and (tx[2:] == 1.0).all()
+
+
+def test_corrupt_spike_scales():
+    plan = FaultPlan(nan_workers=1, corrupt_mode="spike", spike_gain=100.0)
+    rf, _, _ = faults.draw(plan, KEY, faults.init(plan, 3, 4))
+    tx, _ = faults.apply_uplink(plan, rf, jnp.ones((3, 4)), None)
+    tx = np.asarray(tx)
+    assert (tx[0] == 100.0).all() and (tx[1:] == 1.0).all()
+
+
+def test_commit_eviction_accounting():
+    st = faults.init(FaultPlan(), 4, 2)
+    ev = jnp.array([True, False, False, True])
+    st2 = faults.commit(st, None, ev)
+    assert int(st2.n_evicted) == 2
+    np.testing.assert_array_equal(np.asarray(st2.alive),
+                                  [False, True, True, False])
+    # re-evicting an already-dead worker never double-counts
+    st3 = faults.commit(st2, None, ev)
+    assert int(st3.n_evicted) == 2
+    np.testing.assert_array_equal(np.asarray(st3.alive),
+                                  np.asarray(st2.alive))
+
+
+# ---------------------------------------------------------------------------
+# guarded receive: flat/packed path
+# ---------------------------------------------------------------------------
+
+def _flat_problem(W=4, d=97, seed=1):
+    k = jax.random.fold_in(KEY, seed)
+    kt, kl, kh = jax.random.split(k, 3)
+    theta = jax.random.normal(kt, (W, d), jnp.float32)
+    lam = rayleigh(kl, (W, d))
+    h = rayleigh(kh, (W, d))
+    return theta, lam, h
+
+
+def test_guarded_healthy_bitwise_unguarded():
+    """The pinned fast-path contract: a healthy guarded round IS the
+    unguarded fused round, bit for bit (same jit-ness on both sides)."""
+    W, d = 4, 97
+    theta, lam, h = _flat_problem()
+    ccfg = ChannelConfig(n_workers=W, noisy=True, snr_db=20.0)
+    gcfg = GuardConfig(policy="evict-retransmit", snr_floor_db=-60.0)
+    T0, ia0, _ = jax.jit(lambda t, l, hh: transport.ota_round_fused(
+        t, l, hh, KEY, RHO, ccfg, backend="jnp"))(theta, lam, h)
+    g = jax.jit(lambda t, l, hh: guarded_ota_round(
+        t, l, hh, KEY, RHO, ccfg, gcfg, backend="jnp"))(theta, lam, h)
+    assert bool(g.healthy)
+    np.testing.assert_array_equal(np.asarray(g.Theta), np.asarray(T0))
+    np.testing.assert_array_equal(np.asarray(g.inv_alpha), np.asarray(ia0))
+    assert float(g.metrics["guard_retries"]) == 0.0
+    assert float(g.metrics["guard_ok_first"]) == 1.0
+    assert float(g.metrics["guard_evicted"]) == 0.0
+
+
+def test_guard_evicts_nonfinite_worker():
+    """Eviction == the round that never admitted the offender (same key:
+    the PS digitally excises the row from the superposition)."""
+    W, d = 4, 97
+    theta, lam, h = _flat_problem(seed=2)
+    theta = theta.at[1].set(jnp.nan)
+    ccfg = ChannelConfig(n_workers=W, noisy=True, snr_db=20.0)
+    gcfg = GuardConfig(policy="evict")
+    ref_mask = jnp.array([True, False, True, True])
+    T_ref, ia_ref, _ = jax.jit(lambda t, l, hh: transport.ota_round_fused(
+        t, l, hh, KEY, RHO, ccfg, mask=ref_mask, backend="jnp"))(
+        jnp.nan_to_num(theta), lam, h)
+    g = jax.jit(lambda t, l, hh: guarded_ota_round(
+        t, l, hh, KEY, RHO, ccfg, gcfg, backend="jnp"))(theta, lam, h)
+    assert bool(g.healthy)
+    np.testing.assert_array_equal(np.asarray(g.evicted),
+                                  [False, True, False, False])
+    # tolerance, not bitwise: the guard's SNR instrumentation adds extra
+    # consumers of y/noise, which changes XLA fusion decisions
+    np.testing.assert_allclose(np.asarray(g.Theta), np.asarray(T_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(g.inv_alpha), float(ia_ref), rtol=1e-5)
+
+
+def test_guard_skip_flags_unhealthy():
+    W, d = 4, 60
+    theta, lam, h = _flat_problem(W, d, seed=3)
+    theta = theta.at[0].set(jnp.inf)
+    ccfg = ChannelConfig(n_workers=W, noisy=True, snr_db=20.0)
+    g = jax.jit(lambda t, l, hh: guarded_ota_round(
+        t, l, hh, KEY, RHO, ccfg, GuardConfig(policy="skip"),
+        backend="jnp"))(theta, lam, h)
+    assert not bool(g.healthy)  # caller reuses previous Theta, freezes duals
+    assert float(g.metrics["guard_ok_first"]) == 0.0
+
+
+def test_guard_retransmit_clears_burst():
+    """A transient interference burst trips the SNR floor on attempt 0;
+    the retry (fresh noise, no burst, backed-off power) recovers."""
+    W, d = 4, 97
+    theta, lam, h = _flat_problem(seed=4)
+    ccfg = ChannelConfig(n_workers=W, noisy=True, snr_db=20.0)
+    gcfg = GuardConfig(policy="retransmit", snr_floor_db=0.0, max_retries=2)
+    g = jax.jit(lambda t, l, hh: guarded_ota_round(
+        t, l, hh, KEY, RHO, ccfg, gcfg, backend="jnp",
+        burst_std=jnp.float32(5.0)))(theta, lam, h)
+    assert float(g.metrics["guard_ok_first"]) == 0.0  # burst tripped floor
+    assert float(g.metrics["guard_retries"]) >= 1.0
+    assert bool(g.healthy)                            # retry recovered
+    assert float(g.metrics["guard_snr_db"]) >= 0.0
+    assert np.isfinite(np.asarray(g.Theta)).all()
+
+
+def test_guard_exhausted_retries_reports_unhealthy():
+    """A permanent fault (NaN planes) defeats retransmission: every retry
+    re-demodulates the same poisoned stats, so the guard falls through to
+    the terminal skip with the retry budget spent."""
+    W, d = 4, 60
+    theta, lam, h = _flat_problem(W, d, seed=5)
+    theta = theta.at[2].set(jnp.nan)
+    ccfg = ChannelConfig(n_workers=W, noisy=True, snr_db=20.0)
+    gcfg = GuardConfig(policy="retransmit", max_retries=2)
+    g = jax.jit(lambda t, l, hh: guarded_ota_round(
+        t, l, hh, KEY, RHO, ccfg, gcfg, backend="jnp"))(theta, lam, h)
+    assert not bool(g.healthy)
+    assert float(g.metrics["guard_retries"]) == 2.0
+
+
+def test_zero_burst_is_bitwise_noop():
+    W, d = 4, 97
+    theta, lam, h = _flat_problem(seed=6)
+    ccfg = ChannelConfig(n_workers=W, noisy=True, snr_db=20.0)
+    gcfg = GuardConfig(policy="skip")
+    g0 = jax.jit(lambda t, l, hh: guarded_ota_round(
+        t, l, hh, KEY, RHO, ccfg, gcfg, backend="jnp"))(theta, lam, h)
+    g1 = jax.jit(lambda t, l, hh: guarded_ota_round(
+        t, l, hh, KEY, RHO, ccfg, gcfg, backend="jnp",
+        burst_std=jnp.float32(0.0)))(theta, lam, h)
+    np.testing.assert_array_equal(np.asarray(g0.Theta), np.asarray(g1.Theta))
+
+
+# ---------------------------------------------------------------------------
+# flat AFadmm integration: scan == loop, eviction + crash accounting
+# ---------------------------------------------------------------------------
+
+def _faulted_alg(W, d):
+    acfg, ccfg, plan = default_cfgs(W, d, noisy=True, snr_db=30.0,
+                                    power_control=True, flip=False)
+    fp = FaultPlan(crash_at=((5, 4),), straggler_prob=0.3, straggler_delay=2,
+                   nan_workers=1, burst_prob=0.3, burst_std=5.0)
+    gc = GuardConfig(policy="evict-retransmit", snr_floor_db=-60.0,
+                     max_retries=2)
+    return AFadmm(acfg, ccfg, plan, faults=fp, guard=gc)
+
+
+def test_flat_afadmm_faulted_scan_equals_loop():
+    """Fault + guard state threads through ``lax.scan`` bit-for-bit — the
+    scan-driver contract extends to faulted rounds."""
+    prob = make_linreg(KEY, W=6)
+    alg = _faulted_alg(6, prob["d"])
+    solver = make_solver(prob, alg.acfg.rho)
+    st0 = alg.init(KEY, prob["theta0"])
+    st_s, ms = jax.jit(lambda s: alg.scan_rounds(
+        KEY, s, solver, prob["grad_fn"], 12))(st0)
+    st_l = alg.init(KEY, prob["theta0"])
+    rnd = jax.jit(lambda k, s: alg.round(k, s, solver, prob["grad_fn"]))
+    for r in range(12):
+        st_l, _ = rnd(jax.random.fold_in(KEY, r + 1), st_l)
+    for a, b in zip(jax.tree.leaves(st_s), jax.tree.leaves(st_l)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ms["guard_healthy"].shape == (12,)
+
+
+def test_flat_afadmm_faulted_run_accounting():
+    """12 faulted rounds: the NaN worker is evicted, the scheduled crash
+    lands, everything stays finite, masked rows' duals freeze."""
+    prob = make_linreg(KEY, W=6)
+    alg = _faulted_alg(6, prob["d"])
+    solver = make_solver(prob, alg.acfg.rho)
+    st = alg.init(KEY, prob["theta0"])
+    rnd = jax.jit(lambda k, s: alg.round(k, s, solver, prob["grad_fn"]))
+    for r in range(12):
+        st, m = rnd(jax.random.fold_in(KEY, r + 1), st)
+    alive = np.asarray(st.flt.alive)
+    assert not alive[0], "persistent NaN worker must be evicted"
+    assert not alive[4], "crash_at=((5, 4),) must land"
+    assert int(st.flt.n_evicted) >= 1
+    assert np.isfinite(np.asarray(st.Theta)).all()
+    assert np.isfinite(np.asarray(st.theta)).all()
+    # evicted worker's dual is zeroed and stays zero
+    np.testing.assert_array_equal(np.asarray(st.lam.re)[0],
+                                  np.zeros(prob["d"], np.float32))
+
+
+def test_fault_key_is_side_branch():
+    """An all-zero FaultPlan perturbs nothing: the fault key is a fold_in
+    side-branch, so the channel/noise schedule of the fault-free run is
+    reproduced exactly (mask all-True == mask None, bitwise)."""
+    prob = make_linreg(KEY, W=4)
+    acfg, ccfg, plan = default_cfgs(4, prob["d"], noisy=True, snr_db=30.0,
+                                    power_control=True, flip=False)
+    solver = make_solver(prob, acfg.rho)
+    base = AFadmm(acfg, ccfg, plan)
+    nul = AFadmm(acfg, ccfg, plan, faults=FaultPlan())
+    st_a = base.init(KEY, prob["theta0"])
+    st_b = nul.init(KEY, prob["theta0"])
+    rnd_a = jax.jit(lambda k, s: base.round(k, s, solver, prob["grad_fn"]))
+    rnd_b = jax.jit(lambda k, s: nul.round(k, s, solver, prob["grad_fn"]))
+    for r in range(6):
+        k = jax.random.fold_in(KEY, r + 1)
+        st_a, _ = rnd_a(k, st_a)
+        st_b, _ = rnd_b(k, st_b)
+    np.testing.assert_array_equal(np.asarray(st_a.Theta),
+                                  np.asarray(st_b.Theta))
+    np.testing.assert_array_equal(np.asarray(st_a.lam.re),
+                                  np.asarray(st_b.lam.re))
+
+
+# ---------------------------------------------------------------------------
+# chaos acceptance: W=8 MLP under markov-doppler + crash + NaN + bursts
+# ---------------------------------------------------------------------------
+
+def test_chaos_convergence_within_10pct():
+    """ISSUE 7 acceptance: 25% of workers crash (crash_at), one persistent
+    NaN worker is evicted by the guard, interference bursts force
+    retransmissions — and the final loss stays within 10% of fault-free."""
+    from repro.data.synthetic import image_dataset
+    from repro.models.mlp import init_mlp_flat, make_loss_fns
+    from repro.optim import adam
+    from repro.optim.local_solvers import prox_adam_solver
+    from repro.phy import make_scenario
+    from repro.train import train
+
+    W, dim, sizes = 8, 32, (32, 16, 10)
+    key = jax.random.fold_in(KEY, 77)
+    xtr, ytr, xte, yte = image_dataset(key, 1024, 256, dim=dim,
+                                       cluster_std=3.0)
+    flat0, unflatten = init_mlp_flat(jax.random.fold_in(key, 2), sizes)
+    d = int(flat0.shape[0])
+    loss, grad, _ = make_loss_fns(unflatten)
+    xw = xtr.reshape(W, -1, dim)
+    yw = ytr.reshape(W, -1)
+
+    def grad_fn(theta_w):  # per-worker full-batch grads: scan-deterministic
+        return jax.vmap(grad)(theta_w, xw, yw)
+
+    rho = 0.5
+    solver = prox_adam_solver(grad_fn, adam(0.01), n_steps=5, rho=rho)
+    theta0 = jnp.broadcast_to(flat0[None], (W, d)) \
+        + 0.01 * jax.random.normal(key, (W, d))
+    acfg = AdmmConfig(rho=rho, flip_on_change=False, power_control=True)
+    ccfg = ChannelConfig(n_workers=W, n_subcarriers=256, snr_db=40.0,
+                         noisy=True)
+    plan = SubcarrierPlan.build(d, 256)
+
+    def run(fp, gc):
+        alg = AFadmm(acfg, ccfg, plan,
+                     scenario=make_scenario("markov-doppler", ccfg),
+                     faults=fp, guard=gc)
+        return train(alg, theta0, solver, grad_fn, 20, key,
+                     eval_fn=lambda th: {"loss": loss(th, xte, yte)},
+                     eval_every=50, driver="scan")
+
+    h0 = run(None, None)
+    fp = FaultPlan(crash_at=((6, 6), (12, 7)),  # 2/8 = 25% crashed
+                   nan_workers=1, burst_prob=0.4, burst_std=5.0)
+    gc = GuardConfig(policy="evict-retransmit", snr_floor_db=0.0,
+                     max_retries=2)
+    h1 = run(fp, gc)
+    f0, f1 = h0.loss[-1], h1.loss[-1]
+    assert np.isfinite(f1), "faulted run must stay finite"
+    assert f1 <= 1.10 * f0 + 1e-8, (f0, f1)
+    # the injected faults actually exercised the machinery
+    assert sum(h1.extra["guard_retries"]) > 0, "no retransmission fired"
+    assert sum(h1.extra["guard_evicted"]) >= 1, "NaN worker not evicted"
+    assert h1.extra["fault_alive"][-1] == 5.0  # 8 - 2 crashed - 1 evicted

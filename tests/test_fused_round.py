@@ -296,6 +296,45 @@ def test_streamed_zero_pad_workers_never_bind_alpha():
     assert np.isfinite(np.asarray(ia1))
 
 
+@pytest.mark.parametrize("dead_chunk", [0, 1])
+def test_streamed_all_masked_chunk_nan_safe(dead_chunk):
+    """A chunk-aligned fully-faded cohort must not poison the per-chunk
+    stats with 0/0 (ISSUE 7 satellite): the cohort scan's masked stats are
+    NaN-safe `where`s, so an empty chunk contributes exact zeros and the
+    streamed result still matches the monolithic masked receive."""
+    W, d, chunk = 8, 64, 4
+    theta, lam, h, _ = _problem(W, d, seed=11)
+    ccfg = ChannelConfig(n_workers=W, noisy=True, snr_db=20.0)
+    dead = np.zeros(W, bool)
+    dead[dead_chunk * chunk:(dead_chunk + 1) * chunk] = True
+    mask = jnp.asarray(~dead)
+    T0, ia0, _ = transport.ota_round_fused(theta, lam, h, KEY, RHO, ccfg,
+                                           mask=mask, backend="jnp")
+    T1, ia1, _ = transport.ota_round_fused(theta, lam, h, KEY, RHO, ccfg,
+                                           mask=mask, worker_chunk=chunk,
+                                           backend="jnp")
+    assert np.isfinite(np.asarray(T1)).all()
+    assert np.isfinite(np.asarray(ia1))
+    np.testing.assert_allclose(np.asarray(T0), np.asarray(T1), **TOL)
+    np.testing.assert_allclose(np.asarray(ia0), np.asarray(ia1), **TOL)
+
+
+def test_streamed_fully_masked_round_stays_finite():
+    """EVERY chunk empty (the all-masked round): no 0/0 anywhere — the
+    degenerate round demodulates to finite values the round driver's
+    keep-previous-Θ logic then discards."""
+    W, d = 8, 64
+    theta, lam, h, _ = _problem(W, d, seed=12)
+    ccfg = ChannelConfig(n_workers=W, noisy=True, snr_db=20.0)
+    none = jnp.zeros((W,), bool)
+    for chunk in (None, 4):
+        T, ia, _ = transport.ota_round_fused(theta, lam, h, KEY, RHO, ccfg,
+                                             mask=none, worker_chunk=chunk,
+                                             backend="jnp")
+        assert np.isfinite(np.asarray(T)).all(), chunk
+        assert np.isfinite(np.asarray(ia)), chunk
+
+
 def test_autotune_sweep_returns_usable_config():
     res = transport.autotune_ota_round(4, 256, iters=2,
                                        block_cols_grid=(256,),
