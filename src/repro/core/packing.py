@@ -164,40 +164,77 @@ def unpack_cplx(spec: PackSpec, buf: Complex) -> PyTree:
 
 
 # ---------------------------------------------------------------------------
-# shard-local packing (model-parallel meshes)
+# shard-local packing (model-parallel / fsdp meshes)
 # ---------------------------------------------------------------------------
 
 class ShardPackSpec(NamedTuple):
-    """Static layout of a pytree packed *per model shard*.
+    """Static layout of a pytree packed *per (fsdp, model) shard*.
 
-    Each of the ``n_shards`` model-axis shards owns a contiguous
-    ``d_local``-wide slice of the global shard-packed buffer
-    (total width ``d_pad = n_shards * d_local``):
+    The shard grid is 2D: ``n_fsdp x n_model`` shards, flattened fsdp-major —
+    shard ``j = jf * n_model + jm`` owns the contiguous slice
+    ``[j*d_local, (j+1)*d_local)`` of the global ``d_pad``-wide packed axis,
+    so a ``(W, d_pad)`` plane sharded ``P(data, ("fsdp", "model"))`` keeps
+    each shard's slice exactly resident.  ``n_fsdp == 1`` degenerates
+    BITWISE to the historical 1D model-sharded layout (the pre-2D contract
+    every existing parity test pins).
 
-    * leaves whose ``shard_dims[i]`` names an element dim sharded over the
-      model axis contribute their resident slice (``sizes[i] / n_shards``
-      elements) at ``local_offsets[i]``, in canonical leaf order;
-    * leaves replicated over the model axis are concatenated (leaf order)
-      into one *replicated segment* of ``rep_size`` elements which is
-      zero-padded to ``n_shards * rep_chunk`` and split evenly — shard ``j``
-      holds segment elements ``[j*rep_chunk, (j+1)*rep_chunk)`` at the tail
-      of its local slice.  Every element is owned by exactly ONE shard.
+    Each leaf falls in one of four ownership classes, by which of its
+    element dims the mesh shards:
 
-    :func:`shard_perm` maps each shard-packed position to its canonical
-    :class:`PackSpec` index, so per-shard packs compose into the global
-    index space:  ``scatter(pack_shard_local(j), perm_j) summed over j ==
-    pack(global)`` (pinned in ``tests/test_packing.py``).
+    * **A** — ``shard_dims[i]`` AND ``fsdp_dims[i]`` both set: the resident
+      ``1/(n_model*n_fsdp)`` block packs at ``local_offsets[i]``;
+    * **B** — model dim only: per-model-shard local flats concatenate (leaf
+      order) into a *B segment* of ``b_size`` elements, zero-padded to
+      ``n_fsdp * b_chunk`` and split evenly over the fsdp shards;
+    * **C** — fsdp dim only: symmetric — a per-fsdp-shard segment of
+      ``c_size`` elements split evenly over the model shards;
+    * **D** — replicated on both: ONE global segment of ``rep_size``
+      elements split evenly over all ``n_shards`` shards.
+
+    Per-shard layout: ``[A blocks | B chunk | C chunk | D chunk]``.  Every
+    element is owned by exactly ONE shard; :func:`shard_perm` maps each
+    shard-packed position to its canonical :class:`PackSpec` index and
+    ``Σ_j scatter(pack_shard_local(j), perm_j) == pack(global)`` is pinned
+    in ``tests/test_packing.py``.
     """
 
     spec: PackSpec                          # canonical global layout
-    n_shards: int
-    shard_dims: Tuple[Optional[int], ...]   # per-leaf model-sharded element dim
-    local_offsets: Tuple[Optional[int], ...]  # sharded leaves: offset in shard
-    sharded_local: int                      # elements of sharded leaves/shard
-    rep_leaves: Tuple[int, ...]             # replicated leaf indices
-    rep_offsets: Tuple[int, ...]            # their offsets in the segment
+    n_model: int                            # model-axis shards
+    n_fsdp: int                             # fsdp-axis shards
+    shard_dims: Tuple[Optional[int], ...]   # per-leaf model-sharded elem dim
+    fsdp_dims: Tuple[Optional[int], ...]    # per-leaf fsdp-sharded elem dim
+    local_offsets: Tuple[Optional[int], ...]  # class-A leaves: offset in shard
+    a_local: int                            # elements of class-A leaves/shard
+    b_leaves: Tuple[int, ...]               # class-B (model-only) leaf idxs
+    b_offsets: Tuple[int, ...]              # offsets in the B segment
+    b_size: int                             # B segment width per model shard
+    b_chunk: int                            # ceil(b_size / n_fsdp)
+    c_leaves: Tuple[int, ...]               # class-C (fsdp-only) leaf idxs
+    c_offsets: Tuple[int, ...]              # offsets in the C segment
+    c_size: int                             # C segment width per fsdp shard
+    c_chunk: int                            # ceil(c_size / n_model)
+    rep_leaves: Tuple[int, ...]             # class-D (replicated) leaf idxs
+    rep_offsets: Tuple[int, ...]            # their offsets in the D segment
     rep_size: int                           # R: real replicated elements
     rep_chunk: int                          # ceil(R / n_shards)
+
+    @property
+    def n_shards(self) -> int:
+        return self.n_model * self.n_fsdp
+
+    @property
+    def b_start(self) -> int:
+        return self.a_local
+
+    @property
+    def c_start(self) -> int:
+        return self.a_local + self.b_chunk
+
+    @property
+    def sharded_local(self) -> int:
+        """Start of the D (replicated-segment) chunk — also the number of
+        non-replicated elements per shard (the historical 1D field)."""
+        return self.a_local + self.b_chunk + self.c_chunk
 
     @property
     def d_local(self) -> int:
@@ -208,61 +245,113 @@ class ShardPackSpec(NamedTuple):
         return self.n_shards * self.d_local
 
     @property
+    def b_pad(self) -> int:
+        return self.n_fsdp * self.b_chunk
+
+    @property
+    def c_pad(self) -> int:
+        return self.n_model * self.c_chunk
+
+    @property
     def rep_pad(self) -> int:
         return self.n_shards * self.rep_chunk
 
     @property
     def has_padding(self) -> bool:
-        return self.rep_pad != self.rep_size
+        return (self.b_pad != self.b_size or self.c_pad != self.c_size
+                or self.rep_pad != self.rep_size)
 
 
 def build_shard_packspec(tree: PyTree, shard_dims: Sequence[Optional[int]],
-                         n_shards: int, batch_dims: int = 0) -> ShardPackSpec:
+                         n_shards: int, batch_dims: int = 0, *,
+                         fsdp_dims: Optional[Sequence[Optional[int]]] = None,
+                         n_fsdp: int = 1) -> ShardPackSpec:
     """Shard-local layout of ``tree`` given each leaf's model-sharded
-    element dim (``None`` = replicated over the model axis).
+    element dim (``None`` = replicated over the model axis) and, for 2D
+    (data x fsdp x model) meshes, its fsdp-sharded element dim.
 
-    ``shard_dims`` aligns with the canonical flatten order (Complex = leaf);
-    sharded dims must divide ``n_shards`` (GSPMD only shards them when they
-    do — ``launch/shardings.param_pspec``).
+    ``shard_dims``/``fsdp_dims`` align with the canonical flatten order
+    (Complex = leaf); ``n_shards`` is the MODEL-axis shard count (historical
+    name — the total shard count is ``n_shards * n_fsdp``).  Sharded dims
+    must divide their axis size (GSPMD only shards them when they do —
+    ``launch/shardings.param_pspec``).  ``n_fsdp == 1`` coerces
+    ``fsdp_dims`` to all-``None`` so the 1D layout stays bitwise identical.
     """
     spec = build_packspec(tree, batch_dims=batch_dims)
+    n_model = n_shards
     if len(shard_dims) != spec.n_leaves:
         raise ValueError(f"shard_dims has {len(shard_dims)} entries, tree "
                          f"has {spec.n_leaves} leaves")
+    if fsdp_dims is None or n_fsdp == 1:
+        fsdp_dims = (None,) * spec.n_leaves
+    if len(fsdp_dims) != spec.n_leaves:
+        raise ValueError(f"fsdp_dims has {len(fsdp_dims)} entries, tree "
+                         f"has {spec.n_leaves} leaves")
     local_offsets: List[Optional[int]] = []
+    b_leaves, b_offsets = [], []
+    c_leaves, c_offsets = [], []
     rep_leaves, rep_offsets = [], []
-    s_off = r_off = 0
-    for i, dim in enumerate(shard_dims):
-        if dim is None:
+    a_off = b_off = c_off = r_off = 0
+
+    def _check(i, dim, n, axis_name):
+        eshape = spec.shapes[i]
+        if not (0 <= dim < len(eshape)):
+            raise ValueError(f"leaf {i}: {axis_name} dim {dim} out of range "
+                             f"for shape {eshape}")
+        if eshape[dim] % n:
+            raise ValueError(f"leaf {i}: dim {dim} of {eshape} not "
+                             f"divisible by {n} {axis_name} shards")
+
+    for i, (md, fd) in enumerate(zip(shard_dims, fsdp_dims)):
+        if md is not None:
+            _check(i, md, n_model, "model")
+        if fd is not None:
+            _check(i, fd, n_fsdp, "fsdp")
+        if md is not None and fd is not None:
+            if md == fd:
+                raise ValueError(f"leaf {i}: model and fsdp shard the same "
+                                 f"dim {md}")
+            local_offsets.append(a_off)
+            a_off += spec.sizes[i] // (n_model * n_fsdp)
+        elif md is not None:
+            local_offsets.append(None)
+            b_leaves.append(i)
+            b_offsets.append(b_off)
+            b_off += spec.sizes[i] // n_model
+        elif fd is not None:
+            local_offsets.append(None)
+            c_leaves.append(i)
+            c_offsets.append(c_off)
+            c_off += spec.sizes[i] // n_fsdp
+        else:
             local_offsets.append(None)
             rep_leaves.append(i)
             rep_offsets.append(r_off)
             r_off += spec.sizes[i]
-        else:
-            eshape = spec.shapes[i]
-            if not (0 <= dim < len(eshape)):
-                raise ValueError(f"leaf {i}: shard dim {dim} out of range "
-                                 f"for shape {eshape}")
-            if eshape[dim] % n_shards:
-                raise ValueError(
-                    f"leaf {i}: dim {dim} of {eshape} not divisible by "
-                    f"{n_shards} shards")
-            local_offsets.append(s_off)
-            s_off += spec.sizes[i] // n_shards
-    rep_chunk = -(-r_off // n_shards) if r_off else 0
-    return ShardPackSpec(spec=spec, n_shards=n_shards,
+    b_chunk = -(-b_off // n_fsdp) if b_off else 0
+    c_chunk = -(-c_off // n_model) if c_off else 0
+    rep_chunk = -(-r_off // (n_model * n_fsdp)) if r_off else 0
+    return ShardPackSpec(spec=spec, n_model=n_model, n_fsdp=n_fsdp,
                          shard_dims=tuple(shard_dims),
-                         local_offsets=tuple(local_offsets),
-                         sharded_local=s_off,
+                         fsdp_dims=tuple(fsdp_dims),
+                         local_offsets=tuple(local_offsets), a_local=a_off,
+                         b_leaves=tuple(b_leaves), b_offsets=tuple(b_offsets),
+                         b_size=b_off, b_chunk=b_chunk,
+                         c_leaves=tuple(c_leaves), c_offsets=tuple(c_offsets),
+                         c_size=c_off, c_chunk=c_chunk,
                          rep_leaves=tuple(rep_leaves),
                          rep_offsets=tuple(rep_offsets),
                          rep_size=r_off, rep_chunk=rep_chunk)
 
 
-def _local_eshape(sspec: ShardPackSpec, i: int) -> Tuple[int, ...]:
-    """Element shape of sharded leaf ``i``'s per-shard slice."""
+def _resident_eshape(sspec: ShardPackSpec, i: int) -> Tuple[int, ...]:
+    """Element shape of leaf ``i``'s per-shard resident slice (model AND
+    fsdp dims divided where sharded)."""
     eshape = list(sspec.spec.shapes[i])
-    eshape[sspec.shard_dims[i]] //= sspec.n_shards
+    if sspec.shard_dims[i] is not None:
+        eshape[sspec.shard_dims[i]] //= sspec.n_model
+    if sspec.fsdp_dims[i] is not None:
+        eshape[sspec.fsdp_dims[i]] //= sspec.n_fsdp
     return tuple(eshape)
 
 
@@ -274,33 +363,64 @@ def _flat(leaf: Array, eshape: Tuple[int, ...], i: int) -> Array:
     return leaf.astype(jnp.float32).reshape(leaf.shape[:nb] + (-1,))
 
 
-def rep_segment(sspec: ShardPackSpec, tree: PyTree) -> Optional[Array]:
-    """Concatenate the model-replicated leaves into the zero-padded
-    replicated segment ``lead + (rep_pad,)`` (None when every leaf is
-    sharded)."""
-    if not sspec.rep_leaves:
-        return None
-    leaves = jax.tree_util.tree_flatten(tree, is_leaf=_is_cplx)[0]
-    flats = [_flat(leaves[i], sspec.spec.shapes[i], i)
-             for i in sspec.rep_leaves]
-    seg = flats[0] if len(flats) == 1 else jnp.concatenate(flats, axis=-1)
-    pad = sspec.rep_pad - sspec.rep_size
+def _pad_seg(seg: Array, pad_to: int) -> Array:
+    pad = pad_to - seg.shape[-1]
     if pad:
         seg = jnp.pad(seg, [(0, 0)] * (seg.ndim - 1) + [(0, pad)])
     return seg
 
 
+def _seg_resident(sspec: ShardPackSpec, leaves, idxs, pad_to: int
+                  ) -> Optional[Array]:
+    """Zero-padded segment from RESIDENT leaf slices (shard-local context:
+    each listed leaf already carries its per-shard shape)."""
+    if not idxs:
+        return None
+    flats = [_flat(leaves[i], _resident_eshape(sspec, i), i) for i in idxs]
+    seg = flats[0] if len(flats) == 1 else jnp.concatenate(flats, axis=-1)
+    return _pad_seg(seg, pad_to)
+
+
+def rep_segment(sspec: ShardPackSpec, tree: PyTree) -> Optional[Array]:
+    """Concatenate the fully-replicated (class-D) leaves into the
+    zero-padded segment ``lead + (rep_pad,)`` (None when no leaf is
+    replicated on every shard axis)."""
+    leaves = jax.tree_util.tree_flatten(tree, is_leaf=_is_cplx)[0]
+    return _seg_resident(sspec, leaves, sspec.rep_leaves, sspec.rep_pad)
+
+
+def b_segment(sspec: ShardPackSpec, tree: PyTree) -> Optional[Array]:
+    """One model shard's B segment from its RESIDENT class-B slices."""
+    leaves = jax.tree_util.tree_flatten(tree, is_leaf=_is_cplx)[0]
+    return _seg_resident(sspec, leaves, sspec.b_leaves, sspec.b_pad)
+
+
+def c_segment(sspec: ShardPackSpec, tree: PyTree) -> Optional[Array]:
+    """One fsdp shard's C segment from its RESIDENT class-C slices."""
+    leaves = jax.tree_util.tree_flatten(tree, is_leaf=_is_cplx)[0]
+    return _seg_resident(sspec, leaves, sspec.c_leaves, sspec.c_pad)
+
+
+def _chunk_at(seg: Array, idx, chunk: int) -> Array:
+    return jax.lax.dynamic_slice_in_dim(seg, idx * chunk, chunk, axis=-1)
+
+
 def rep_chunk_at(sspec: ShardPackSpec, seg: Array, shard_idx) -> Array:
     """Shard ``shard_idx``'s slice of the replicated segment (traced idx OK)."""
-    start = shard_idx * sspec.rep_chunk
-    return jax.lax.dynamic_slice_in_dim(seg, start, sspec.rep_chunk, axis=-1)
+    return _chunk_at(seg, shard_idx, sspec.rep_chunk)
+
+
+def _split_idx(sspec: ShardPackSpec, shard_idx):
+    """Flat shard index -> (model_idx, fsdp_idx); fsdp-major, traced OK."""
+    return shard_idx % sspec.n_model, shard_idx // sspec.n_model
 
 
 def pack_shard_local(sspec: ShardPackSpec, tree: PyTree, shard_idx) -> Array:
-    """Pack ONE shard's resident data: sharded leaves arrive as their local
-    slices (shape ``lead + local_eshape``), replicated leaves arrive whole
-    (shard ``shard_idx`` keeps only its segment chunk).  This is what each
-    device runs inside ``shard_map`` — no cross-device data ever moves.
+    """Pack ONE shard's resident data: every leaf arrives as the slice its
+    PartitionSpec makes resident (class A sliced on both dims, B on the
+    model dim, C on the fsdp dim, D whole — shard ``shard_idx`` keeps only
+    its chunk of each segment).  This is what each device runs inside
+    ``shard_map`` — no cross-device data ever moves.
 
     Returns ``lead + (d_local,)`` f32.
     """
@@ -308,135 +428,356 @@ def pack_shard_local(sspec: ShardPackSpec, tree: PyTree, shard_idx) -> Array:
     if len(leaves) != sspec.spec.n_leaves:
         raise ValueError(f"tree has {len(leaves)} leaves, spec expects "
                          f"{sspec.spec.n_leaves}")
+    jm, jf = _split_idx(sspec, shard_idx)
     parts, offsets = [], []
-    for i, dim in enumerate(sspec.shard_dims):
-        if dim is not None:
-            parts.append(_flat(leaves[i], _local_eshape(sspec, i), i))
-            offsets.append(sspec.local_offsets[i])
-    seg = rep_segment(sspec, tree)
+    for i, off in enumerate(sspec.local_offsets):
+        if off is not None:
+            parts.append(_flat(leaves[i], _resident_eshape(sspec, i), i))
+            offsets.append(off)
+    seg = _seg_resident(sspec, leaves, sspec.b_leaves, sspec.b_pad)
     if seg is not None:
-        parts.append(rep_chunk_at(sspec, seg, shard_idx))
+        parts.append(_chunk_at(seg, jf, sspec.b_chunk))
+        offsets.append(sspec.b_start)
+    seg = _seg_resident(sspec, leaves, sspec.c_leaves, sspec.c_pad)
+    if seg is not None:
+        parts.append(_chunk_at(seg, jm, sspec.c_chunk))
+        offsets.append(sspec.c_start)
+    seg = _seg_resident(sspec, leaves, sspec.rep_leaves, sspec.rep_pad)
+    if seg is not None:
+        parts.append(_chunk_at(seg, shard_idx, sspec.rep_chunk))
         offsets.append(sspec.sharded_local)
     return parts[0] if len(parts) == 1 else _dus_pack(parts, offsets,
                                                       sspec.d_local)
 
 
+def _seg_unpack(sspec: ShardPackSpec, seg, idxs, offs, out, cast: bool):
+    lead = seg.shape[:-1]
+    for i, off in zip(idxs, offs):
+        piece = jax.lax.slice_in_dim(seg, off, off + sspec.spec.sizes[i],
+                                     axis=-1)
+        out[i] = piece.reshape(lead + sspec.spec.shapes[i])
+
+
 def unpack_shard_local(sspec: ShardPackSpec, buf: Array,
                        rep_seg: Optional[Array] = None,
-                       cast: bool = False) -> PyTree:
+                       cast: bool = False, *,
+                       b_seg: Optional[Array] = None,
+                       c_seg: Optional[Array] = None) -> PyTree:
     """One shard's ``lead + (d_local,)`` buffer -> local tree.
 
-    Sharded leaves come back as their local slices; replicated leaves are
-    rebuilt from ``rep_seg`` — the FULL (cross-shard) replicated segment,
-    which the ``shard_map`` caller reassembles with one small ``psum`` of
-    the scattered chunks (:func:`scatter_rep_chunk`).  ``rep_seg`` may be
-    omitted only when every leaf is sharded.
+    Class-A leaves come back as their resident 2D blocks straight from the
+    buffer; class B/C/D leaves are rebuilt from the FULL (cross-shard)
+    ``b_seg``/``c_seg``/``rep_seg`` segments, which the ``shard_map`` caller
+    reassembles with one small ``psum`` each of the scattered chunks
+    (:func:`scatter_b_chunk` over the fsdp axis, :func:`scatter_c_chunk`
+    over the model axis, :func:`scatter_rep_chunk` over both).  A segment
+    may be omitted only when no leaf lives in it.  On 1D specs
+    (``n_fsdp == 1``) ``b_seg`` IS each shard's ``[0, sharded_local)``
+    prefix, so the caller passes ``shard_b_chunk`` back without any psum.
     """
     if buf.shape[-1] != sspec.d_local:
         raise ValueError(f"buffer last dim {buf.shape[-1]} != d_local "
                          f"{sspec.d_local}")
-    if sspec.rep_leaves and rep_seg is None:
-        raise ValueError("rep_seg required: tree has model-replicated leaves")
+    if b_seg is None and sspec.b_leaves and sspec.n_fsdp == 1:
+        b_seg = shard_b_chunk(sspec, buf)      # chunk == full segment in 1D
+    if c_seg is None and sspec.c_leaves and sspec.n_model == 1:
+        c_seg = shard_c_chunk(sspec, buf)
+    for name, seg, idxs in (("rep_seg", rep_seg, sspec.rep_leaves),
+                            ("b_seg", b_seg, sspec.b_leaves),
+                            ("c_seg", c_seg, sspec.c_leaves)):
+        if idxs and seg is None:
+            raise ValueError(f"{name} required: tree has leaves in that "
+                             "ownership class")
     lead = buf.shape[:-1]
     out: List[Optional[Array]] = [None] * sspec.spec.n_leaves
-    for i, dim in enumerate(sspec.shard_dims):
-        if dim is None:
+    for i, off in enumerate(sspec.local_offsets):
+        if off is None:
             continue
-        off = sspec.local_offsets[i]
         size = sspec.spec.sizes[i] // sspec.n_shards
         piece = jax.lax.slice_in_dim(buf, off, off + size, axis=-1)
-        out[i] = piece.reshape(lead + _local_eshape(sspec, i))
-    for i, off in zip(sspec.rep_leaves, sspec.rep_offsets):
-        piece = jax.lax.slice_in_dim(rep_seg, off, off + sspec.spec.sizes[i],
-                                     axis=-1)
-        out[i] = piece.reshape(rep_seg.shape[:-1] + sspec.spec.shapes[i])
+        out[i] = piece.reshape(lead + _resident_eshape(sspec, i))
+    if sspec.b_leaves:
+        lead_b = b_seg.shape[:-1]
+        for i, off in zip(sspec.b_leaves, sspec.b_offsets):
+            size = sspec.spec.sizes[i] // sspec.n_model
+            piece = jax.lax.slice_in_dim(b_seg, off, off + size, axis=-1)
+            out[i] = piece.reshape(lead_b + _resident_eshape(sspec, i))
+    if sspec.c_leaves:
+        lead_c = c_seg.shape[:-1]
+        for i, off in zip(sspec.c_leaves, sspec.c_offsets):
+            size = sspec.spec.sizes[i] // sspec.n_fsdp
+            piece = jax.lax.slice_in_dim(c_seg, off, off + size, axis=-1)
+            out[i] = piece.reshape(lead_c + _resident_eshape(sspec, i))
+    if sspec.rep_leaves:
+        _seg_unpack(sspec, rep_seg, sspec.rep_leaves, sspec.rep_offsets,
+                    out, cast)
     if cast:
         out = [p.astype(sspec.spec.dtypes[i]) for i, p in enumerate(out)]
     return jax.tree_util.tree_unflatten(sspec.spec.treedef, out)
 
 
 def shard_rep_chunk(sspec: ShardPackSpec, buf: Array) -> Optional[Array]:
-    """The replicated-segment tail of one shard's local buffer (None when
-    every leaf is sharded)."""
+    """The D-segment tail of one shard's local buffer (None when no leaf is
+    fully replicated)."""
     if not sspec.rep_leaves:
         return None
     return jax.lax.slice_in_dim(buf, sspec.sharded_local, sspec.d_local,
                                 axis=-1)
 
 
-def scatter_rep_chunk(sspec: ShardPackSpec, chunk: Array, shard_idx) -> Array:
-    """Place shard ``shard_idx``'s segment chunk at its offset in a zeroed
-    ``lead + (rep_pad,)`` segment — summing these over shards (a ``psum``
-    over the model axis) rebuilds the full replicated segment."""
+def shard_b_chunk(sspec: ShardPackSpec, buf: Array) -> Optional[Array]:
+    if not sspec.b_leaves:
+        return None
+    return jax.lax.slice_in_dim(buf, sspec.b_start,
+                                sspec.b_start + sspec.b_chunk, axis=-1)
+
+
+def shard_c_chunk(sspec: ShardPackSpec, buf: Array) -> Optional[Array]:
+    if not sspec.c_leaves:
+        return None
+    return jax.lax.slice_in_dim(buf, sspec.c_start,
+                                sspec.c_start + sspec.c_chunk, axis=-1)
+
+
+def _scatter_chunk(chunk: Array, idx, width: int, pad: int) -> Array:
     lead = chunk.shape[:-1]
-    seg = jnp.zeros(lead + (sspec.rep_pad,), chunk.dtype)
-    start = (0,) * len(lead) + (shard_idx * sspec.rep_chunk,)
+    seg = jnp.zeros(lead + (pad,), chunk.dtype)
+    start = (0,) * len(lead) + (idx * width,)
     return jax.lax.dynamic_update_slice(seg, chunk, start)
+
+
+def scatter_rep_chunk(sspec: ShardPackSpec, chunk: Array, shard_idx) -> Array:
+    """Place shard ``shard_idx``'s D-segment chunk at its offset in a zeroed
+    ``lead + (rep_pad,)`` segment — summing these over ALL shard axes (one
+    ``psum``) rebuilds the full replicated segment."""
+    return _scatter_chunk(chunk, shard_idx, sspec.rep_chunk, sspec.rep_pad)
+
+
+def scatter_b_chunk(sspec: ShardPackSpec, chunk: Array, fsdp_idx) -> Array:
+    """Place fsdp shard ``fsdp_idx``'s B chunk in a zeroed ``(b_pad,)``
+    segment — a ``psum`` over the fsdp axis rebuilds one model shard's full
+    B segment (identity when ``n_fsdp == 1``)."""
+    return _scatter_chunk(chunk, fsdp_idx, sspec.b_chunk, sspec.b_pad)
+
+
+def scatter_c_chunk(sspec: ShardPackSpec, chunk: Array, model_idx) -> Array:
+    """Place model shard ``model_idx``'s C chunk in a zeroed ``(c_pad,)``
+    segment — a ``psum`` over the model axis rebuilds one fsdp shard's full
+    C segment."""
+    return _scatter_chunk(chunk, model_idx, sspec.c_chunk, sspec.c_pad)
 
 
 def shard_valid_mask(sspec: ShardPackSpec, shard_idx) -> Array:
     """(d_local,) bool: True where this shard's position holds a real
-    element, False on the zero-padding tail of the replicated segment.
+    element, False on the zero-padding tails of the B/C/D segments.
     Padding must never re-enter the air (a dual update would otherwise turn
     Θ garbage at padded positions into non-zero λ there)."""
+    jm, jf = _split_idx(sspec, shard_idx)
     cols = jnp.arange(sspec.d_local)
-    seg_pos = shard_idx * sspec.rep_chunk + (cols - sspec.sharded_local)
-    return (cols < sspec.sharded_local) | (seg_pos < sspec.rep_size)
+    valid = cols < sspec.a_local
+    in_b = (cols >= sspec.b_start) & (cols < sspec.c_start)
+    valid |= in_b & (jf * sspec.b_chunk + (cols - sspec.b_start)
+                     < sspec.b_size)
+    in_c = (cols >= sspec.c_start) & (cols < sspec.sharded_local)
+    valid |= in_c & (jm * sspec.c_chunk + (cols - sspec.c_start)
+                     < sspec.c_size)
+    in_d = cols >= sspec.sharded_local
+    valid |= in_d & (shard_idx * sspec.rep_chunk
+                     + (cols - sspec.sharded_local) < sspec.rep_size)
+    return valid
+
+
+# -- canonical-index maps (the packing <-> sketch-codec contract) -----------
+
+def _resident_flat_index(sspec: ShardPackSpec, i: int, jm, jf) -> Array:
+    """uint32 canonical PackSpec index of every element of leaf ``i``'s
+    resident slice on shard (jm, jf) — built from broadcasted iotas with
+    TRACED per-dim block offsets, so the hot path never materialises a
+    host-side permutation (indices wrap mod 2^32 at >4G-param scale, the
+    hashed codec's historical behaviour)."""
+    eshape = sspec.spec.shapes[i]
+    lshape = _resident_eshape(sspec, i)
+    md, fd = sspec.shard_dims[i], sspec.fsdp_dims[i]
+    idx = jnp.zeros(lshape, jnp.uint32)
+    stride = 1
+    for axis in range(len(lshape) - 1, -1, -1):
+        ax = jax.lax.broadcasted_iota(jnp.uint32, lshape, axis)
+        if axis == md:
+            ax = ax + jnp.uint32(lshape[axis]) * jnp.asarray(
+                jm, jnp.uint32)
+        if axis == fd:
+            ax = ax + jnp.uint32(lshape[axis]) * jnp.asarray(
+                jf, jnp.uint32)
+        idx = idx + ax * jnp.uint32(stride)
+        stride *= eshape[axis]
+    return (idx + jnp.uint32(sspec.spec.offsets[i])).reshape(-1)
+
+
+def _seg_perm(sspec: ShardPackSpec, idxs, jm, jf, pad_to: int) -> Array:
+    flats = [_resident_flat_index(sspec, i, jm, jf) for i in idxs]
+    seg = flats[0] if len(flats) == 1 else jnp.concatenate(flats)
+    return _pad_seg(seg, pad_to)
+
+
+def b_segment_perm(sspec: ShardPackSpec, model_idx) -> Optional[Array]:
+    """(b_pad,) uint32 canonical indices of model shard ``model_idx``'s B
+    segment (0 on padding — pair with ``arange(b_pad) < b_size``)."""
+    if not sspec.b_leaves:
+        return None
+    return _seg_perm(sspec, sspec.b_leaves, model_idx, 0, sspec.b_pad)
+
+
+def c_segment_perm(sspec: ShardPackSpec, fsdp_idx) -> Optional[Array]:
+    """(c_pad,) uint32 canonical indices of fsdp shard ``fsdp_idx``'s C
+    segment."""
+    if not sspec.c_leaves:
+        return None
+    return _seg_perm(sspec, sspec.c_leaves, 0, fsdp_idx, sspec.c_pad)
+
+
+def rep_segment_perm(sspec: ShardPackSpec) -> Optional[Array]:
+    """(rep_pad,) uint32 canonical indices of the global D segment (static)."""
+    if not sspec.rep_leaves:
+        return None
+    return _seg_perm(sspec, sspec.rep_leaves, 0, 0, sspec.rep_pad)
+
+
+def shard_perm_local(sspec: ShardPackSpec, shard_idx) -> Array:
+    """(d_local,) uint32: canonical :class:`PackSpec` index of every
+    position of ONE shard's local buffer, traced (``shard_idx`` may be a
+    ``jax.lax.axis_index``).  Padding positions carry index 0 — mask them
+    with :func:`shard_valid_mask`.  This is the contract the shard-local
+    sketch codec hashes: each shard encodes/decodes its resident slice
+    against the GLOBAL index space, so per-shard partial sketches sum into
+    the one global codec."""
+    jm, jf = _split_idx(sspec, shard_idx)
+    parts = []
+    for i, off in enumerate(sspec.local_offsets):
+        if off is not None:
+            parts.append(_resident_flat_index(sspec, i, jm, jf))
+    if sspec.b_leaves:
+        parts.append(_chunk_at(b_segment_perm(sspec, jm), jf, sspec.b_chunk))
+    if sspec.c_leaves:
+        parts.append(_chunk_at(c_segment_perm(sspec, jf), jm, sspec.c_chunk))
+    if sspec.rep_leaves:
+        parts.append(_chunk_at(rep_segment_perm(sspec), shard_idx,
+                               sspec.rep_chunk))
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
 
 
 def shard_perm(sspec: ShardPackSpec):
     """(d_pad,) int numpy array: canonical :class:`PackSpec` index of every
     shard-packed position (-1 on padding).  Host-side (O(d_pad) memory) —
-    for tests and offline layout checks, not the hot path."""
+    for tests and offline layout checks, not the hot path (which uses
+    :func:`shard_perm_local`)."""
     import numpy as np
 
     spec = sspec.spec
+
+    def leaf_idx(i, jm, jf):
+        eshape = spec.shapes[i]
+        idx = np.arange(spec.sizes[i]).reshape(eshape)
+        sl = [slice(None)] * len(eshape)
+        md, fd = sspec.shard_dims[i], sspec.fsdp_dims[i]
+        if md is not None:
+            c = eshape[md] // sspec.n_model
+            sl[md] = slice(jm * c, (jm + 1) * c)
+        if fd is not None:
+            c = eshape[fd] // sspec.n_fsdp
+            sl[fd] = slice(jf * c, (jf + 1) * c)
+        return spec.offsets[i] + idx[tuple(sl)].reshape(-1)
+
+    def seg_idx(idxs, jm, jf, pad):
+        if not idxs:
+            return np.zeros((0,), np.int64)
+        seg = np.concatenate([leaf_idx(i, jm, jf) for i in idxs])
+        return np.concatenate([seg, np.full(pad - seg.size, -1, np.int64)])
+
+    rep_seg = seg_idx(sspec.rep_leaves, 0, 0, sspec.rep_pad)
     perm = np.full(sspec.d_pad, -1, np.int64)
-    seg_idx = np.concatenate(
-        [spec.offsets[i] + np.arange(spec.sizes[i])
-         for i in sspec.rep_leaves]) if sspec.rep_leaves else \
-        np.zeros((0,), np.int64)
     for j in range(sspec.n_shards):
+        jm, jf = j % sspec.n_model, j // sspec.n_model
         base = j * sspec.d_local
-        for i, dim in enumerate(sspec.shard_dims):
-            if dim is None:
+        pos = base
+        for i, off in enumerate(sspec.local_offsets):
+            if off is None:
                 continue
-            eshape = spec.shapes[i]
-            idx = np.arange(spec.sizes[i]).reshape(eshape)
-            sl = [slice(None)] * len(eshape)
-            c = eshape[dim] // sspec.n_shards
-            sl[dim] = slice(j * c, (j + 1) * c)
-            flat_idx = idx[tuple(sl)].reshape(-1)
-            off = base + sspec.local_offsets[i]
-            perm[off:off + flat_idx.size] = spec.offsets[i] + flat_idx
-        chunk = seg_idx[j * sspec.rep_chunk:(j + 1) * sspec.rep_chunk]
-        off = base + sspec.sharded_local
-        perm[off:off + chunk.size] = chunk
+            flat = leaf_idx(i, jm, jf)
+            perm[base + off:base + off + flat.size] = flat
+            pos += flat.size
+        b_seg = seg_idx(sspec.b_leaves, jm, 0, sspec.b_pad)
+        perm[base + sspec.b_start:base + sspec.b_start + sspec.b_chunk] = \
+            b_seg[jf * sspec.b_chunk:(jf + 1) * sspec.b_chunk]
+        c_seg = seg_idx(sspec.c_leaves, 0, jf, sspec.c_pad)
+        perm[base + sspec.c_start:base + sspec.c_start + sspec.c_chunk] = \
+            c_seg[jm * sspec.c_chunk:(jm + 1) * sspec.c_chunk]
+        perm[base + sspec.sharded_local:base + sspec.d_local] = \
+            rep_seg[j * sspec.rep_chunk:(j + 1) * sspec.rep_chunk]
     return perm
+
+
+def _slice_block(sspec: ShardPackSpec, leaf, i: int, jm: int, jf: int,
+                 nb: int):
+    """Global leaf -> its (jm, jf) resident block (host-side shard loops)."""
+    piece = leaf
+    md, fd = sspec.shard_dims[i], sspec.fsdp_dims[i]
+    if md is not None:
+        c = sspec.spec.shapes[i][md] // sspec.n_model
+        piece = jax.lax.slice_in_dim(piece, jm * c, (jm + 1) * c,
+                                     axis=nb + md)
+    if fd is not None:
+        c = sspec.spec.shapes[i][fd] // sspec.n_fsdp
+        piece = jax.lax.slice_in_dim(piece, jf * c, (jf + 1) * c,
+                                     axis=nb + fd)
+    return piece
+
+
+def _seg_global(sspec: ShardPackSpec, leaves, idxs, jm: int, jf: int,
+                pad_to: int) -> Optional[Array]:
+    if not idxs:
+        return None
+    flats = []
+    for i in idxs:
+        nb = leaves[i].ndim - len(sspec.spec.shapes[i])
+        piece = _slice_block(sspec, leaves[i], i, jm, jf, nb)
+        flats.append(piece.astype(jnp.float32).reshape(
+            piece.shape[:nb] + (-1,)))
+    seg = flats[0] if len(flats) == 1 else jnp.concatenate(flats, axis=-1)
+    return _pad_seg(seg, pad_to)
 
 
 def pack_shard_global(sspec: ShardPackSpec, tree: PyTree) -> Array:
     """GLOBAL tree -> the full ``lead + (d_pad,)`` shard-packed buffer
-    (concatenation of every shard's local pack).  Used at state *init* and
-    in tests; the per-round path never materialises this concatenate — each
-    device packs only its own shard inside ``shard_map``."""
+    (concatenation of every shard's local pack, fsdp-major).  Used at state
+    *init* and in tests; the per-round path never materialises this
+    concatenate — each device packs only its own shard inside
+    ``shard_map``."""
     leaves = jax.tree_util.tree_flatten(tree, is_leaf=_is_cplx)[0]
-    seg = rep_segment(sspec, tree)
     shards = []
     for j in range(sspec.n_shards):
+        jm, jf = j % sspec.n_model, j // sspec.n_model
         parts = []
-        for i, dim in enumerate(sspec.shard_dims):
-            if dim is None:
+        for i, off in enumerate(sspec.local_offsets):
+            if off is None:
                 continue
             nb = leaves[i].ndim - len(sspec.spec.shapes[i])
-            c = sspec.spec.shapes[i][dim] // sspec.n_shards
-            piece = jax.lax.slice_in_dim(leaves[i], j * c, (j + 1) * c,
-                                         axis=nb + dim)
+            piece = _slice_block(sspec, leaves[i], i, jm, jf, nb)
             parts.append(piece.astype(jnp.float32).reshape(
                 piece.shape[:nb] + (-1,)))
+        seg = _seg_global(sspec, leaves, sspec.b_leaves, jm, 0, sspec.b_pad)
         if seg is not None:
             parts.append(jax.lax.slice_in_dim(
-                seg, j * sspec.rep_chunk, (j + 1) * sspec.rep_chunk, axis=-1))
+                seg, jf * sspec.b_chunk, (jf + 1) * sspec.b_chunk, axis=-1))
+        seg = _seg_global(sspec, leaves, sspec.c_leaves, 0, jf, sspec.c_pad)
+        if seg is not None:
+            parts.append(jax.lax.slice_in_dim(
+                seg, jm * sspec.c_chunk, (jm + 1) * sspec.c_chunk, axis=-1))
+        seg = _seg_global(sspec, leaves, sspec.rep_leaves, 0, 0,
+                          sspec.rep_pad)
+        if seg is not None:
+            parts.append(jax.lax.slice_in_dim(
+                seg, j * sspec.rep_chunk, (j + 1) * sspec.rep_chunk,
+                axis=-1))
         shards.append(parts[0] if len(parts) == 1
                       else jnp.concatenate(parts, axis=-1))
     return shards[0] if len(shards) == 1 \
@@ -451,30 +792,65 @@ def unpack_shard_global(sspec: ShardPackSpec, buf: Array,
         raise ValueError(f"buffer last dim {buf.shape[-1]} != d_pad "
                          f"{sspec.d_pad}")
     lead = buf.shape[:-1]
-    locs = [jax.lax.slice_in_dim(buf, j * sspec.d_local,
-                                 (j + 1) * sspec.d_local, axis=-1)
-            for j in range(sspec.n_shards)]
-    seg = None
+    locs = [[jax.lax.slice_in_dim(
+        buf, (jf * sspec.n_model + jm) * sspec.d_local,
+        (jf * sspec.n_model + jm + 1) * sspec.d_local, axis=-1)
+        for jm in range(sspec.n_model)] for jf in range(sspec.n_fsdp)]
+    out: List[Optional[Array]] = [None] * sspec.spec.n_leaves
+    for i, off in enumerate(sspec.local_offsets):
+        if off is None:
+            continue
+        size = sspec.spec.sizes[i] // sspec.n_shards
+        md, fd = sspec.shard_dims[i], sspec.fsdp_dims[i]
+        rows = []
+        for jf in range(sspec.n_fsdp):
+            cols = []
+            for jm in range(sspec.n_model):
+                piece = jax.lax.slice_in_dim(locs[jf][jm], off, off + size,
+                                             axis=-1)
+                cols.append(piece.reshape(lead + _resident_eshape(sspec, i)))
+            rows.append(cols[0] if len(cols) == 1
+                        else jnp.concatenate(cols, axis=len(lead) + md))
+        out[i] = rows[0] if len(rows) == 1 \
+            else jnp.concatenate(rows, axis=len(lead) + fd)
+    if sspec.b_leaves:
+        for i, off in zip(sspec.b_leaves, sspec.b_offsets):
+            size = sspec.spec.sizes[i] // sspec.n_model
+            md = sspec.shard_dims[i]
+            cols = []
+            for jm in range(sspec.n_model):
+                seg = jnp.concatenate(
+                    [shard_b_chunk(sspec, locs[jf][jm])
+                     for jf in range(sspec.n_fsdp)], axis=-1) \
+                    if sspec.n_fsdp > 1 else shard_b_chunk(sspec, locs[0][jm])
+                piece = jax.lax.slice_in_dim(seg, off, off + size, axis=-1)
+                cols.append(piece.reshape(lead + _resident_eshape(sspec, i)))
+            out[i] = cols[0] if len(cols) == 1 \
+                else jnp.concatenate(cols, axis=len(lead) + md)
+    if sspec.c_leaves:
+        for i, off in zip(sspec.c_leaves, sspec.c_offsets):
+            size = sspec.spec.sizes[i] // sspec.n_fsdp
+            fd = sspec.fsdp_dims[i]
+            rows = []
+            for jf in range(sspec.n_fsdp):
+                seg = jnp.concatenate(
+                    [shard_c_chunk(sspec, locs[jf][jm])
+                     for jm in range(sspec.n_model)], axis=-1) \
+                    if sspec.n_model > 1 else shard_c_chunk(sspec, locs[jf][0])
+                piece = jax.lax.slice_in_dim(seg, off, off + size, axis=-1)
+                rows.append(piece.reshape(lead + _resident_eshape(sspec, i)))
+            out[i] = rows[0] if len(rows) == 1 \
+                else jnp.concatenate(rows, axis=len(lead) + fd)
     if sspec.rep_leaves:
         seg = jnp.concatenate(
-            [shard_rep_chunk(sspec, l) for l in locs], axis=-1)
-    out: List[Optional[Array]] = [None] * sspec.spec.n_leaves
-    for i, dim in enumerate(sspec.shard_dims):
-        if dim is None:
-            continue
-        pieces = []
-        for l in locs:
-            off = sspec.local_offsets[i]
-            size = sspec.spec.sizes[i] // sspec.n_shards
-            piece = jax.lax.slice_in_dim(l, off, off + size, axis=-1)
-            pieces.append(piece.reshape(lead + _local_eshape(sspec, i)))
-        nb = len(lead)
-        out[i] = pieces[0] if len(pieces) == 1 else \
-            jnp.concatenate(pieces, axis=nb + dim)
-    for i, off in zip(sspec.rep_leaves, sspec.rep_offsets):
-        piece = jax.lax.slice_in_dim(seg, off, off + sspec.spec.sizes[i],
-                                     axis=-1)
-        out[i] = piece.reshape(lead + sspec.spec.shapes[i])
+            [shard_rep_chunk(sspec, locs[jf][jm])
+             for jf in range(sspec.n_fsdp) for jm in range(sspec.n_model)],
+            axis=-1) if sspec.n_shards > 1 \
+            else shard_rep_chunk(sspec, locs[0][0])
+        for i, off in zip(sspec.rep_leaves, sspec.rep_offsets):
+            piece = jax.lax.slice_in_dim(seg, off, off + sspec.spec.sizes[i],
+                                         axis=-1)
+            out[i] = piece.reshape(lead + sspec.spec.shapes[i])
     if cast:
         out = [p.astype(sspec.spec.dtypes[i]) for i, p in enumerate(out)]
     return jax.tree_util.tree_unflatten(sspec.spec.treedef, out)

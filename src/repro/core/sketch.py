@@ -35,11 +35,13 @@ class SketchPlan:
 
     @classmethod
     def build(cls, key: Array, d: int, d_s: int) -> "SketchPlan":
+        # bernoulli construction unconditionally: `jax.random.rademacher`
+        # exists only on some JAX versions, and a version-dependent sign draw
+        # makes the codec (and every golden test on it) non-reproducible
         kb, ks = jax.random.split(key)
         bucket = jax.random.randint(kb, (d,), 0, d_s, dtype=jnp.int32)
-        sign = jax.random.rademacher(ks, (d,), dtype=jnp.float32) \
-            if hasattr(jax.random, "rademacher") else \
-            (2.0 * jax.random.bernoulli(ks, 0.5, (d,)).astype(jnp.float32) - 1.0)
+        sign = 2.0 * jax.random.bernoulli(
+            ks, 0.5, (d,)).astype(jnp.float32) - 1.0
         return cls(d=d, d_s=d_s, bucket=bucket, sign=sign)
 
 
@@ -94,18 +96,29 @@ def _flat_index(shape) -> Array:
     return idx
 
 
+def bucket_of(idx: Array, d_s: int, seed: int) -> Array:
+    """Bucket of raw uint32 canonical (packed) indices — the codec contract
+    in its purest form: any shard holding the canonical index of each of its
+    resident elements (``packing.shard_perm_local``) encodes against the
+    same global codec, wherever those elements physically live."""
+    return (_hash_u32(idx.astype(jnp.uint32), seed)
+            % jnp.uint32(d_s)).astype(jnp.int32)
+
+
+def sign_of(idx: Array, seed: int) -> Array:
+    bit = (_hash_u32(idx.astype(jnp.uint32), seed + 101) >> 7) & jnp.uint32(1)
+    return 2.0 * bit.astype(jnp.float32) - 1.0
+
+
 def hashed_bucket(shape, d_s: int, seed: int, offset: int = 0) -> Array:
     """``offset`` shifts the hashed element index — element ``i`` of a leaf
     that starts at packed offset ``o`` hashes as global index ``o + i``, so
     leafwise encodes compose into ONE global codec (see encode_packed)."""
-    idx = _flat_index(shape) + jnp.uint32(offset)
-    return (_hash_u32(idx, seed) % jnp.uint32(d_s)).astype(jnp.int32)
+    return bucket_of(_flat_index(shape) + jnp.uint32(offset), d_s, seed)
 
 
 def hashed_sign(shape, seed: int, offset: int = 0) -> Array:
-    idx = _flat_index(shape) + jnp.uint32(offset)
-    bit = (_hash_u32(idx, seed + 101) >> 7) & jnp.uint32(1)
-    return 2.0 * bit.astype(jnp.float32) - 1.0
+    return sign_of(_flat_index(shape) + jnp.uint32(offset), seed)
 
 
 def encode_hashed(v: Array, d_s: int, seed: int, offset: int = 0) -> Array:
@@ -128,28 +141,34 @@ def decode_hashed(s: Array, shape, seed: int, offset: int = 0) -> Array:
         * hashed_sign(shape, seed, offset)
 
 
-def encode_hashed_tree(tree, spec, d_s: int, seed: int) -> Array:
-    """ONE global count sketch of a whole pytree: Σ_leaf encode(leaf,
-    offset=spec.offsets[leaf]).
+def encode_shard_local(v: Array, idx: Array, valid: Array, d_s: int,
+                       seed: int) -> Array:
+    """One shard's ``(..., m)`` resident packed slice -> its ``(..., d_s)``
+    PARTIAL global count sketch.
 
-    Mathematically identical to ``encode_packed(pack(spec, tree))`` (tested)
-    but computed leafwise with shape-preserving scatter-adds, so arbitrary
-    (FSDP-)shardings survive — no flatten/concatenate of the host tensors.
-    ``spec`` is a :class:`repro.core.packing.PackSpec`.
+    ``idx`` is the (m,) uint32 canonical packed index of each position
+    (``packing.shard_perm_local``); ``valid`` the (m,) mask that zeroes
+    layout padding.  Because each canonical element lives on exactly one
+    shard, ``psum`` of the partial sketches over the shard axes equals the
+    global ``encode_packed(pack(global))`` — the identity the codec tests
+    pin.  Used inside ``shard_map``: no flatten/all-gather of the model.
     """
-    leaves = jax.tree_util.tree_leaves(tree)
-    out = jnp.zeros((d_s,), jnp.float32)
-    for leaf, off in zip(leaves, spec.offsets):
-        out = out + encode_hashed(leaf, d_s, seed, offset=off)
-    return out
+    signed = v.astype(jnp.float32) * sign_of(idx, seed) \
+        * valid.astype(jnp.float32)
+    out = jax.ops.segment_sum(jnp.moveaxis(signed, -1, 0),
+                              bucket_of(idx, d_s, seed), num_segments=d_s)
+    return jnp.moveaxis(out, 0, -1)
 
 
-def decode_hashed_tree(s: Array, spec, seed: int):
-    """(d_s,) -> pytree of f32 leaves shaped ``spec.shapes`` — the leafwise
-    (sharding-preserving) twin of ``unpack(spec, decode_packed(s))``."""
-    leaves = [decode_hashed(s, shape, seed, offset=off)
-              for shape, off in zip(spec.shapes, spec.offsets)]
-    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+def decode_shard_local(s: Array, idx: Array, valid: Array,
+                       seed: int) -> Array:
+    """(..., d_s) global sketch -> one shard's (..., m) resident estimate.
+
+    Pure gather from the (replicated) sketch — needs NO collective: each
+    shard decodes exactly its resident positions.  Padding decodes to 0.
+    """
+    out = s[..., bucket_of(idx, s.shape[-1], seed)] * sign_of(idx, seed)
+    return out * valid.astype(out.dtype)
 
 
 # ---------------------------------------------------------------------------

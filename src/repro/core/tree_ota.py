@@ -26,7 +26,9 @@ from repro.core.admm import AdmmConfig
 from repro.core.channel import ChannelConfig, rayleigh
 from repro.core.cplx import Complex
 from repro.core.packing import (ShardPackSpec, build_packspec, pack,
-                                pack_cplx, pack_shard_local, scatter_rep_chunk,
+                                pack_cplx, pack_shard_local, scatter_b_chunk,
+                                scatter_c_chunk, scatter_rep_chunk,
+                                shard_b_chunk, shard_c_chunk,
                                 shard_rep_chunk, shard_valid_mask, unpack,
                                 unpack_cplx, unpack_shard_local)
 
@@ -423,8 +425,18 @@ def ota_tree_round_leafwise(theta: PyTree, lam: PyTree, h: PyTree, key: Array,
 # layout — sharded P(data, model) — so no signal plane ever crosses the
 # model axis.
 
-def _mesh_data_axes(mesh, model_axis: str) -> Tuple[str, ...]:
-    return tuple(a for a in mesh.axis_names if a != model_axis)
+def _mesh_data_axes(mesh, model_axis: str,
+                    fsdp_axis: str = "fsdp") -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names
+                 if a not in (model_axis, fsdp_axis))
+
+
+def _shard_grid_axes(mesh, model_axis: str,
+                     fsdp_axis: str = "fsdp") -> Tuple[str, ...]:
+    """Mesh axes of the (fsdp, model) shard grid, fsdp-major — the axes the
+    packed ``d_pad`` dimension shards over (flat shard
+    ``j = jf * n_model + jm``)."""
+    return tuple(a for a in (fsdp_axis, model_axis) if a in mesh.axis_names)
 
 
 def _axes_entry(axes: Tuple[str, ...]):
@@ -432,57 +444,82 @@ def _axes_entry(axes: Tuple[str, ...]):
 
 
 def _shard_theta_specs(sspec: ShardPackSpec, wentry, model_axis: str,
-                       worker_dim: bool):
+                       worker_dim: bool, fsdp_axis: str = "fsdp"):
     """Per-leaf PartitionSpecs of the (worker-major) tree the shard-local
     round consumes/produces: worker dim over the data axes, the recorded
-    shard dim over ``model``, everything else replicated."""
+    model/fsdp shard dims over their mesh axes, everything else
+    replicated."""
     from jax.sharding import PartitionSpec as P
     specs = []
     lead = 1 if worker_dim else 0
-    for i, dim in enumerate(sspec.shard_dims):
+    for i, (mdim, fdim) in enumerate(zip(sspec.shard_dims,
+                                         sspec.fsdp_dims)):
         ax = [None] * (lead + len(sspec.spec.shapes[i]))
         if worker_dim:
             ax[0] = wentry
-        if dim is not None:
-            ax[lead + dim] = model_axis
+        if mdim is not None:
+            ax[lead + mdim] = model_axis
+        if fdim is not None:
+            ax[lead + fdim] = fsdp_axis
         specs.append(P(*ax))
     return jax.tree_util.tree_unflatten(sspec.spec.treedef, specs)
 
 
-def _rep_seg_psum(sspec: ShardPackSpec, plane: Array, shard_idx,
-                  model_axis: str) -> Optional[Array]:
-    """Rebuild the full replicated segment from the per-shard chunks: one
-    small ``psum`` over the model axis (norm/bias/scalar bytes only)."""
-    if not sspec.rep_leaves:
-        return None
-    chunk = shard_rep_chunk(sspec, plane)
-    return jax.lax.psum(scatter_rep_chunk(sspec, chunk, shard_idx),
-                        model_axis)
+def _segs_psum(sspec: ShardPackSpec, plane: Array, jm, jf, model_axis: str,
+               fsdp_axis: str = "fsdp"):
+    """Rebuild the full B/C/D segments from the per-shard chunks — one
+    small ``psum`` each over exactly the axes the segment is split across
+    (B over fsdp, C over model, D over both; norm/bias/scalar bytes only).
+    Returns ``(b_seg, c_seg, rep_seg)`` (None where the class is empty)."""
+    b_seg = c_seg = rep_seg = None
+    if sspec.b_leaves:
+        b_seg = scatter_b_chunk(sspec, shard_b_chunk(sspec, plane), jf)
+        if sspec.n_fsdp > 1:
+            b_seg = jax.lax.psum(b_seg, fsdp_axis)
+    if sspec.c_leaves:
+        c_seg = scatter_c_chunk(sspec, shard_c_chunk(sspec, plane), jm)
+        if sspec.n_model > 1:
+            c_seg = jax.lax.psum(c_seg, model_axis)
+    if sspec.rep_leaves:
+        j = jf * sspec.n_model + jm
+        rep_seg = scatter_rep_chunk(sspec, shard_rep_chunk(sspec, plane), j)
+        axes = tuple(a for a, n in ((fsdp_axis, sspec.n_fsdp),
+                                    (model_axis, sspec.n_model)) if n > 1)
+        if axes:
+            rep_seg = jax.lax.psum(rep_seg, axes if len(axes) > 1
+                                   else axes[0])
+    return b_seg, c_seg, rep_seg
 
 
 def unpack_cplx_shard_local(sspec: ShardPackSpec, buf: Complex, mesh,
-                            model_axis: str = "model") -> PyTree:
+                            model_axis: str = "model",
+                            fsdp_axis: str = "fsdp") -> PyTree:
     """Global shard-packed ``(W, d_pad)`` Complex planes -> tree of Complex
-    ``(W, ...)`` leaves, each carrying its natural model sharding.
+    ``(W, ...)`` leaves, each carrying its natural model/fsdp sharding.
 
     Runs inside ``shard_map`` so every sharded leaf is rebuilt from the
     slice already resident on its device (pure layout ops); only the small
-    replicated segment crosses the model axis (one psum).  This is how the
-    trainer reads λ/h slice-views for the penalty gradient without ever
+    B/C/replicated segments cross shard axes (one psum each).  This is how
+    the trainer reads λ/h slice-views for the penalty gradient without ever
     materialising a replicated (W, D) buffer.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    daxes = _mesh_data_axes(mesh, model_axis)
+    daxes = _mesh_data_axes(mesh, model_axis, fsdp_axis)
+    saxes = _shard_grid_axes(mesh, model_axis, fsdp_axis)
     wentry = _axes_entry(daxes)
 
     def body(b: Complex) -> PyTree:
-        j = jax.lax.axis_index(model_axis)
+        jm = jax.lax.axis_index(model_axis)
+        jf = jax.lax.axis_index(fsdp_axis) if fsdp_axis in saxes \
+            else jnp.int32(0)
 
         def one(plane):
-            seg = _rep_seg_psum(sspec, plane, j, model_axis)
-            return unpack_shard_local(sspec, plane, seg)
+            b_seg, c_seg, rep_seg = _segs_psum(sspec, plane, jm, jf,
+                                               model_axis, fsdp_axis)
+            return unpack_shard_local(sspec, plane, rep_seg,
+                                      b_seg=b_seg, c_seg=c_seg)
 
         re_l = jax.tree_util.tree_flatten(one(b.re))[0]
         im_l = jax.tree_util.tree_flatten(one(b.im))[0]
@@ -491,8 +528,9 @@ def unpack_cplx_shard_local(sspec: ShardPackSpec, buf: Complex, mesh,
             [Complex(r, i) for r, i in zip(re_l, im_l)])
 
     out_specs = _shard_theta_specs(sspec, wentry, model_axis,
-                                   worker_dim=True)
-    return shard_map(body, mesh=mesh, in_specs=(P(wentry, model_axis),),
+                                   worker_dim=True, fsdp_axis=fsdp_axis)
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(wentry, _axes_entry(saxes)),),
                      out_specs=out_specs, check_rep=False)(buf)
 
 
@@ -504,6 +542,7 @@ def ota_tree_round_shard_local(theta: PyTree, lam_p: Complex, h_p: Complex,
                                h_tx_p: Optional[Complex] = None,
                                Theta_prev: Optional[PyTree] = None,
                                model_axis: str = "model",
+                               fsdp_axis: str = "fsdp",
                                fused: Optional[bool] = None,
                                block_cols: Optional[int] = None,
                                guard=None,
@@ -565,7 +604,13 @@ def ota_tree_round_shard_local(theta: PyTree, lam_p: Complex, h_p: Complex,
     from jax.sharding import PartitionSpec as P
 
     rho = acfg.rho
-    daxes = _mesh_data_axes(mesh, model_axis)
+    daxes = _mesh_data_axes(mesh, model_axis, fsdp_axis)
+    saxes = _shard_grid_axes(mesh, model_axis, fsdp_axis)
+    sax_entry = saxes if len(saxes) > 1 else saxes[0]
+    has_fsdp = fsdp_axis in saxes
+    if sspec.n_fsdp > 1 and not has_fsdp:
+        raise ValueError(f"spec has n_fsdp={sspec.n_fsdp} but mesh "
+                         f"{mesh.axis_names} has no '{fsdp_axis}' axis")
     wentry = _axes_entry(daxes)
     #: worker axis entirely local -> run the fused (masked) receive kernel
     #: per shard instead of composing around a psum
@@ -595,7 +640,9 @@ def ota_tree_round_shard_local(theta: PyTree, lam_p: Complex, h_p: Complex,
         from repro.faults import guards as _fg, plan as _fp
         mask = mask if has_mask else None      # dummies stand in for None
         h_tx = h_tx if has_htx else None
-        j = jax.lax.axis_index(model_axis)
+        jm = jax.lax.axis_index(model_axis)
+        jf = jax.lax.axis_index(fsdp_axis) if has_fsdp else jnp.int32(0)
+        j = jf * sspec.n_model + jm                       # fsdp-major flat
         theta_p = pack_shard_local(sspec, theta, j)       # (W_l, d_local)
         budget = ccfg.transmit_power * sspec.spec.d       # real elements
         theta_tx = theta_p
@@ -613,9 +660,9 @@ def ota_tree_round_shard_local(theta: PyTree, lam_p: Complex, h_p: Complex,
             planes = [theta_tx, lam.re, lam.im, h.re, h.im]
             if h_tx is not None:
                 planes += [h_tx.re, h_tx.im]
-            # a worker's row spans every model shard: OR the local verdicts
+            # a worker's row spans every shard: OR the local verdicts
             bad = _fg._rows_nonfinite(*planes).astype(jnp.float32)
-            bad = jax.lax.psum(bad, model_axis) > 0.0
+            bad = jax.lax.psum(bad, sax_entry) > 0.0
             base = jnp.ones(bad.shape, bool) if mask is None else mask
             evicted_l = bad & base
             mask = base & ~evicted_l
@@ -628,7 +675,7 @@ def ota_tree_round_shard_local(theta: PyTree, lam_p: Complex, h_p: Complex,
                 theta_tx, lam, h, rho, mask=mask, h_tx=h_tx,
                 backend=backend, block_cols=block_cols)
             mrf = None if local_w else (lambda a: jax.lax.pmin(a, daxes))
-            energy = (jax.lax.psum(energy_l, model_axis)
+            energy = (jax.lax.psum(energy_l, sax_entry)
                       if acfg.power_control else None)
             if not local_w:
                 y_l = jax.lax.psum(y_l, daxes)
@@ -638,7 +685,7 @@ def ota_tree_round_shard_local(theta: PyTree, lam_p: Complex, h_p: Complex,
                 from repro.core import power as _power
 
                 def gsum(s):
-                    return jax.lax.psum(s, model_axis)
+                    return jax.lax.psum(s, sax_entry)
 
                 def epi(k, attempt, with_burst):
                     if acfg.power_control:
@@ -703,7 +750,7 @@ def ota_tree_round_shard_local(theta: PyTree, lam_p: Complex, h_p: Complex,
             if acfg.power_control:
                 # per-worker TOTAL energy: every element owned by one shard
                 energy = jax.lax.psum(transport.worker_energy(signals),
-                                      model_axis)
+                                      sax_entry)
                 inv_alpha = transport.inv_alpha_from_energy(
                     energy, budget,
                     min_reduce_fn=None if local_w
@@ -734,8 +781,10 @@ def ota_tree_round_shard_local(theta: PyTree, lam_p: Complex, h_p: Complex,
             valid = shard_valid_mask(sspec, j)
             lam_new = cplx.cwhere(valid[None, :], lam_new,
                                   cplx.czero(lam_new.re.shape))
-        seg = _rep_seg_psum(sspec, Theta_p, j, model_axis)
-        Theta_tree = unpack_shard_local(sspec, Theta_p, seg)
+        b_seg, c_seg, rep_seg = _segs_psum(sspec, Theta_p, jm, jf,
+                                           model_axis, fsdp_axis)
+        Theta_tree = unpack_shard_local(sspec, Theta_p, rep_seg,
+                                        b_seg=b_seg, c_seg=c_seg)
         out = [Theta_tree, lam_new, inv_alpha]
         if has_stale:
             out.append(stale_next)
@@ -746,10 +795,10 @@ def ota_tree_round_shard_local(theta: PyTree, lam_p: Complex, h_p: Complex,
         return tuple(out)
 
     theta_specs = _shard_theta_specs(sspec, wentry, model_axis,
-                                     worker_dim=True)
+                                     worker_dim=True, fsdp_axis=fsdp_axis)
     Theta_specs = _shard_theta_specs(sspec, wentry, model_axis,
-                                     worker_dim=False)
-    buf_spec = P(wentry, model_axis)
+                                     worker_dim=False, fsdp_axis=fsdp_axis)
+    buf_spec = P(wentry, sax_entry)
     in_specs = (theta_specs, buf_spec, buf_spec, P(),
                 P(wentry) if has_mask else P(),
                 buf_spec if has_htx else P(),

@@ -108,11 +108,13 @@ def _memory(compiled, args, in_shardings, mesh) -> Dict[str, float]:
 
 def run_one(arch: str, shape_name: str, *, multi_pod: bool,
             reduced: bool = False, keep_hlo: bool = False,
-            packed_uplink=None) -> Dict[str, Any]:
-    mesh = make_production_mesh(multi_pod=multi_pod)
+            packed_uplink=None, fsdp: int = 1, fl_mode=None,
+            sketch_ratio: int = 256) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=multi_pod, fsdp=fsdp)
     t0 = time.time()
     spec = build_spec(arch, shape_name, mesh, multi_pod=multi_pod,
-                      reduced=reduced, packed_uplink=packed_uplink)
+                      reduced=reduced, packed_uplink=packed_uplink,
+                      fl_mode=fl_mode, sketch_ratio=sketch_ratio)
     from repro.launch.shardings import rules_for
     cfg0 = get_config(arch)
     if reduced:
@@ -227,6 +229,17 @@ def main() -> None:
                          "per-leaf leafwise oracle (the collective-permute "
                          "baseline CI compares against); results are "
                          "tagged _packed-<choice> when not auto")
+    ap.add_argument("--fsdp", type=int, default=1,
+                    help="split the 16-wide data plane into (data, fsdp): "
+                         "fsdp=4 -> 4x4x16 (data, fsdp, model) — the 2D "
+                         "(fsdp, model) shard grid; results tagged _fsdp-N")
+    ap.add_argument("--mode", default=None,
+                    choices=["replicated", "sketched"],
+                    help="force the FL mode (default: sketched for "
+                         "BIG_ARCHS at full size, replicated otherwise); "
+                         "results tagged _mode-<mode> when forced")
+    ap.add_argument("--sketch-ratio", type=int, default=256,
+                    help="sketched mode: d_s = ceil(packed_size / ratio)")
     args = ap.parse_args()
     packed_uplink = {"auto": None, "on": True, "off": False}[args.packed]
 
@@ -248,6 +261,10 @@ def main() -> None:
             tag += "_opt-" + args.opt.replace(",", "+")
         if args.packed != "auto":
             tag += f"_packed-{args.packed}"
+        if args.fsdp > 1:
+            tag += f"_fsdp-{args.fsdp}"
+        if args.mode is not None:
+            tag += f"_mode-{args.mode}"
         path = os.path.join(args.out, tag + ".json")
         if os.path.exists(path):
             print(f"[skip] {tag} (exists)")
@@ -255,7 +272,9 @@ def main() -> None:
         print(f"[run ] {tag}", flush=True)
         try:
             res = run_one(arch, shape_name, multi_pod=args.multi_pod,
-                          reduced=args.reduced, packed_uplink=packed_uplink)
+                          reduced=args.reduced, packed_uplink=packed_uplink,
+                          fsdp=args.fsdp, fl_mode=args.mode,
+                          sketch_ratio=args.sketch_ratio)
             with open(path, "w") as f:
                 json.dump(res, f, indent=1)
             r = res["roofline"]

@@ -5,6 +5,11 @@ Multi-pod:  2×16×16 = 512 chips, axes ("pod", "data", "model") — the "pod"
 axis carries extra FL workers (hierarchical over-the-air aggregation crosses
 the inter-pod links, which is exactly what the multi-pod dry-run must prove
 lowers).
+``fsdp > 1`` splits the data plane into ("data", "fsdp") — e.g. fsdp=4 on a
+single pod gives 4×4×16 axes ("data", "fsdp", "model"): worker/batch stays
+on "data" only, a second parameter dim shards over "fsdp", and the 2D
+(fsdp, model) shard grid is the :class:`repro.core.packing.ShardPackSpec`
+layout contract.
 
 Defined as functions so importing this module never touches jax device
 state; `dryrun.py` sets XLA_FLAGS before any jax import.
@@ -16,9 +21,18 @@ from typing import Tuple
 import jax
 
 
-def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+def make_production_mesh(*, multi_pod: bool = False,
+                         fsdp: int = 1) -> jax.sharding.Mesh:
+    if fsdp <= 1:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+        axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+        return jax.make_mesh(shape, axes)
+    if 16 % fsdp:
+        raise ValueError(f"fsdp={fsdp} must divide the 16-wide data plane")
+    shape = (2, 16 // fsdp, fsdp, 16) if multi_pod \
+        else (16 // fsdp, fsdp, 16)
+    axes = ("pod", "data", "fsdp", "model") if multi_pod \
+        else ("data", "fsdp", "model")
     return jax.make_mesh(shape, axes)
 
 

@@ -53,6 +53,23 @@ def _is_expert_leaf(names: Tuple[str, ...]) -> bool:
     return names[-1] in _EXPERT
 
 
+def fsdp_axes(mesh: Mesh, *, worker_dim: bool,
+              multi_pod: bool) -> Optional[Tuple[str, ...]]:
+    """Mesh axes that carry the FSDP parameter dim.
+
+    A dedicated ``fsdp`` mesh axis always wins (2D data×fsdp×model meshes,
+    ``make_production_mesh(fsdp=N)``).  Without one, the legacy FSDP-over-
+    data placement only exists for state WITHOUT a leading worker dim
+    (the sketched 110B base params): a (W, ...) leaf already spends the
+    data axes on its worker dim, so fsdp is disabled there.
+    """
+    if "fsdp" in mesh.axis_names:
+        return ("fsdp",)
+    if not worker_dim:
+        return data_axes(multi_pod)
+    return None
+
+
 def param_pspec(path, leaf_shape: Tuple[int, ...], cfg: ModelConfig,
                 mesh: Mesh, *, worker_dim: bool, fsdp: bool,
                 multi_pod: bool) -> P:
@@ -64,6 +81,10 @@ def param_pspec(path, leaf_shape: Tuple[int, ...], cfg: ModelConfig,
     spec: list = [None] * ndim
     daxes = data_axes(multi_pod)
     model_n = mesh.shape["model"]
+    faxes = fsdp_axes(mesh, worker_dim=worker_dim, multi_pod=multi_pod) \
+        if fsdp else None
+    f_entry = (faxes if len(faxes) > 1 else faxes[0]) if faxes else None
+    f_n = axis_size(mesh, faxes) if faxes else 0
 
     lead = 0
     if worker_dim:
@@ -74,20 +95,23 @@ def param_pspec(path, leaf_shape: Tuple[int, ...], cfg: ModelConfig,
         return (dim_idx >= lead and leaf_shape[dim_idx] % axis_n == 0
                 and leaf_shape[dim_idx] >= axis_n)
 
+    def f_ok(dim_idx: int) -> bool:
+        return f_entry is not None and ok(dim_idx, f_n)
+
     # moe expert tensors: trailing (E, d, f)
     if name in _EXPERT and ndim - lead >= 3 and "layers" in "".join(names):
         e_dim = ndim - 3
         if cfg.n_experts and leaf_shape[e_dim] == cfg.n_experts and ok(e_dim, model_n):
             spec[e_dim] = "model"
-            if fsdp and ok(ndim - 2, axis_size(mesh, daxes)):
-                spec[ndim - 2] = daxes if len(daxes) > 1 else daxes[0]
+            if f_ok(ndim - 2):
+                spec[ndim - 2] = f_entry
             return P(*spec)
 
     if name == "table":  # embedding (V, D)
         if ok(ndim - 2, model_n):
             spec[ndim - 2] = "model"
-        if fsdp and ok(ndim - 1, axis_size(mesh, daxes)):
-            spec[ndim - 1] = daxes if len(daxes) > 1 else daxes[0]
+        if f_ok(ndim - 1):
+            spec[ndim - 1] = f_entry
         return P(*spec)
 
     if name in ("wk_b", "wv_b"):  # MLA decompression (H, c, hd)
@@ -98,15 +122,15 @@ def param_pspec(path, leaf_shape: Tuple[int, ...], cfg: ModelConfig,
     if name in _LAST_DIM_MODEL and ndim - lead >= 2:
         if ok(ndim - 1, model_n):
             spec[ndim - 1] = "model"
-        if fsdp and ok(ndim - 2, axis_size(mesh, daxes)):
-            spec[ndim - 2] = daxes if len(daxes) > 1 else daxes[0]
+        if f_ok(ndim - 2):
+            spec[ndim - 2] = f_entry
         return P(*spec)
 
     if name in _PREV_DIM_MODEL and ndim - lead >= 2:
         if ok(ndim - 2, model_n):
             spec[ndim - 2] = "model"
-        if fsdp and ok(ndim - 1, axis_size(mesh, daxes)):
-            spec[ndim - 1] = daxes if len(daxes) > 1 else daxes[0]
+        if f_ok(ndim - 1):
+            spec[ndim - 1] = f_entry
         return P(*spec)
 
     # conv weights, norms, biases, scalars: replicated (bar the worker dim)
@@ -150,6 +174,44 @@ def model_shard_dims(tree: PyTree, cfg: ModelConfig, mesh: Mesh, *,
                 dim = k - lead
         dims.append(dim)
     return tuple(dims)
+
+
+def shard_dims_2d(tree: PyTree, cfg: ModelConfig, mesh: Mesh, *,
+                  multi_pod: bool, worker_dim: bool = True
+                  ) -> Tuple[Tuple[Optional[int], ...],
+                             Tuple[Optional[int], ...]]:
+    """Per-leaf ``(model_dims, fsdp_dims)`` ELEMENT-dim indices — the 2D
+    layout contract between :func:`param_pspec` and
+    :class:`repro.core.packing.ShardPackSpec`.
+
+    ``model_dims[i]`` is the element dim of leaf ``i`` sharded over the
+    mesh ``model`` axis; ``fsdp_dims[i]`` the dim sharded over the fsdp
+    axes (:func:`fsdp_axes` — the dedicated ``fsdp`` axis, or the data
+    axes for worker-dim-free state on meshes without one).  Both ``None``
+    where the leaf is replicated on that grid dimension.  The shard-local
+    transport and the sketched codec pack, per (fsdp, model) shard,
+    exactly the slice these shardings make resident there.
+    """
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    lead = 1 if worker_dim else 0
+    faxes = fsdp_axes(mesh, worker_dim=worker_dim, multi_pod=multi_pod)
+    fset = frozenset(faxes or ())
+    mdims, fdims = [], []
+    for p, v in flat:
+        spec = param_pspec(p, v.shape, cfg, mesh, worker_dim=worker_dim,
+                           fsdp=True, multi_pod=multi_pod)
+        md = fd = None
+        for k, entry in enumerate(spec):
+            if k < lead:
+                continue
+            axes = entry if isinstance(entry, (tuple, list)) else (entry,)
+            if "model" in axes:
+                md = k - lead
+            elif fset and fset & {a for a in axes if a}:
+                fd = k - lead
+        mdims.append(md)
+        fdims.append(fd)
+    return tuple(mdims), tuple(fdims)
 
 
 # ---------------------------------------------------------------------------

@@ -89,7 +89,9 @@ def build_train_spec(arch: str, mesh: Mesh, *, multi_pod: bool,
                      scenario: Optional[str] = None,
                      packed_uplink: Optional[bool] = None,
                      faults: Optional[Any] = None,
-                     guard: Optional[Any] = None) -> DryRunSpec:
+                     guard: Optional[Any] = None,
+                     fl_mode: Optional[str] = None,
+                     sketch_ratio: int = 256) -> DryRunSpec:
     """``transport_backend`` ("jnp" | "pallas" | None = REPRO_USE_PALLAS
     env var), ``train_driver`` ("scan" | "loop"), ``scenario`` (a
     ``repro.phy`` preset; None = legacy block fading — scenarios now run on
@@ -99,9 +101,13 @@ def build_train_spec(arch: str, mesh: Mesh, *, multi_pod: bool,
     per-leaf leafwise oracle, the baseline the CI reshard assert compares
     against) are per-experiment fields threaded into the trainer /
     recorded in meta — not env-only.  ``faults``/``guard`` (a
-    ``repro.faults`` FaultPlan / GuardConfig) ride the replicated packed
-    path and add the per-worker fault-tracker state (``flt``) to the
-    sharded train-state contract."""
+    ``repro.faults`` FaultPlan / GuardConfig) ride the packed transport
+    in BOTH modes and add the per-worker fault-tracker state (``flt``)
+    to the sharded train-state contract.  ``fl_mode`` forces
+    "replicated" | "sketched" (None = sketched for BIG_ARCHS at full
+    size, replicated otherwise); sketched consensus runs on the
+    shard-local packed transport in sketch space, so scenarios / faults
+    / guards apply there too (``sketch_ratio`` sizes d_s)."""
     if train_driver not in ("scan", "loop"):
         raise ValueError(f"unknown train driver {train_driver!r}")
     shp = SHAPES["train_4k"]
@@ -115,18 +121,16 @@ def build_train_spec(arch: str, mesh: Mesh, *, multi_pod: bool,
     gbatch = 2 * d_n if reduced else shp["batch"]
     model_parallel = dict(mesh.shape).get("model", 1) > 1
 
-    sketched = arch in BIG_ARCHS and not reduced
+    if fl_mode not in (None, "replicated", "sketched"):
+        raise ValueError(f"unknown fl_mode {fl_mode!r}")
+    sketched = fl_mode == "sketched" if fl_mode is not None \
+        else arch in BIG_ARCHS and not reduced
     if sketched:
-        if scenario is not None:
-            raise ValueError("phy scenarios are a replicated-mode feature; "
-                             f"{arch} trains sketched")
-        if faults is not None or guard is not None:
-            raise ValueError("faults/guards are a replicated-mode feature; "
-                             f"{arch} trains sketched")
         W = 8
         flcfg = FLConfig(mode="sketched", n_workers=W, local_steps=1,
-                         local_lr=1e-3, sketch_ratio=256,
-                         transport_backend=transport_backend)
+                         local_lr=1e-3, sketch_ratio=sketch_ratio,
+                         transport_backend=transport_backend,
+                         scenario=scenario, faults=faults, guard=guard)
         bw = gbatch // W
     else:
         W = d_n
@@ -151,15 +155,25 @@ def build_train_spec(arch: str, mesh: Mesh, *, multi_pod: bool,
 
     kw = dict(cfg=cfg, mesh=mesh, multi_pod=multi_pod)
     if sketched:
-        # shared params FSDP 2D; sketch-space state small -> replicated
+        # shared params sharded over the (fsdp, model) grid (a dedicated
+        # "fsdp" mesh axis when present, FSDP-over-data otherwise); the
+        # whole sketch-space state ((W, d_s) consensus planes, scenario
+        # channel, fault tracker) is ~P/ratio -> replicated
         state_spec = type(state_sds)(
             Theta=SH.tree_pspecs(state_sds.Theta, worker_dim=False,
                                  fsdp=True, **kw),
             lam=jax.tree.map(lambda _: P(), state_sds.lam),
             chan=jax.tree.map(lambda _: P(), state_sds.chan),
             step=P(),
+            flt=None if state_sds.flt is None else jax.tree.map(
+                lambda _: P(), state_sds.flt),
         )
-        batch_spec = {k: P(*((None, daxes if len(daxes) > 1 else daxes[0])
+        # inner (per-worker) batch dim shards over data only when it
+        # divides (reduced runs keep it replicated)
+        inner = daxes if len(daxes) > 1 else daxes[0]
+        batch_spec = {k: P(*((None,
+                              inner if v.shape[1] % d_n == 0
+                              and v.shape[1] >= d_n else None)
                              + (None,) * (len(v.shape) - 2)))
                       for k, v in batch.items()}
     else:
@@ -224,13 +238,17 @@ def build_train_spec(arch: str, mesh: Mesh, *, multi_pod: bool,
         donate_argnums=(0,),
         meta=dict(kind="train", arch=arch, seq=seq, global_batch=gbatch,
                   fl_mode=flcfg.mode, n_workers=W,
+                  sketch_ratio=sketch_ratio if sketched else None,
+                  fsdp=dict(mesh.shape).get("fsdp", 1),
                   sliding_window=cfg.sliding_window,
                   transport_backend=transport_backend,
                   train_driver=train_driver, scenario=scenario,
                   packed_uplink=packed_uplink,
                   faulted=faults is not None, guarded=guard is not None,
-                  shard_local=bool(not sketched and model_parallel
-                                   and packed_uplink is not False)),
+                  shard_local=bool(
+                      (model_parallel
+                       or dict(mesh.shape).get("fsdp", 1) > 1)
+                      and (sketched or packed_uplink is not False))),
     )
 
 
@@ -316,7 +334,9 @@ def build_spec(arch: str, shape_name: str, mesh: Mesh, *, multi_pod: bool,
                scenario: Optional[str] = None,
                packed_uplink: Optional[bool] = None,
                faults: Optional[Any] = None,
-               guard: Optional[Any] = None) -> DryRunSpec:
+               guard: Optional[Any] = None,
+               fl_mode: Optional[str] = None,
+               sketch_ratio: int = 256) -> DryRunSpec:
     kind = SHAPES[shape_name]["kind"]
     if kind == "train":
         return build_train_spec(arch, mesh, multi_pod=multi_pod,
@@ -325,7 +345,8 @@ def build_spec(arch: str, shape_name: str, mesh: Mesh, *, multi_pod: bool,
                                 train_driver=train_driver,
                                 scenario=scenario,
                                 packed_uplink=packed_uplink,
-                                faults=faults, guard=guard)
+                                faults=faults, guard=guard,
+                                fl_mode=fl_mode, sketch_ratio=sketch_ratio)
     if kind == "prefill":
         return build_prefill_spec(arch, mesh, multi_pod=multi_pod,
                                   reduced=reduced)

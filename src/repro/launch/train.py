@@ -31,6 +31,17 @@ def main() -> None:
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--mode", default="replicated",
                     choices=["replicated", "sketched"])
+    ap.add_argument("--sketch-ratio", type=int, default=256,
+                    help="sketched mode: compression ratio, "
+                         "d_s = ceil(packed_size / ratio)")
+    ap.add_argument("--sketch-lr", type=float, default=1.0,
+                    help="step size applied to the decoded sketch delta")
+    ap.add_argument("--fsdp", type=int, default=1,
+                    help="shard parameters over a dedicated 'fsdp' mesh "
+                         "axis of this size (requires fsdp to divide the "
+                         "local device count; the launcher builds a "
+                         "(data, fsdp, model) mesh and both FL modes run "
+                         "their packed transport shard-locally on it)")
     ap.add_argument("--backend", default=None, choices=["jnp", "pallas"],
                     help="OTA transport backend (default: REPRO_USE_PALLAS "
                          "env var)")
@@ -133,10 +144,14 @@ def main() -> None:
     cfg = model.cfg
     W = args.workers
 
-    if args.scenario is not None and args.mode != "replicated":
-        raise SystemExit("--scenario requires --mode replicated (the "
-                         "scenario engine runs over the packed (W, D) "
-                         "replicated state)")
+    mesh = None
+    if args.fsdp > 1:
+        n_dev = jax.device_count()
+        if n_dev % args.fsdp:
+            raise SystemExit(f"--fsdp {args.fsdp} must divide the local "
+                             f"device count ({n_dev})")
+        mesh = jax.make_mesh((n_dev // args.fsdp, args.fsdp, 1),
+                             ("data", "fsdp", "model"))
 
     faults = guard = None
     crash_at = ()
@@ -160,13 +175,10 @@ def main() -> None:
                             snr_floor_db=args.snr_floor_db,
                             max_retries=args.max_retries,
                             power_backoff=args.power_backoff)
-    if (faults is not None or guard is not None) \
-            and args.mode != "replicated":
-        raise SystemExit("fault injection / round guards require "
-                         "--mode replicated")
-
     flcfg = FLConfig(mode=args.mode, n_workers=W,
                      local_steps=args.local_steps, local_lr=args.local_lr,
+                     sketch_ratio=args.sketch_ratio,
+                     sketch_lr=args.sketch_lr,
                      transport_backend=args.backend,
                      scenario=args.scenario, doppler_hz=args.doppler_hz,
                      csi_err=args.csi_err, h_min=args.h_min,
@@ -179,7 +191,7 @@ def main() -> None:
     acfg = AdmmConfig(rho=args.rho, flip_on_change=False)
     ccfg = ChannelConfig(n_workers=W, snr_db=args.snr_db,
                          coherence_iters=args.coherence)
-    init_fn, train_step = make_fl_train(model, flcfg, acfg, ccfg)
+    init_fn, train_step = make_fl_train(model, flcfg, acfg, ccfg, mesh=mesh)
 
     # per-worker non-IID token streams (data pipeline)
     data = token_dataset(jax.random.fold_in(key, 1), n_sequences=64,

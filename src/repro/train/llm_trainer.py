@@ -15,16 +15,22 @@ Two execution modes (DESIGN.md §4):
 
 * ``sketched`` — A-FADMM-CS for archs whose per-worker copies exceed HBM
   (qwen1.5-110b, deepseek-v3-671b; the paper's §6 "Large Models" extension).
-  One FSDP-sharded global model; workers are time-multiplexed via a
+  One (fsdp×model)-sharded global model; workers are time-multiplexed via a
   ``lax.scan`` (faithful to FL semantics: each worker's local delta is
-  computed from its own shard of data), the delta is hash-count-sketched by
-  ONE global codec over the packed index space (computed leafwise so FSDP
-  shardings survive) to ``d/d_sketch_ratio`` coordinates, and the
-  full A-FADMM pipeline runs in sketch space through the shared transport
-  layer: per-worker modulate + ``transport.ota_accumulate`` inside the scan
-  (the running superposition), then a single fused receive
-  (``transport.ota_receive_accumulated``) and a single dual update per
-  round.
+  computed from its own shard of data).  The delta is hash-count-sketched by
+  ONE global codec over the SHARD-LOCAL packed index space
+  (``core/packing.ShardPackSpec``): inside ``shard_map`` each (fsdp, model)
+  shard packs its resident slice, encodes a partial sketch against the
+  canonical global indices (``shard_perm_local``), and one ``psum`` over the
+  shard grid yields the global ``(d_s,)`` sketch — no flatten/all-gather of
+  the model, no per-leaf codec loop.  The stacked ``(W, d_s)`` sketches then
+  ride the SAME packed transport as the replicated mode
+  (``tree_ota.ota_tree_round_packed_state``): one fused receive, one dual
+  update, phy scenarios (the ``(W,)`` participation mask threads into the
+  sketched round), and fault guards — all inherited, not reimplemented.
+  Decode is collective-free: each shard gathers its resident coordinates
+  from the replicated ``(d_s,)`` consensus and applies the delta to its
+  resident base-param slice.
 
 Both modes expose the same ``(init_fn, train_step)`` pair; ``train_step`` is
 a pure function of ``(state, batch, key)`` suitable for jit / pjit lowering
@@ -42,8 +48,13 @@ from repro.core import cplx, transport
 from repro.core.admm import AdmmConfig
 from repro.core.channel import ChannelConfig
 from repro.core.cplx import Complex
-from repro.core.packing import build_packspec, build_shard_packspec, unpack_cplx
-from repro.core.sketch import decode_hashed_tree, encode_hashed_tree
+from repro.core.packing import (b_segment_perm, build_packspec,
+                                build_shard_packspec, c_segment_perm,
+                                pack_shard_local, rep_segment_perm,
+                                shard_perm_local, shard_rep_chunk,
+                                shard_valid_mask, unpack_cplx,
+                                unpack_shard_local)
+from repro.core.sketch import decode_shard_local, encode_shard_local
 from repro.core.tree_ota import (TreeChannel, TreeFLState, _zmap,
                                  init_channel_packed, init_channel_tree,
                                  ota_tree_round, ota_tree_round_packed_state,
@@ -82,12 +93,14 @@ class FLConfig:
     #: tree_ota.ota_tree_round_shard_local), or keep the per-leaf tree
     #: state + reference loop (False — the semantics oracle).
     packed_uplink: Optional[bool] = None
-    #: ``repro.phy`` wireless scenario preset (replicated mode): None keeps
-    #: the legacy i.i.d. block-fading channel bit-for-bit; a name from
+    #: ``repro.phy`` wireless scenario preset: None keeps the legacy i.i.d.
+    #: block-fading channel bit-for-bit; a name from
     #: ``phy.list_scenarios()`` runs the scenario engine over the packed
-    #: (W, D) index space — shard-locally packed under model-parallel
-    #: meshes, where the (W,)-shaped masks/gains replicate across the
-    #: model axis (forces the packed state layout).
+    #: index space — (W, D) in replicated mode (shard-locally packed under
+    #: model-parallel meshes, where the (W,)-shaped masks/gains replicate
+    #: across the model axis and force the packed state layout), and the
+    #: sketch-space (W, d_s) planes in sketched mode (the participation
+    #: mask threads into the sketched round).
     scenario: Optional[str] = None
     #: scenario overrides (None = the preset's value)
     doppler_hz: Optional[float] = None
@@ -145,6 +158,7 @@ def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
         from repro.models.sharding import current_mesh
         mesh = current_mesh()
     model_n = dict(mesh.shape).get("model", 1) if mesh is not None else 1
+    fsdp_n = dict(mesh.shape).get("fsdp", 1) if mesh is not None else 1
 
     scn = None
     if flcfg.scenario is not None:
@@ -179,14 +193,16 @@ def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
             return flcfg.packed_uplink
         return True
 
-    #: model-parallel mesh + packed state -> shard-local packed buffers
-    shard_local = _packed_state() and model_n > 1
+    #: model-parallel / fsdp mesh + packed state -> shard-local packed
+    #: buffers over the 2D (fsdp, model) shard grid
+    shard_local = _packed_state() and (model_n > 1 or fsdp_n > 1)
 
     def _shard_spec(theta):
-        from repro.launch.shardings import model_shard_dims
-        dims = model_shard_dims(theta, model.cfg, mesh,
-                                multi_pod="pod" in mesh.axis_names)
-        return build_shard_packspec(theta, dims, model_n, batch_dims=1)
+        from repro.launch.shardings import shard_dims_2d
+        mdims, fdims = shard_dims_2d(theta, model.cfg, mesh,
+                                     multi_pod="pod" in mesh.axis_names)
+        return build_shard_packspec(theta, mdims, model_n, batch_dims=1,
+                                    fsdp_dims=fdims, n_fsdp=fsdp_n)
 
     def init_fn(key: Array) -> TreeFLState:
         kp, kc = jax.random.split(key)
@@ -233,7 +249,9 @@ def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
             # to prevent — fail loudly instead of compiling it
             from repro.models.sharding import current_mesh
             active = current_mesh()
-            if active is not None and dict(active.shape).get("model", 1) > 1:
+            if active is not None and (
+                    dict(active.shape).get("model", 1) > 1
+                    or dict(active.shape).get("fsdp", 1) > 1):
                 raise ValueError(
                     "train_step traced under a model-parallel mesh but the "
                     "trainer was built without one: pass mesh= to "
@@ -349,10 +367,11 @@ def _tree_rms_gap(theta_w: PyTree, Theta: PyTree) -> Array:
 # ---------------------------------------------------------------------------
 
 class SketchFLState(NamedTuple):
-    Theta: PyTree       # shared global params (FSDP-sharded)
+    Theta: PyTree       # shared global params ((fsdp, model)-sharded)
     lam: Complex        # packed sketch-space duals, (W, d_s) f32
-    chan: TreeChannel   # h: Complex (W, d_s) — one fading block, packed
+    chan: Any           # TreeChannel / PhyState — h: Complex (W, d_s)
     step: Array
+    flt: Any = None     # FaultState (sketch-space layout) or None
 
 
 #: hash seed of the global packed count-sketch codec
@@ -360,23 +379,177 @@ SKETCH_SEED = 17
 
 
 def _sketch_dim(packed_size: int, ratio: int) -> int:
+    if ratio < 1:
+        raise ValueError(
+            f"FLConfig.sketch_ratio must be a positive compression ratio "
+            f"(d_s = ceil(d / ratio)), got {ratio}")
     return max(8, -(-packed_size // ratio))
 
 
 def make_sketched(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
-                  ccfg: ChannelConfig):
+                  ccfg: ChannelConfig, mesh=None):
+    """A-FADMM-CS on the shard-local packed transport.
+
+    The codec is a stage on the shard-local packed index space: under
+    ``mesh`` each (fsdp, model) shard of the base params encodes/decodes
+    its RESIDENT ``d_local`` slice against the global hashed codec inside
+    ``shard_map`` (partial sketches psum over the shard grid; decode is a
+    collective-free gather).  The stacked ``(W, d_s)`` sketches then run
+    the consensus through :func:`tree_ota.ota_tree_round_packed_state` —
+    the same fused one-pass receive, scenario masks, and fault guards as
+    the replicated mode.  On a mesh without a dedicated ``fsdp`` axis the
+    legacy FSDP-over-data placement of the base params defines the grid
+    (the codec's "fsdp" shards ride the data axes — the worker dim lives
+    only on the small (W, d_s) planes, never on the params).
+    """
     W = flcfg.n_workers
     ratio = flcfg.sketch_ratio
     backend = flcfg.transport_backend
+
+    if mesh is None:
+        from repro.models.sharding import current_mesh
+        mesh = current_mesh()
+    multi_pod = mesh is not None and "pod" in mesh.axis_names
+
+    scn = None
+    if flcfg.scenario is not None:
+        from repro.phy import make_scenario
+        from repro.phy.scenario import h_tx as _phys_h_tx
+        scn = make_scenario(flcfg.scenario, ccfg,
+                            doppler_hz=flcfg.doppler_hz,
+                            csi_err=flcfg.csi_err, h_min=flcfg.h_min,
+                            slots_per_round=flcfg.slots_per_round,
+                            backend=backend)
+
+    fplan, gcfg = flcfg.faults, flcfg.guard
+    if fplan is not None or gcfg is not None:
+        from repro import faults as _faults
+
+    # --- the codec shard grid: how the BASE params are actually sharded ---
+    model_axis = "model"
+    if mesh is not None:
+        from repro.launch.mesh import axis_size as _axis_size
+        from repro.launch.shardings import fsdp_axes as _fsdp_axes
+        model_n = dict(mesh.shape).get(model_axis, 1)
+        faxes = _fsdp_axes(mesh, worker_dim=False, multi_pod=multi_pod)
+        fsdp_n = _axis_size(mesh, faxes) if faxes else 1
+    else:
+        model_n, fsdp_n, faxes = 1, 1, None
+    grid = model_n > 1 or fsdp_n > 1
+    grid_axes = tuple(a for a in ((model_axis,) + tuple(faxes or ()))
+                      if mesh is not None and a in mesh.axis_names) \
+        if grid else ()
+
+    def _codec_spec(Theta):
+        if grid:
+            from repro.launch.shardings import shard_dims_2d
+            mdims, fdims = shard_dims_2d(Theta, model.cfg, mesh,
+                                         multi_pod=multi_pod,
+                                         worker_dim=False)
+            return build_shard_packspec(Theta, mdims, model_n,
+                                        fsdp_dims=fdims, n_fsdp=fsdp_n)
+        n = build_packspec(Theta).n_leaves
+        return build_shard_packspec(Theta, (None,) * n, 1)
+
+    def _grid_idx():
+        jm = jax.lax.axis_index(model_axis) if model_n > 1 else \
+            jnp.zeros((), jnp.int32)
+        jf = jnp.zeros((), jnp.int32)
+        if faxes and fsdp_n > 1:
+            for a in faxes:           # row-major over the fsdp axes tuple
+                jf = jf * mesh.shape[a] + jax.lax.axis_index(a)
+        return jm, jf
+
+    def _param_specs(sspec):
+        from jax.sharding import PartitionSpec as P
+        f_entry = (faxes if len(faxes) > 1 else faxes[0]) if faxes else None
+        specs = []
+        for i, (md, fd) in enumerate(zip(sspec.shard_dims,
+                                         sspec.fsdp_dims)):
+            ax = [None] * len(sspec.spec.shapes[i])
+            if md is not None:
+                ax[md] = model_axis
+            if fd is not None:
+                ax[fd] = f_entry
+            specs.append(P(*ax))
+        return jax.tree_util.tree_unflatten(sspec.spec.treedef, specs)
+
+    def _seg_valid(n_real: int, n_pad: int) -> Array:
+        return jnp.arange(n_pad) < n_real
+
+    def encode_delta(sspec, delta: PyTree, d_s: int) -> Array:
+        """Delta tree -> ONE global (d_s,) count sketch, shard-locally."""
+        def enc(tree, j):
+            buf = pack_shard_local(sspec, tree, j)
+            return encode_shard_local(buf, shard_perm_local(sspec, j),
+                                      shard_valid_mask(sspec, j),
+                                      d_s, SKETCH_SEED)
+
+        if not grid:
+            return enc(delta, 0)
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        def body(tree):
+            jm, jf = _grid_idx()
+            s = enc(tree, jf * sspec.n_model + jm)
+            # each canonical element is owned by exactly ONE shard, so the
+            # partial sketches sum into the global codec (== encode of the
+            # globally packed delta, pinned in tests/test_sketch_codec.py)
+            return jax.lax.psum(s, grid_axes)
+
+        return shard_map(body, mesh=mesh, in_specs=(_param_specs(sspec),),
+                         out_specs=P(), check_rep=False)(delta)
+
+    def decode_delta(sspec, s: Array) -> PyTree:
+        """(d_s,) global sketch -> delta tree in the params' own sharding.
+
+        Collective-free: every shard gathers only its resident coordinates
+        (class-A blocks via its local perm, the B/C/replicated segments via
+        their static segment perms)."""
+        def dec(s, jm, jf):
+            j = jf * sspec.n_model + jm
+            buf = decode_shard_local(s, shard_perm_local(sspec, j),
+                                     shard_valid_mask(sspec, j),
+                                     SKETCH_SEED)
+            b_seg = c_seg = rep_seg = None
+            if sspec.b_leaves:
+                b_seg = decode_shard_local(
+                    s, b_segment_perm(sspec, jm),
+                    _seg_valid(sspec.b_size, sspec.b_pad), SKETCH_SEED)
+            if sspec.c_leaves:
+                c_seg = decode_shard_local(
+                    s, c_segment_perm(sspec, jf),
+                    _seg_valid(sspec.c_size, sspec.c_pad), SKETCH_SEED)
+            if sspec.rep_leaves:
+                rep_seg = decode_shard_local(
+                    s, rep_segment_perm(sspec),
+                    _seg_valid(sspec.rep_size, sspec.rep_pad), SKETCH_SEED)
+            return unpack_shard_local(sspec, buf, rep_seg, b_seg=b_seg,
+                                      c_seg=c_seg)
+
+        if not grid:
+            return dec(s, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        def body(s):
+            jm, jf = _grid_idx()
+            return dec(s, jm, jf)
+
+        return shard_map(body, mesh=mesh, in_specs=(P(),),
+                         out_specs=_param_specs(sspec), check_rep=False)(s)
 
     def init_fn(key: Array) -> SketchFLState:
         kp, kc = jax.random.split(key)
         Theta = model.init(kp)
         d_s = _sketch_dim(build_packspec(Theta).d, ratio)
         lam = cplx.czero((W, d_s), jnp.float32)
-        chan = init_channel_tree(kc, jnp.zeros((W, d_s), jnp.float32))
+        chan = scn.init(kc, W, d_s) if scn is not None \
+            else init_channel_packed(kc, W, d_s)
+        flt = _faults.init(fplan, W, d_s) if fplan is not None else None
         return SketchFLState(Theta=Theta, lam=lam, chan=chan,
-                             step=jnp.zeros((), jnp.int32))
+                             step=jnp.zeros((), jnp.int32), flt=flt)
 
     def loss_fn(p: PyTree, b: PyTree) -> Array:
         l, _ = model.loss(p, b)
@@ -416,53 +589,75 @@ def make_sketched(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
                    ) -> Tuple[SketchFLState, dict]:
         """batch leaves: (W, B_w, ...) — workers time-multiplexed via scan.
 
-        The per-worker scan carries the RUNNING receiver state
-        (``transport.OtaAccumulator``): each step modulates that worker's
-        packed-and-sketched delta and adds its h⊙s contribution.  After the
-        scan, ONE fused receive and ONE dual update finish the round — the
-        same one-kernel-chain-per-round contract as the packed tree path.
+        The per-worker scan only *encodes*: each step computes that
+        worker's local delta and its shard-local sketch, stacking the
+        ``(W, d_s)`` planes.  The whole analog round — modulate, min-α
+        power consensus, ONE fused receive, dual update, participation
+        masks, fault guards — is the SAME
+        :func:`tree_ota.ota_tree_round_packed_state` the replicated mode
+        runs, applied to the sketch stack as a single packed leaf.
         """
         kc, kn = jax.random.split(key)
-        chan, _ = step_channel_tree(kc, state.chan, ccfg)
-        rho = acfg.rho
-        spec = build_packspec(state.Theta)      # static per trace
         d_s = state.lam.re.shape[-1]
+        sspec = _codec_spec(state.Theta)        # static per trace
 
-        def per_worker(acc, xs):
-            batch_w, h_w, lam_w = xs            # h_w/lam_w: Complex (d_s,)
+        mask = h_tx_p = None
+        if scn is not None:
+            chan = scn.step(kc, state.chan)     # PhyState over (W, d_s)
+            if scn.truncating:
+                mask = chan.mask
+            if scn.imperfect_csi:
+                h_tx_p = chan.h_hat
+        else:
+            chan, _ = step_channel_packed(kc, state.chan, ccfg)
+
+        faults_arg = None
+        fmetrics = {}
+        flt_mid = state.flt
+        Theta_prev = None
+        if fplan is not None:
+            # fold_in side-branch of the ROUND key (fault-free bits intact)
+            kf = jax.random.fold_in(key, _faults.FAULT_SALT)
+            rf, flt_mid, fmetrics = _faults.draw(fplan, kf, state.flt)
+            mask = rf.alive if mask is None else mask & rf.alive
+            faults_arg = (fplan, rf, state.flt.stale)
+        if mask is not None or gcfg is not None or fplan is not None:
+            # a skipped/all-masked round must leave the base params alone:
+            # the sketch-space fallback consensus is the ZERO sketch, whose
+            # decoded delta is identically zero
+            Theta_prev = jnp.zeros((d_s,), jnp.float32)
+
+        def per_worker(_, batch_w):
             delta, l = worker_delta(state.Theta, batch_w)
-            # ONE global codec over the packed index space, computed
-            # leafwise so the FSDP-sharded delta never materialises flat
-            s_tilde = encode_hashed_tree(delta, spec, d_s, SKETCH_SEED)
-            sig = transport.modulate(s_tilde, lam_w, h_w, rho,
-                                     backend=backend)
-            acc = transport.ota_accumulate(acc, sig, h_w, backend=backend)
-            energy = jnp.sum(cplx.abs2(sig))
-            return acc, (s_tilde, energy, l)
+            return None, (encode_delta(sspec, delta, d_s), l)
 
-        acc, (s_w, energy_w, losses) = jax.lax.scan(
-            per_worker, transport.ota_accumulate_init((d_s,)),
-            (batch, chan.h, state.lam))
+        _, (s_w, losses) = jax.lax.scan(per_worker, None, batch)
 
-        # min-α power consensus over the workers' sketch-space energies
-        budget = ccfg.transmit_power * d_s
-        inv_alpha = transport.inv_alpha_from_energy(energy_w, budget)
+        # the consensus round in sketch space: s_w IS the packed buffer
+        # (identity pack), so the fused one-pass receive, scenario masks and
+        # guards apply verbatim — budget = transmit_power * d_s as before
+        s_spec = build_packspec(s_w, batch_dims=1)
+        Theta_s, lam_new, m = ota_tree_round_packed_state(
+            s_w, state.lam, chan.h, kn, acfg, ccfg, s_spec,
+            backend=backend, mask=mask, h_tx_p=h_tx_p,
+            Theta_prev=Theta_prev, fused=flcfg.ota_fused,
+            worker_chunk=flcfg.ota_worker_chunk,
+            block_cols=flcfg.ota_block_cols,
+            guard=gcfg, faults=faults_arg)
 
-        # the single analog channel use: one fused receive over (d_s,)
-        Theta_s = transport.ota_receive_accumulated(acc, kn, ccfg, inv_alpha,
-                                                    backend=backend)
-        lam_new = transport.dual_update(state.lam, chan.h, s_w, Theta_s, rho,
-                                        backend=backend)
-
-        g_delta = decode_hashed_tree(Theta_s, spec, SKETCH_SEED)
+        g_delta = decode_delta(sspec, Theta_s)
         Theta_new = jax.tree.map(
             lambda p, dg: p + flcfg.sketch_lr * dg.astype(p.dtype),
             state.Theta, g_delta)
 
+        flt_new = state.flt
+        if fplan is not None:
+            aux = m.pop("_fault_aux", {})
+            flt_new = _faults.commit(flt_mid, aux.get("stale"),
+                                     aux.get("evicted"))
         new_state = SketchFLState(Theta=Theta_new, lam=lam_new, chan=chan,
-                                  step=state.step + 1)
-        metrics = {"loss": jnp.mean(losses),
-                   "inv_alpha": jnp.asarray(inv_alpha)}
+                                  step=state.step + 1, flt=flt_new)
+        metrics = {"loss": jnp.mean(losses), **m, **fmetrics}
         return new_state, metrics
 
     return init_fn, train_step
@@ -487,10 +682,5 @@ def make_fl_train(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
     if flcfg.mode == "replicated":
         return make_replicated(model, flcfg, acfg, ccfg, mesh=mesh)
     if flcfg.mode == "sketched":
-        if flcfg.scenario is not None:
-            raise ValueError(
-                "FLConfig.scenario is a replicated-mode feature; the "
-                "sketched trainer still runs the legacy block-fading "
-                "channel over its (W, d_s) sketch space (ROADMAP PR 4)")
-        return make_sketched(model, flcfg, acfg, ccfg)
+        return make_sketched(model, flcfg, acfg, ccfg, mesh=mesh)
     raise ValueError(f"unknown FL mode {flcfg.mode!r}")

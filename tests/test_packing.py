@@ -200,6 +200,151 @@ def test_shard_unpack_local_rebuilds_from_psum_segment():
             np.asarray(_local_view(tree, ss, j)["wq"]))
 
 
+# -- 2D (fsdp × model) shard grid --------------------------------------------
+
+def _shard_tree_2d(W=3):
+    """One leaf per 2D ownership class: A (both dims sharded), B (model
+    only), C (fsdp only), D (replicated; 3 elements over 4 shards ->
+    padding)."""
+    k = jax.random.split(KEY, 4)
+    return {
+        "b": jax.random.normal(k[0], (W, 3)),
+        "gate": jax.random.normal(k[1], (W, 6, 2)),
+        "wo": jax.random.normal(k[2], (W, 8, 4)),
+        "wq": jax.random.normal(k[3], (W, 4, 8)),
+    }
+
+
+#: sorted keys: b, gate, wo, wq
+_MODEL_DIMS_2D = [None, None, 0, 1]
+_FSDP_DIMS_2D = [None, 0, None, 0]
+
+
+def _local_view_2d(tree, ss, j):
+    jm, jf = j % ss.n_model, j // ss.n_model
+    fq, mq = 4 // ss.n_fsdp, 8 // ss.n_model
+    fg, mo = 6 // ss.n_fsdp, 8 // ss.n_model
+    out = dict(tree)
+    out["wq"] = tree["wq"][:, jf * fq:(jf + 1) * fq, jm * mq:(jm + 1) * mq]
+    out["wo"] = tree["wo"][:, jm * mo:(jm + 1) * mo, :]
+    out["gate"] = tree["gate"][:, jf * fg:(jf + 1) * fg, :]
+    return out
+
+
+def test_shard_pack_2d_offsets_compose_into_global():
+    """The 2D (fsdp, model) grid keeps the 1D pin: Σ_shard scatter of every
+    shard's local pack rebuilds pack(global), each canonical position owned
+    exactly once, and the traced shard_perm_local agrees with the host
+    shard_perm on every shard of the grid."""
+    from repro.core.packing import (build_shard_packspec, pack,
+                                    pack_shard_local, shard_perm,
+                                    shard_perm_local, shard_valid_mask)
+
+    tree = _shard_tree_2d()
+    ss = build_shard_packspec(tree, _MODEL_DIMS_2D, 2, batch_dims=1,
+                              fsdp_dims=_FSDP_DIMS_2D, n_fsdp=2)
+    assert ss.n_shards == 4 and ss.n_model == 2 and ss.n_fsdp == 2
+    perm = shard_perm(ss)
+    canon = np.asarray(pack(ss.spec, tree))
+    acc = np.zeros_like(canon)
+    for j in range(ss.n_shards):
+        lp = np.asarray(pack_shard_local(ss, _local_view_2d(tree, ss, j), j))
+        pj = perm[j * ss.d_local:(j + 1) * ss.d_local]
+        valid = pj >= 0
+        np.testing.assert_array_equal(
+            np.asarray(shard_valid_mask(ss, j)), valid)
+        tp = np.asarray(shard_perm_local(ss, j))
+        np.testing.assert_array_equal(tp[valid], pj[valid])
+        acc[:, pj[valid]] += lp[:, valid]
+    np.testing.assert_array_equal(acc, canon)
+    owned = np.sort(perm[perm >= 0])
+    np.testing.assert_array_equal(owned, np.arange(ss.spec.d))
+
+
+def test_shard_pack_2d_global_roundtrip():
+    from repro.core.packing import (build_shard_packspec, pack_shard_global,
+                                    unpack_shard_global)
+
+    tree = _shard_tree_2d()
+    ss = build_shard_packspec(tree, _MODEL_DIMS_2D, 2, batch_dims=1,
+                              fsdp_dims=_FSDP_DIMS_2D, n_fsdp=2)
+    out = unpack_shard_global(ss, pack_shard_global(ss, tree))
+    for name in tree:
+        np.testing.assert_array_equal(np.asarray(out[name]),
+                                      np.asarray(tree[name]))
+
+
+def test_shard_pack_fsdp1_degenerates_to_1d_bitwise():
+    """n_fsdp=1 with fsdp_dims supplied coerces to the exact 1D layout —
+    the old shard-local transport stays bitwise reachable as an oracle."""
+    from repro.core.packing import (build_shard_packspec, pack_shard_global,
+                                    shard_perm)
+
+    tree = _shard_tree()
+    ss1 = build_shard_packspec(tree, _SHARD_DIMS, 2, batch_dims=1)
+    ss2 = build_shard_packspec(tree, _SHARD_DIMS, 2, batch_dims=1,
+                               fsdp_dims=[0, None, None, None], n_fsdp=1)
+    np.testing.assert_array_equal(shard_perm(ss1), shard_perm(ss2))
+    np.testing.assert_array_equal(np.asarray(pack_shard_global(ss1, tree)),
+                                  np.asarray(pack_shard_global(ss2, tree)))
+    assert ss1.d_local == ss2.d_local and ss1.d_pad == ss2.d_pad
+
+
+def test_shard_pack_2d_unpack_from_segments():
+    """unpack_shard_local on the 2D grid, with the B/C/D segment exchange
+    done as explicit sums (standing in for the shard_map psums), rebuilds
+    every leaf class on every shard."""
+    from repro.core.packing import (build_shard_packspec, pack_shard_local,
+                                    scatter_b_chunk, scatter_c_chunk,
+                                    scatter_rep_chunk, shard_b_chunk,
+                                    shard_c_chunk, shard_rep_chunk,
+                                    unpack_shard_local)
+
+    tree = _shard_tree_2d()
+    ss = build_shard_packspec(tree, _MODEL_DIMS_2D, 2, batch_dims=1,
+                              fsdp_dims=_FSDP_DIMS_2D, n_fsdp=2)
+    locs = [pack_shard_local(ss, _local_view_2d(tree, ss, j), j)
+            for j in range(ss.n_shards)]
+    for j in range(ss.n_shards):
+        jm, jf = j % ss.n_model, j // ss.n_model
+        # B segment: psum over the fsdp axis (same jm, all jf)
+        b_seg = sum(scatter_b_chunk(ss, shard_b_chunk(ss, locs[f * ss.n_model + jm]), f)
+                    for f in range(ss.n_fsdp))
+        # C segment: psum over the model axis (same jf, all jm)
+        c_seg = sum(scatter_c_chunk(ss, shard_c_chunk(ss, locs[jf * ss.n_model + m]), m)
+                    for m in range(ss.n_model))
+        # D segment: psum over the whole grid
+        rep_seg = sum(scatter_rep_chunk(ss, shard_rep_chunk(ss, locs[i]), i)
+                      for i in range(ss.n_shards))
+        out = unpack_shard_local(ss, locs[j], rep_seg,
+                                 b_seg=b_seg, c_seg=c_seg)
+        loc = _local_view_2d(tree, ss, j)
+        for name in tree:
+            np.testing.assert_array_equal(np.asarray(out[name]),
+                                          np.asarray(loc[name]))
+
+
+def test_shard_local_codec_2d_grid():
+    """Shard-local encode on the 2D grid still sums to the global packed
+    encode — what makes the sketched path mesh-layout-agnostic."""
+    from repro.core.packing import (build_shard_packspec, pack,
+                                    pack_shard_local, shard_perm_local,
+                                    shard_valid_mask)
+    from repro.core.sketch import encode_shard_local
+
+    tree = _shard_tree_2d()
+    ss = build_shard_packspec(tree, _MODEL_DIMS_2D, 2, batch_dims=1,
+                              fsdp_dims=_FSDP_DIMS_2D, n_fsdp=2)
+    d_s = 16
+    whole = encode_packed(pack(ss.spec, tree), d_s, seed=7)
+    parts = sum(
+        encode_shard_local(
+            pack_shard_local(ss, _local_view_2d(tree, ss, j), j),
+            shard_perm_local(ss, j), shard_valid_mask(ss, j), d_s, seed=7)
+        for j in range(ss.n_shards))
+    np.testing.assert_allclose(parts, whole, rtol=1e-6, atol=1e-6)
+
+
 def test_shard_packspec_rejects_indivisible_dim():
     from repro.core.packing import build_shard_packspec
 
@@ -293,25 +438,37 @@ def test_packed_codec_unbiased_shape():
                                rtol=1e-5)
 
 
-def test_tree_codec_equals_packed_codec():
-    """encode_hashed_tree / decode_hashed_tree (leafwise, sharding-
-    preserving) == encode_packed / decode_packed of the packed buffer —
-    ONE codec, two computation layouts."""
-    from repro.core.sketch import decode_hashed_tree, encode_hashed_tree
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_shard_local_codec_equals_packed_codec(n_shards):
+    """Σ_shard encode_shard_local(shard j) == encode_packed(pack(global)),
+    and decode_shard_local is the shard's resident slice of the global
+    decode — ONE codec, two computation layouts (the identity the re-homed
+    sketched trainer's encode/decode psum relies on)."""
+    from repro.core.packing import (build_shard_packspec, pack_shard_local,
+                                    shard_perm_local, shard_valid_mask)
+    from repro.core.sketch import decode_shard_local, encode_shard_local
 
-    tree = jax.tree.map(lambda l: l.astype(jnp.float32), _tree())
-    spec = build_packspec(tree)
-    buf = pack(spec, tree)
+    tree = _shard_tree()
+    ss = build_shard_packspec(tree, _SHARD_DIMS, n_shards, batch_dims=1)
+    buf = pack(ss.spec, tree)
     d_s = 16
-    np.testing.assert_allclose(encode_hashed_tree(tree, spec, d_s, seed=4),
-                               encode_packed(buf, d_s, seed=4),
-                               rtol=1e-6, atol=1e-6)
+    whole = encode_packed(buf, d_s, seed=4)
+    parts = sum(
+        encode_shard_local(pack_shard_local(ss, _local_view(tree, ss, j), j),
+                           shard_perm_local(ss, j), shard_valid_mask(ss, j),
+                           d_s, seed=4)
+        for j in range(n_shards))
+    np.testing.assert_allclose(parts, whole, rtol=1e-6, atol=1e-6)
+
     s = jax.random.normal(KEY, (d_s,))
-    got = decode_hashed_tree(s, spec, seed=4)
-    want = unpack(spec, decode_packed(s, spec.d, seed=4), cast=False)
-    for a, b in zip(jax.tree_util.tree_leaves(got),
-                    jax.tree_util.tree_leaves(want)):
-        np.testing.assert_array_equal(a, b)
+    full = np.asarray(decode_packed(s, ss.spec.d, seed=4))
+    for j in range(n_shards):
+        perm = np.asarray(shard_perm_local(ss, j))
+        valid = np.asarray(shard_valid_mask(ss, j))
+        got = np.asarray(decode_shard_local(
+            s, shard_perm_local(ss, j), shard_valid_mask(ss, j), seed=4))
+        np.testing.assert_array_equal(got[valid], full[perm[valid]])
+        np.testing.assert_array_equal(got[~valid], 0.0)
 
 
 def test_encode_packed_batched():

@@ -586,13 +586,25 @@ def test_build_train_spec_with_scenario():
     assert n_specs == n_leaves
 
 
-def test_build_train_spec_sketched_rejects_scenario():
+def test_build_train_spec_sketched_accepts_scenario():
+    """The re-homed sketched path rides the packed transport, so phy
+    scenarios thread straight through — the channel/scenario state lives
+    on the (W, d_s) sketch planes instead of the full packed dim."""
     from repro.launch.specs import build_train_spec
 
     mesh = jax.make_mesh((1, 1), ("data", "model"))
-    with pytest.raises(ValueError, match="replicated-mode"):
-        build_train_spec("qwen1.5-110b", mesh, multi_pod=False,
-                         reduced=False, scenario="markov-doppler")
+    spec = build_train_spec("granite-8b", mesh, multi_pod=False,
+                            reduced=True, scenario="markov-doppler",
+                            fl_mode="sketched", sketch_ratio=64)
+    assert spec.meta["fl_mode"] == "sketched"
+    assert spec.meta["scenario"] == "markov-doppler"
+    assert spec.meta["sketch_ratio"] == 64
+    state = spec.args[0]
+    d_s = state.lam.re.shape[-1]
+    # scenario channel state is sized to the sketch planes, not the full
+    # packed dimension
+    assert state.chan.h.re.shape[-1] == d_s
+    assert state.chan.age.shape == ()
 
 
 def test_truncation_decision_uses_worker_csi():
@@ -679,9 +691,13 @@ def test_fl_config_rejects_orphan_scenario_overrides():
     with pytest.raises(ValueError, match="scenario overrides"):
         make_fl_train(m, FLConfig(n_workers=2, slots_per_round=4),
                       acfg, ccfg)
-    with pytest.raises(ValueError, match="replicated-mode"):
-        make_fl_train(m, FLConfig(mode="sketched", n_workers=2,
-                                  scenario="markov-doppler"), acfg, ccfg)
+    # sketched + scenario is legal now that the sketched path rides the
+    # packed transport — it must build, not raise
+    init_fn, _ = make_fl_train(
+        m, FLConfig(mode="sketched", n_workers=2, sketch_ratio=64,
+                    scenario="markov-doppler"), acfg, ccfg)
+    st = init_fn(jax.random.PRNGKey(0))
+    assert st.chan.h.re.shape == st.lam.re.shape
 
 
 # ---------------------------------------------------------------------------

@@ -244,6 +244,164 @@ print("SCENARIO_MODEL_PARALLEL_TRAIN_OK")
 """
 
 
+_SCRIPT_2D = r"""
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.core import cplx
+from repro.core.admm import AdmmConfig
+from repro.core.channel import ChannelConfig, rayleigh
+from repro.core.packing import (build_shard_packspec, pack_shard_global_cplx,
+                                unpack_shard_global_cplx)
+from repro.core.tree_ota import (ota_tree_round_leafwise,
+                                 ota_tree_round_shard_local)
+
+assert jax.device_count() == 4, jax.devices()
+KEY = jax.random.PRNGKey(0)
+W = 3
+mesh = jax.sharding.Mesh(np.array(jax.devices()).reshape(1, 2, 2),
+                         ("data", "fsdp", "model"))
+
+
+def mk(seed, shape):
+    return jax.random.normal(jax.random.fold_in(KEY, seed), shape)
+
+
+# one leaf per 2D ownership class: A (wq: fsdp dim 0 x model dim 1),
+# B (wo: model only), C (gate: fsdp only), D (b: replicated; 3 elements
+# over 4 shards -> real padding)
+theta = {"wq": mk(1, (W, 4, 8)), "wo": mk(2, (W, 8, 4)),
+         "gate": mk(3, (W, 6, 2)), "b": mk(4, (W, 3))}
+lam = jax.tree.map(lambda l: cplx.Complex(0.3 * mk(5, l.shape),
+                                          0.3 * mk(6, l.shape)), theta)
+h = jax.tree.map(lambda l: rayleigh(jax.random.fold_in(KEY, 7), l.shape),
+                 theta)
+# sorted keys: b, gate, wo, wq
+mdims = [None, None, 0, 1]
+fdims = [None, 0, None, 0]
+ss = build_shard_packspec(theta, mdims, 2, batch_dims=1,
+                          fsdp_dims=fdims, n_fsdp=2)
+assert ss.n_shards == 4 and ss.n_fsdp == 2 and ss.has_padding
+lam_p = pack_shard_global_cplx(ss, lam)
+h_p = pack_shard_global_cplx(ss, h)
+ccfg = ChannelConfig(n_workers=W, noisy=False)
+mask = jnp.array([True, False, True])
+
+# the 4-shard grid psums regroup the f32 energy/consensus sums, so the
+# contract is tight allclose (like the data-split branch), and metrics
+# (min-alpha) must agree exactly: pmin is order-free
+for pc, msk, label in ((False, None, "plain"), (True, None, "pc"),
+                       (True, mask, "masked")):
+    acfg = AdmmConfig(rho=0.5, power_control=pc, flip_on_change=False)
+    T_l, l_l, m_l = jax.jit(lambda t, l, hh, k: ota_tree_round_leafwise(
+        t, l, hh, k, acfg, ccfg, backend="jnp", mask=msk))(theta, lam, h, KEY)
+    with mesh:
+        T_s, l_s, m_s = jax.jit(
+            lambda t, lp, hp, k: ota_tree_round_shard_local(
+                t, lp, hp, k, acfg, ccfg, ss, mesh, backend="jnp",
+                mask=msk))(theta, lam_p, h_p, KEY)
+    l_s_tree = unpack_shard_global_cplx(ss, l_s)
+    for name in theta:
+        np.testing.assert_allclose(np.asarray(T_s[name]),
+                                   np.asarray(T_l[name]),
+                                   rtol=1e-6, atol=1e-7,
+                                   err_msg=f"{label} Theta[{name}]")
+        np.testing.assert_allclose(np.asarray(l_s_tree[name].re),
+                                   np.asarray(l_l[name].re),
+                                   rtol=1e-6, atol=1e-7,
+                                   err_msg=f"{label} lam.re[{name}]")
+        np.testing.assert_allclose(np.asarray(l_s_tree[name].im),
+                                   np.asarray(l_l[name].im),
+                                   rtol=1e-6, atol=1e-7,
+                                   err_msg=f"{label} lam.im[{name}]")
+    np.testing.assert_allclose(float(m_s["inv_alpha"]),
+                               float(m_l["inv_alpha"]), rtol=1e-6)
+print("PARITY_2D_GRID_OK")
+
+# --- sketched A-FADMM-CS on the 2D mesh with a phy scenario ---------------
+# (ISSUE acceptance: the re-homed sketch stage rides the shard-local
+# packed transport under data x fsdp x model with deep-fade truncation)
+from repro.models import get_model
+from repro.models.sharding import axis_rules
+from repro.train.llm_trainer import FLConfig, make_fl_train
+
+m = get_model("granite-8b", reduced=True)
+Wt, B, T = 4, 2, 16
+batch = {"tokens": jax.random.randint(KEY, (Wt, B, T), 0, m.cfg.vocab_size)}
+flcfg = FLConfig(mode="sketched", n_workers=Wt, local_steps=1,
+                 local_lr=1e-2, sketch_ratio=16, sketch_lr=0.7,
+                 scenario="deep-fade-truncation", h_min=0.8)
+acfg = AdmmConfig(rho=0.5, flip_on_change=False)
+ccfg_t = ChannelConfig(n_workers=Wt, snr_db=40.0)
+init_fn, train_step = make_fl_train(m, flcfg, acfg, ccfg_t, mesh=mesh)
+st = init_fn(KEY)
+d_s = st.lam.re.shape[-1]
+p_total = sum(l.size for l in jax.tree.leaves(st.Theta))
+assert st.lam.re.shape == (Wt, d_s) and d_s < p_total
+losses, parts = [], []
+with mesh:
+    with axis_rules(mesh):
+        step = jax.jit(train_step)
+        for i in range(8):
+            prev_lam_re = np.asarray(st.lam.re)
+            st, met = step(st, batch, jax.random.fold_in(KEY, i))
+            msk = np.asarray(st.chan.mask)
+            if (~msk).any():
+                # truncated workers' SKETCH-SPACE duals stay frozen
+                np.testing.assert_array_equal(
+                    np.asarray(st.lam.re)[~msk], prev_lam_re[~msk])
+            losses.append(float(met["loss"]))
+            parts.append(float(met["participation"]))
+assert all(np.isfinite(losses)), losses
+assert losses[-1] < losses[0], losses
+assert min(parts) < 1.0, parts
+print("SKETCHED_2D_SCENARIO_TRAIN_OK")
+"""
+
+
+def test_shard_local_2d_grid_and_sketched():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src"),
+               JAX_PLATFORMS="cpu",
+               XLA_FLAGS=(os.environ.get("XLA_FLAGS", "")
+                          + " --xla_force_host_platform_device_count=4"
+                          ).strip())
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT_2D], env=env,
+                          capture_output=True, text=True, timeout=540,
+                          cwd=REPO)
+    out = proc.stdout + proc.stderr
+    for marker in ("PARITY_2D_GRID_OK", "SKETCHED_2D_SCENARIO_TRAIN_OK"):
+        assert marker in proc.stdout, out
+
+
+def test_launch_train_cli_sketched_fsdp_smoke():
+    """`launch/train.py --fsdp 2 --mode sketched --sketch-ratio ... with a
+    phy scenario` trains end to end on a (data, fsdp, model) mesh — the
+    launcher wiring for the re-homed sketched path."""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src"),
+               JAX_PLATFORMS="cpu",
+               XLA_FLAGS=(os.environ.get("XLA_FLAGS", "")
+                          + " --xla_force_host_platform_device_count=4"
+                          ).strip())
+    cmd = [sys.executable, "-m", "repro.launch.train", "--arch", "granite-8b",
+           "--reduced", "--mode", "sketched", "--sketch-ratio", "16",
+           "--sketch-lr", "0.7", "--fsdp", "2",
+           "--scenario", "deep-fade-truncation",
+           "--rounds", "2", "--workers", "4", "--batch", "2", "--seq", "32",
+           "--local-steps", "1", "--log-every", "1"]
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=540, cwd=REPO)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "round    0" in proc.stdout and "done: 2 rounds" in proc.stdout
+    assert "participation" in proc.stdout
+    # indivisible fsdp is a clean CLI error, not a trace-time explosion
+    bad = subprocess.run(cmd[:cmd.index("--fsdp") + 1] + ["3"]
+                         + cmd[cmd.index("--fsdp") + 2:],
+                         env=env, capture_output=True, text=True,
+                         timeout=540, cwd=REPO)
+    assert bad.returncode != 0 and "must divide" in bad.stderr
+
+
 def test_shard_local_contract_two_device_mesh():
     env = dict(os.environ,
                PYTHONPATH=os.path.join(REPO, "src"),
