@@ -689,14 +689,92 @@ def faults_microbench() -> dict:
         "n_rounds": 40, "crashed_workers": 2, "nan_workers": 1,
         "all_evals_finite": bool(np.all(np.isfinite(hist.loss))),
         "final_loss_gap": float(hist.loss[-1]),
-        "alive_final": float(hist.extra["fault_alive"][-1]),
-        "guard_evictions": float(sum(hist.extra["guard_evicted"])),
-        "guard_retries": float(sum(hist.extra["guard_retries"])),
+        "alive_final": float(hist.extra["fault/alive"][-1]),
+        "guard_evictions": float(sum(hist.extra["guard/evicted"])),
+        "guard_retries": float(sum(hist.extra["guard/retries"])),
     }
     # wall-clock contract field (bench methodology): the optimised metric
     # here is an OVERHEAD bound, not a speedup — the guard buys fault
     # tolerance and must cost (almost) nothing on the healthy path
     out["optimised_metric"] = "guard_overhead_x"
+    return out
+
+
+# ---------------------------------------------------------------------------
+# observability: in-graph telemetry overhead + structured-log smoke
+# ---------------------------------------------------------------------------
+
+def obs_microbench() -> dict:
+    """ISSUE 9 exit bar: telemetry-on costs <= 5% over the bare fused
+    round (the obs/ statistics reuse values the receive already has in
+    registers) and does NOT change the training math (Theta bitwise); the
+    MetricsSink smoke run emits schema-valid JSONL."""
+    import tempfile
+
+    from repro.core import transport
+    from repro.core.channel import ChannelConfig, rayleigh
+    from repro.core.cplx import Complex
+    from repro.obs.sink import MetricsSink, run_manifest
+    from repro.obs.validate import validate_run_dir
+
+    W, d, rho = 8, 1 << 16, 0.5
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    theta = jax.random.normal(k1, (W, d))
+    lam = Complex(0.3 * jax.random.normal(k2, (W, d)),
+                  0.3 * jax.random.normal(k3, (W, d)))
+    h = rayleigh(k4, (W, d))
+    ccfg = ChannelConfig(n_workers=W, noisy=True, snr_db=20.0)
+
+    off_j = jax.jit(lambda t, l, hh, k: transport.ota_round_fused(
+        t, l, hh, k, rho, ccfg, backend="jnp")[0])
+    def _on(t, l, hh, k):
+        r = transport.ota_round_fused(t, l, hh, k, rho, ccfg,
+                                      backend="jnp", telemetry=True)
+        return r[0], r[3]   # (Theta, telemetry metrics)
+
+    on_j = jax.jit(_on)
+    T0 = jax.block_until_ready(off_j(theta, lam, h, key))
+    T1, telm = on_j(theta, lam, h, key)
+    jax.block_until_ready(T1)
+    out = {"W": W, "d": d,
+           "telemetry_max_abs_err": float(jnp.max(jnp.abs(T1 - T0))),
+           "telemetry_keys": sorted(telm)}  # bitwise contract: 0.0
+    out["bare_us_per_round"] = _time(
+        lambda: off_j(theta, lam, h, key).block_until_ready(), iters=30)
+    out["telemetry_us_per_round"] = _time(
+        lambda: on_j(theta, lam, h, key)[0].block_until_ready(), iters=30)
+    out["telemetry_overhead_x"] = (out["telemetry_us_per_round"]
+                                   / out["bare_us_per_round"])
+
+    # structured-log smoke: a short flat-trainer run through a MetricsSink,
+    # then the CI schema linter over the result
+    from benchmarks.common import linreg_algorithm, make_linreg_task
+    from repro.train import train
+
+    task = make_linreg_task(key, n_workers=W)
+    alg, solver = linreg_algorithm("afadmm", task)
+    import dataclasses
+    alg = dataclasses.replace(
+        alg, acfg=dataclasses.replace(alg.acfg, flip_on_change=False),
+        telemetry=True)
+    with tempfile.TemporaryDirectory() as td:
+        sink = MetricsSink(td)
+        sink.write_manifest(run_manifest(bench="obs_microbench"))
+        hist = train(alg, task.theta0, solver, task.grad_fn, 20,
+                     jax.random.PRNGKey(1), eval_fn=task.eval_fn,
+                     eval_every=10, driver="scan", sink=sink)
+        sink.log_done(20, 0.0)
+        sink.close()
+        violations = validate_run_dir(td)
+    out["sink_rounds_logged"] = 20
+    out["sink_jsonl_violations"] = violations
+    out["sink_jsonl_valid"] = not violations
+    out["snr_db_series_finite"] = bool(
+        np.all(np.isfinite(hist.extra["obs/rx_snr_db"])))
+    # overhead bound, not a speedup: telemetry must be ~free when on and
+    # bitwise absent when off
+    out["optimised_metric"] = "telemetry_overhead_x"
     return out
 
 
@@ -925,6 +1003,12 @@ def main() -> None:
                          "4-device CPU platform, so it must run alone.")
     ap.add_argument("--out-sketched", default="BENCH_sketch.json",
                     help="where --sketched writes its JSON")
+    ap.add_argument("--obs", action="store_true",
+                    help="observability section only: telemetry-on vs bare "
+                         "fused-round overhead (bitwise parity) + "
+                         "MetricsSink JSONL schema smoke (CI smoke)")
+    ap.add_argument("--out-obs", default="BENCH_obs.json",
+                    help="where --obs writes its JSON")
     args = ap.parse_args()
     if args.shard_local or args.sketched:
         # must happen before jax's first backend init (the import above is
@@ -937,7 +1021,7 @@ def main() -> None:
     derived = {}
     if not (args.packed_only or args.attn_bwd or args.phy
             or args.shard_local or args.fused_round or args.faults
-            or args.sketched):
+            or args.sketched or args.obs):
         derived = {"kernels": microbench(),
                    "transport": transport_microbench()}
     out = dict(derived)
@@ -957,6 +1041,8 @@ def main() -> None:
         out["shard_local"] = shard_local_microbench()
     if args.sketched:
         out["sketched"] = sketched_microbench()
+    if args.obs:
+        out["obs"] = obs_microbench()
     text = json.dumps(out, indent=2, default=str)
     print(text)
     if args.out and derived:
@@ -986,6 +1072,9 @@ def main() -> None:
     if args.sketched:
         with open(args.out_sketched, "w") as f:
             f.write(json.dumps(out["sketched"], indent=2, default=str) + "\n")
+    if args.obs:
+        with open(args.out_obs, "w") as f:
+            f.write(json.dumps(out["obs"], indent=2, default=str) + "\n")
 
 
 if __name__ == "__main__":

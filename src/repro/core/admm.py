@@ -33,8 +33,10 @@ from repro.core.cplx import Complex
 # The signal math lives in the unified transport layer (backend-dispatched
 # jnp/pallas); re-exported here so ``core.admm`` stays the paper-equation API.
 from repro.core.transport import (demodulate, dual_update,  # noqa: F401
-                                  flip_lambda, modulate, ota_uplink,
-                                  penalty_grad, superpose)
+                                  flip_lambda, modulate, ota_round_fused,
+                                  ota_uplink, penalty_grad, resolve_backend,
+                                  superpose)
+from repro.obs import merge_disjoint, resolve as resolve_telemetry
 
 Array = jax.Array
 ReduceFn = Callable[[Array], Array]
@@ -117,6 +119,7 @@ def afadmm_round(
     h_tx: Optional[Complex] = None,
     guard=None,
     faults=None,
+    telemetry=None,
 ) -> Tuple[AFadmmState, dict]:
     """One synchronous round of Algorithm 1 (with Appendix-B noise handling).
 
@@ -143,7 +146,13 @@ def afadmm_round(
         corruption, bursts); worker bookkeeping (θ, duals) stays truthful.
         Refreshed stale buffers / evicted rows ride in
         ``metrics["_fault_aux"]``.
+      telemetry: a ``repro.obs.TelemetryConfig`` (or True/None) — adds the
+        ``obs/`` channel-telemetry keys to the metrics.  Off (None) is
+        bitwise today's path; on does not change the training math (on the
+        jnp backend the unguarded uplink reroutes through the fused round,
+        which is bitwise the composed chain).
     """
+    tel = resolve_telemetry(telemetry)
     h = blk_next.h
     changed = blk_next.changed
     rho = acfg.rho
@@ -187,18 +196,46 @@ def afadmm_round(
             theta_tx, lam_pre, h, key, rho, ccfg, gcfg,
             power_control=acfg.power_control, mask=mask, h_tx=h_tx,
             min_reduce_fn=min_reduce_fn, backend=backend,
-            burst_std=burst_std)
+            burst_std=burst_std, telemetry=tel)
         Theta_new, inv_alpha = gr.Theta, gr.inv_alpha
         if guard is not None:   # burst-only: no policy, accept the round
             healthy, evicted = gr.healthy, gr.evicted
             guard_metrics = gr.metrics
             aux["evicted"] = evicted
+        else:
+            # burst-only carries no guard verdicts, but the obs/ channel
+            # telemetry of the accepted slot still applies
+            guard_metrics = {k: v for k, v in gr.metrics.items()
+                             if k.startswith("obs/")}
+    elif (tel is not None and reduce_fn is None
+            and resolve_backend(backend) == "jnp"):
+        # telemetry-on unguarded path: the fused round exposes the receive
+        # epilogue's internals; on the jnp backend it is BITWISE the
+        # composed ota_uplink chain (tests/test_fused_round.py), so the
+        # training math is unchanged.  worker_chunk=0 pins the monolithic
+        # pass (the streamed cohort path is only tolerance-equal).
+        Theta_new, inv_alpha, _h_air, guard_metrics = ota_round_fused(
+            theta_tx, lam_pre, h, key, rho, ccfg,
+            power_control=acfg.power_control, mask=mask, h_tx=h_tx,
+            min_reduce_fn=min_reduce_fn, worker_chunk=0,
+            backend=backend, telemetry=tel)
     else:
         Theta_new, inv_alpha = ota_uplink(
             theta_tx, lam_pre, h, key, rho, ccfg,
             power_control=acfg.power_control, reduce_fn=reduce_fn,
             min_reduce_fn=min_reduce_fn, mask=mask,
             h_tx=h_tx, backend=backend)
+        if tel is not None:
+            # custom-reduce / pallas uplink: the epilogue internals are not
+            # exposed, so only the worker-free telemetry subset is emitted
+            ia = jnp.asarray(inv_alpha, jnp.float32)
+            guard_metrics = {
+                "obs/min_alpha": jnp.where(
+                    ia > 0, 1.0 / jnp.maximum(ia, 1e-38), 0.0),
+                "obs/active_workers": (
+                    jnp.asarray(float(state.theta.shape[0]), jnp.float32)
+                    if mask is None else jnp.sum(mask.astype(jnp.float32))),
+            }
     keep = None
     if mask is not None or evicted is not None:
         # all workers in a deep fade (or evicted) -> nobody transmitted:
@@ -243,13 +280,16 @@ def afadmm_round(
     new_state = AFadmmState(theta=theta_new, lam=lam_new, Theta=Theta_new,
                             blk=blk_next, step=state.step + 1,
                             phys=state.phys, flt=state.flt)
-    metrics = {
+    metrics = merge_disjoint({
         "primal_residual": jnp.sqrt(jnp.mean((theta_new - Theta_new[None, :]) ** 2)),
         "dual_residual": jnp.sqrt(jnp.mean(
             (cplx.abs2(h) * (Theta_new - state.Theta)[None, :]) ** 2)) * rho,
         "inv_alpha": jnp.asarray(inv_alpha),
-        **guard_metrics,
-    }
+    }, guard_metrics, who="afadmm_round")
+    if tel is not None:
+        # norm of the COMMITTED consensus update (after keep/skip gating)
+        dTh = Theta_new - state.Theta
+        metrics["obs/theta_update_norm"] = jnp.sqrt(jnp.sum(dTh * dTh))
     if mask is not None:
         metrics["participation"] = jnp.mean(mask.astype(jnp.float32))
     if aux:

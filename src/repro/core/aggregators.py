@@ -37,6 +37,7 @@ from repro.core.channel import (ChannelBlock, ChannelConfig, init_channel,
                                 step_channel)
 from repro.core.cplx import Complex
 from repro.core.subcarrier import SubcarrierPlan
+from repro.obs import merge_disjoint
 
 Array = jax.Array
 LocalSolve = Callable[[Array, Complex, Complex, Array], Array]
@@ -119,6 +120,9 @@ class AFadmm(ScanRounds):
     #: is a ``fold_in`` side-branch, never a ``split`` of the round key.
     faults: Optional[Any] = None
     guard: Optional[Any] = None
+    #: optional ``repro.obs.TelemetryConfig`` (or True) — in-graph ``obs/``
+    #: channel telemetry.  None keeps the round bit-for-bit.
+    telemetry: Optional[Any] = None
 
     name = "afadmm"
 
@@ -173,13 +177,13 @@ class AFadmm(ScanRounds):
             st, blk_next, local_solve, grad_fn, self.acfg, self.ccfg, kn,
             reduce_fn=self.reduce_fn, min_reduce_fn=self.min_reduce_fn,
             backend=self.backend, mask=mask, h_tx=h_tx,
-            guard=self.guard, faults=faults)
+            guard=self.guard, faults=faults, telemetry=self.telemetry)
         if self.faults is not None:
             from repro import faults as _faults
             aux = metrics.pop("_fault_aux", {})
             st = st._replace(flt=_faults.commit(
                 st.flt, aux.get("stale"), aux.get("evicted")))
-        metrics.update(fmetrics)
+        metrics = merge_disjoint(metrics, fmetrics, who="AFadmm.round")
         metrics["channel_uses"] = jnp.asarray(
             float(subcarrier.analog_channel_uses(self.plan)))
         return st, metrics

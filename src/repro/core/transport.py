@@ -373,6 +373,52 @@ def ota_uplink(theta: Array, lam: Complex, h: Complex, key: Array,
 # from HBM exactly once per round
 # ---------------------------------------------------------------------------
 
+def snr_db_from_power(sig: Array, npow: Array) -> Array:
+    """Effective receive SNR in dB from signal/noise power sums.
+
+    The division-free formula the round health guard uses
+    (``repro.faults.guards``): both operands are clamped to 1e-30 before
+    the ratio so an all-masked round (zero signal, zero effective noise)
+    yields 0 dB instead of NaN, and the result is clamped to ±1e3 dB.
+    Shared by the guard verdicts and ``obs/rx_snr_db`` telemetry so the
+    two can never drift apart.
+    """
+    snr = 10.0 * jnp.log10(jnp.maximum(sig, 1e-30) / jnp.maximum(npow, 1e-30))
+    return jnp.nan_to_num(snr, nan=-1e3, posinf=1e3, neginf=-1e3)
+
+
+def round_telemetry(tel, y_re: Array, noise_re: Array, inv_alpha: Array,
+                    energy: Optional[Array], mask: Optional[Array],
+                    n_workers: int) -> dict:
+    """``obs/`` channel telemetry from values the receive epilogue already
+    holds in registers (see the ``repro.obs`` schema docstring).
+
+    All O(d) elementwise-plus-reduce arithmetic over buffers the epilogue
+    just produced — no extra HBM passes over the (W, d) worker planes and
+    no extra dispatches; the whole dict rides the scan carry.
+    """
+    sig = jnp.sum(y_re * y_re)
+    n_eff = noise_re * inv_alpha
+    npw = jnp.sum(n_eff * n_eff)
+    # inv_alpha == 0 exactly means nobody transmitted (all-masked round)
+    alpha = jnp.where(inv_alpha > 0, 1.0 / jnp.maximum(inv_alpha, 1e-38), 0.0)
+    out = {
+        "obs/rx_snr_db": snr_db_from_power(sig, npw),
+        "obs/min_alpha": alpha,
+        "obs/active_workers": (jnp.asarray(float(n_workers), jnp.float32)
+                               if mask is None
+                               else jnp.sum(mask.astype(jnp.float32))),
+    }
+    if tel.per_worker and energy is not None:
+        # the energy each worker actually radiated: it transmits alpha*s,
+        # so E_tx = alpha^2 * |s|^2 summed — a (W,) VECTOR leaf
+        e_tx = energy * (alpha * alpha)
+        if mask is not None:
+            e_tx = jnp.where(mask, e_tx, 0.0)
+        out["obs/tx_energy"] = e_tx
+    return out
+
+
 def matched_filter_noise_re(key: Array, shape, ccfg: ChannelConfig) -> Array:
     """REAL plane of :func:`~repro.core.channel.matched_filter_noise`,
     without generating the imaginary draw the receiver never reads.
@@ -467,7 +513,7 @@ def ota_round_stats(theta: Array, lam: Complex, h: Complex, rho: float, *,
 def _ota_round_streamed(theta: Array, lam: Complex, h: Complex, key: Array,
                         rho: float, ccfg: ChannelConfig, chunk: int, *,
                         power_control, mask, h_tx, chan_step, min_reduce_fn,
-                        block_cols, backend):
+                        block_cols, backend, telemetry=None):
     """Worker-chunked (cohort-streamed) round: ``lax.scan`` over
     ``ceil(W/chunk)`` cohorts so peak signal-plane memory is O(chunk·D)
     instead of O(W·D) — W in the hundreds-to-thousands with scenario-driven
@@ -531,6 +577,10 @@ def _ota_round_streamed(theta: Array, lam: Complex, h: Complex, key: Array,
         inv_alpha = jnp.asarray(1.0, jnp.float32)
     noise_re = matched_filter_noise_re(key, (d,), ccfg)
     Theta = demodulate(y, p2, noise_re, inv_alpha, backend=backend)
+    if telemetry is not None:
+        tel = round_telemetry(telemetry, y, noise_re, inv_alpha, energy,
+                              mask, W)
+        return Theta.reshape(out_shape), inv_alpha, h_air, tel
     return Theta.reshape(out_shape), inv_alpha, h_air
 
 
@@ -544,7 +594,8 @@ def ota_round_fused(theta: Array, lam: Complex, h: Complex, key: Array,
                     worker_chunk: Optional[int] = None,
                     block_cols: Optional[int] = None,
                     backend: Optional[str] = None,
-                    ) -> Tuple[Array, Array, Complex]:
+                    telemetry=None,
+                    ) -> Tuple[Array, ...]:
     """The whole uplink round in one pass over the worker planes.
 
     Fused twin of :func:`ota_uplink`: modulate → power-scale → superpose
@@ -564,8 +615,14 @@ def ota_round_fused(theta: Array, lam: Complex, h: Complex, key: Array,
     cohorts of that size (O(chunk·D) peak signal memory, tolerance-equal).
 
     Returns ``(Theta, inv_alpha, h_air)`` — ``h_air`` is ``h`` or the
-    stepped channel when ``chan_step`` is given.
+    stepped channel when ``chan_step`` is given.  With ``telemetry`` on
+    (a live ``repro.obs.TelemetryConfig``) the return gains a fourth
+    element, the ``obs/`` metric dict of :func:`round_telemetry`; the
+    training math (Θ, inv_alpha, h_air) is unchanged — on the jnp
+    backend bitwise so, pinned in ``tests/test_obs.py``.
     """
+    from repro import obs as _obs
+    tel = _obs.resolve(telemetry)
     backend = resolve_backend(backend)
     W = theta.shape[0]
     d = theta.size // W
@@ -578,9 +635,9 @@ def ota_round_fused(theta: Array, lam: Complex, h: Complex, key: Array,
             theta, lam, h, key, rho, ccfg, chunk,
             power_control=power_control, mask=mask, h_tx=h_tx,
             chan_step=chan_step, min_reduce_fn=min_reduce_fn,
-            block_cols=block_cols, backend=backend)
+            block_cols=block_cols, backend=backend, telemetry=tel)
     out_shape = theta.shape[1:]
-    if backend == "pallas" and not power_control:
+    if backend == "pallas" and not power_control and tel is None:
         # α known a priori -> the epilogue fuses into the SAME launch
         from repro.kernels import ota_round as _k
         noise_re = matched_filter_noise_re(key, (d,), ccfg)
@@ -613,6 +670,9 @@ def ota_round_fused(theta: Array, lam: Complex, h: Complex, key: Array,
         inv_alpha = jnp.asarray(1.0, jnp.float32)
     noise_re = matched_filter_noise_re(key, out_shape, ccfg)
     Theta = demodulate(y, p2, noise_re, inv_alpha, backend=backend)
+    if tel is not None:
+        telm = round_telemetry(tel, y, noise_re, inv_alpha, energy, mask, W)
+        return Theta, inv_alpha, h_air, telm
     return Theta, inv_alpha, h_air
 
 

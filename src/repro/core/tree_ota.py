@@ -31,6 +31,7 @@ from repro.core.packing import (ShardPackSpec, build_packspec, pack,
                                 shard_b_chunk, shard_c_chunk,
                                 shard_rep_chunk, shard_valid_mask, unpack,
                                 unpack_cplx, unpack_shard_local)
+from repro.obs import merge_disjoint, resolve as resolve_telemetry
 
 Array = jax.Array
 PyTree = Any
@@ -175,6 +176,7 @@ def ota_tree_round_packed_state(theta: PyTree, lam_p: Complex, h_p: Complex,
                                 block_cols: Optional[int] = None,
                                 guard=None,
                                 faults=None,
+                                telemetry=None,
                                 ) -> Tuple[PyTree, Complex, dict]:
     """One OTA round where the duals/fading are ALREADY packed ``(W, D)``.
 
@@ -212,6 +214,7 @@ def ota_tree_round_packed_state(theta: PyTree, lam_p: Complex, h_p: Complex,
     zeroed.  Aux state the caller must thread back (refreshed stale buffer,
     evicted rows) rides in ``metrics["_fault_aux"]``.
     """
+    tel = resolve_telemetry(telemetry)
     theta_p = pack(spec, theta)                    # the one layout op per round
     aux = {}
     burst_std = None
@@ -240,18 +243,30 @@ def ota_tree_round_packed_state(theta: PyTree, lam_p: Complex, h_p: Complex,
             theta_tx_p, lam_p, h_p, key, acfg.rho, ccfg, gcfg,
             power_control=acfg.power_control, mask=mask, h_tx=h_tx_p,
             min_reduce_fn=min_reduce_fn, block_cols=block_cols,
-            backend=backend, burst_std=burst_std)
+            backend=backend, burst_std=burst_std, telemetry=tel)
         Theta_p, inv_alpha = gr.Theta, gr.inv_alpha
         if guard is not None:   # burst-only: no policy, accept the round
             healthy, evicted = gr.healthy, gr.evicted
             guard_metrics = gr.metrics
             aux["evicted"] = evicted
+        else:
+            # burst-only: no guard verdicts, but the accepted slot's obs/
+            # channel telemetry still applies
+            guard_metrics = {k: v for k, v in gr.metrics.items()
+                             if k.startswith("obs/")}
     elif use_fused:
-        Theta_p, inv_alpha, _ = transport.ota_round_fused(
-            theta_tx_p, lam_p, h_p, key, acfg.rho, ccfg,
-            power_control=acfg.power_control, mask=mask, h_tx=h_tx_p,
-            min_reduce_fn=min_reduce_fn, worker_chunk=worker_chunk,
-            block_cols=block_cols, backend=backend)
+        if tel is not None:
+            Theta_p, inv_alpha, _, guard_metrics = transport.ota_round_fused(
+                theta_tx_p, lam_p, h_p, key, acfg.rho, ccfg,
+                power_control=acfg.power_control, mask=mask, h_tx=h_tx_p,
+                min_reduce_fn=min_reduce_fn, worker_chunk=worker_chunk,
+                block_cols=block_cols, backend=backend, telemetry=tel)
+        else:
+            Theta_p, inv_alpha, _ = transport.ota_round_fused(
+                theta_tx_p, lam_p, h_p, key, acfg.rho, ccfg,
+                power_control=acfg.power_control, mask=mask, h_tx=h_tx_p,
+                min_reduce_fn=min_reduce_fn, worker_chunk=worker_chunk,
+                block_cols=block_cols, backend=backend)
     else:
         Theta_p, inv_alpha = transport.ota_uplink(
             theta_tx_p, lam_p, h_p, key, acfg.rho, ccfg,
@@ -263,7 +278,8 @@ def ota_tree_round_packed_state(theta: PyTree, lam_p: Complex, h_p: Complex,
     # bookkeeping is healthy even when its transmission was not
     lam_new_p = transport.dual_update(lam_p, h_wkr, theta_p, Theta_p,
                                       acfg.rho, backend=backend)
-    metrics = {"inv_alpha": jnp.asarray(inv_alpha), **guard_metrics}
+    metrics = merge_disjoint({"inv_alpha": jnp.asarray(inv_alpha)},
+                             guard_metrics, who="ota_tree_round_packed_state")
     freeze = mask
     if evicted is not None:
         freeze = ~evicted if freeze is None else freeze & ~evicted
@@ -290,6 +306,13 @@ def ota_tree_round_packed_state(theta: PyTree, lam_p: Complex, h_p: Complex,
         Theta_new = jax.tree.map(
             lambda new, old: jnp.where(keep, new, old.astype(new.dtype)),
             Theta_new, Theta_prev)
+    if tel is not None and Theta_prev is not None:
+        # l2 norm of the COMMITTED consensus update (post keep/skip gating)
+        sq = sum(jnp.sum((jnp.asarray(n, jnp.float32)
+                          - jnp.asarray(o, jnp.float32)) ** 2)
+                 for n, o in zip(jax.tree.leaves(Theta_new),
+                                 jax.tree.leaves(Theta_prev)))
+        metrics["obs/theta_update_norm"] = jnp.sqrt(sq)
     if aux:
         metrics["_fault_aux"] = aux
     return Theta_new, lam_new_p, metrics
@@ -306,6 +329,7 @@ def ota_tree_round(theta: PyTree, lam: PyTree, h: PyTree, key: Array,
                    Theta_prev: Optional[PyTree] = None,
                    fused: Optional[bool] = None,
                    worker_chunk: Optional[int] = None,
+                   telemetry=None,
                    ) -> Tuple[PyTree, PyTree, dict]:
     """Uplink + global + dual for one round (post-local-steps), packed.
 
@@ -344,7 +368,8 @@ def ota_tree_round(theta: PyTree, lam: PyTree, h: PyTree, key: Array,
         spec, backend=backend, reduce_fn=reduce_fn,
         min_reduce_fn=min_reduce_fn, mask=mask,
         h_tx_p=None if h_tx is None else pack_cplx(spec, h_tx),
-        Theta_prev=Theta_prev, fused=fused, worker_chunk=worker_chunk)
+        Theta_prev=Theta_prev, fused=fused, worker_chunk=worker_chunk,
+        telemetry=telemetry)
     return Theta_new, unpack_cplx(spec, lam_new_p), metrics
 
 
@@ -547,6 +572,7 @@ def ota_tree_round_shard_local(theta: PyTree, lam_p: Complex, h_p: Complex,
                                block_cols: Optional[int] = None,
                                guard=None,
                                faults=None,
+                               telemetry=None,
                                ) -> Tuple[PyTree, Complex, dict]:
     """One OTA round with SHARD-LOCAL packing under a model-parallel mesh.
 
@@ -620,6 +646,12 @@ def ota_tree_round_shard_local(theta: PyTree, lam_p: Complex, h_p: Complex,
     has_htx = h_tx_p is not None
     has_guard = guard is not None
     has_faults = faults is not None
+    tel = resolve_telemetry(telemetry)
+    has_tel = tel is not None
+    # the receive-SNR / tx-energy telemetry needs the fused stats; the
+    # composed (fused=False) oracle body still gets the worker-free subset
+    want_energy_out = (has_tel and use_fused and tel.per_worker
+                       and acfg.power_control)
     if (has_guard or has_faults) and not use_fused:
         raise ValueError("round guards/faults require the fused shard-local "
                          "path (fused=True)")
@@ -707,24 +739,29 @@ def ota_tree_round_shard_local(theta: PyTree, lam_p: Complex, h_p: Complex,
                     bad = gsum(jnp.sum((~jnp.isfinite(Th))
                                        .astype(jnp.float32)))
                     ok = bad == 0.0
-                    if guard.snr_floor_db is not None:
-                        thr = 10.0 ** (guard.snr_floor_db / 10.0)
+                    sig = npw = dummy
+                    if guard.snr_floor_db is not None or has_tel:
                         sig = gsum(jnp.sum(y_l * y_l))
                         npw = gsum(jnp.sum(n_eff * n_eff))
+                    if guard.snr_floor_db is not None:
+                        thr = 10.0 ** (guard.snr_floor_db / 10.0)
                         ok &= sig >= thr * npw
-                    return Th, ia, ok
+                    return Th, ia, ok, sig, npw
 
-                Theta_p, inv_alpha, ok = epi(noise_key, jnp.int32(0),
-                                             has_burst)
+                Theta_p, inv_alpha, ok, sig_g, npw_g = epi(
+                    noise_key, jnp.int32(0), has_burst)
                 retries_l = jnp.zeros((), jnp.int32)
                 # statically unrolled retries: SPMD-safe (no collective in
                 # control flow), same keys/backoff a lazy loop would use
                 for a in range(1, guard.retries + 1):
                     ka = jax.random.fold_in(noise_key, _fg.RETRY_SALT + a)
-                    Th_a, ia_a, ok_a = epi(ka, jnp.int32(a), False)
+                    Th_a, ia_a, ok_a, sig_a, npw_a = epi(ka, jnp.int32(a),
+                                                         False)
                     take = ~ok
                     Theta_p = jnp.where(take, Th_a, Theta_p)
                     inv_alpha = jnp.where(take, ia_a, inv_alpha)
+                    sig_g = jnp.where(take, sig_a, sig_g)
+                    npw_g = jnp.where(take, npw_a, npw_g)
                     retries_l = retries_l + take.astype(jnp.int32)
                     ok = jnp.where(take, ok_a, ok)
                 healthy_l = ok
@@ -742,6 +779,21 @@ def ota_tree_round_shard_local(theta: PyTree, lam_p: Complex, h_p: Complex,
                         kb, noise_re.shape, jnp.float32)
                 Theta_p = transport.demodulate(y_l, p2_l, noise_re,
                                                inv_alpha, backend=backend)
+                sig_g = npw_g = dummy
+                if has_tel:
+                    # y_l is replicated over the data axes here, so the
+                    # global power sums reduce over the shard grid only —
+                    # the guard's exact gsum
+                    n_eff = noise_re * inv_alpha
+                    sig_g = jax.lax.psum(jnp.sum(y_l * y_l), sax_entry)
+                    npw_g = jax.lax.psum(jnp.sum(n_eff * n_eff), sax_entry)
+            e_tx = dummy
+            if want_energy_out:
+                alpha = jnp.where(inv_alpha > 0,
+                                  1.0 / jnp.maximum(inv_alpha, 1e-38), 0.0)
+                e_tx = energy * (alpha * alpha)
+                if mask is not None:
+                    e_tx = jnp.where(mask, e_tx, 0.0)
             h_wkr = h if h_tx is None else h_tx
         else:
             h_wkr = h if h_tx is None else h_tx
@@ -792,6 +844,10 @@ def ota_tree_round_shard_local(theta: PyTree, lam_p: Complex, h_p: Complex,
             out += [healthy_l, retries_l]
             if guard.evicts:
                 out.append(evicted_l)
+        if has_tel and use_fused:
+            out += [sig_g, npw_g]
+            if want_energy_out:
+                out.append(e_tx)
         return tuple(out)
 
     theta_specs = _shard_theta_specs(sspec, wentry, model_axis,
@@ -812,6 +868,10 @@ def ota_tree_round_shard_local(theta: PyTree, lam_p: Complex, h_p: Complex,
     if has_guard:
         out_specs += [P(), P()]
         if guard.evicts:
+            out_specs.append(P(wentry))
+    if has_tel and use_fused:
+        out_specs += [P(), P()]
+        if want_energy_out:
             out_specs.append(P(wentry))
     outs = shard_map(
         body, mesh=mesh, in_specs=in_specs, out_specs=tuple(out_specs),
@@ -834,15 +894,35 @@ def ota_tree_round_shard_local(theta: PyTree, lam_p: Complex, h_p: Complex,
         aux["stale"] = outs.pop(0)
     if has_guard:
         healthy = outs.pop(0)
-        guard_metrics["guard_healthy"] = healthy.astype(jnp.float32)
-        guard_metrics["guard_retries"] = outs.pop(0).astype(jnp.float32)
+        guard_metrics["guard/healthy"] = healthy.astype(jnp.float32)
+        guard_metrics["guard/retries"] = outs.pop(0).astype(jnp.float32)
         if guard.evicts:
             evicted = outs.pop(0)
             aux["evicted"] = evicted
-            guard_metrics["guard_evicted"] = jnp.sum(
+            guard_metrics["guard/evicted"] = jnp.sum(
                 evicted.astype(jnp.float32))
+    obs_metrics = {}
+    if has_tel:
+        ia = jnp.asarray(inv_alpha, jnp.float32)
+        obs_metrics["obs/min_alpha"] = jnp.where(
+            ia > 0, 1.0 / jnp.maximum(ia, 1e-38), 0.0)
+        active = (jnp.ones(lam_p.re.shape[:1], bool) if mask is None
+                  else mask)
+        if evicted is not None:
+            active = active & ~evicted
+        obs_metrics["obs/active_workers"] = jnp.sum(
+            active.astype(jnp.float32))
+        if use_fused:
+            sig_g = outs.pop(0)
+            npw_g = outs.pop(0)
+            obs_metrics["obs/rx_snr_db"] = transport.snr_db_from_power(
+                sig_g, npw_g)
+            if want_energy_out:
+                obs_metrics["obs/tx_energy"] = outs.pop(0)
 
-    metrics = {"inv_alpha": jnp.asarray(inv_alpha), **guard_metrics}
+    metrics = merge_disjoint({"inv_alpha": jnp.asarray(inv_alpha)},
+                             guard_metrics, obs_metrics,
+                             who="ota_tree_round_shard_local")
     if mask is not None:
         metrics["participation"] = jnp.mean(mask.astype(jnp.float32))
     keep = None
@@ -858,6 +938,12 @@ def ota_tree_round_shard_local(theta: PyTree, lam_p: Complex, h_p: Complex,
         Theta_new = jax.tree.map(
             lambda new, old: jnp.where(keep, new, old.astype(new.dtype)),
             Theta_new, Theta_prev)
+    if has_tel and Theta_prev is not None:
+        sq = sum(jnp.sum((jnp.asarray(n, jnp.float32)
+                          - jnp.asarray(o, jnp.float32)) ** 2)
+                 for n, o in zip(jax.tree.leaves(Theta_new),
+                                 jax.tree.leaves(Theta_prev)))
+        metrics["obs/theta_update_norm"] = jnp.sqrt(sq)
     if aux:
         metrics["_fault_aux"] = aux
     return Theta_new, lam_new_p, metrics

@@ -90,7 +90,7 @@ class GuardedRound(NamedTuple):
     inv_alpha: Array    # the accepted slot's 1/α
     healthy: Array      # () bool — False: caller applies the skip policy
     evicted: Array      # (W,) bool — offenders cut this round
-    metrics: dict       # guard_retries / guard_snr_db / guard_ok_first
+    metrics: dict       # guard/retries, guard/snr_db, ... (+ obs/ if on)
 
 
 class _Carry(NamedTuple):
@@ -120,6 +120,7 @@ def guarded_receive(key: Array, gcfg: GuardConfig, *,
                     burst_std: Optional[Array] = None,
                     gsum: Callable = _identity,
                     offender_fn: Optional[Callable] = None,
+                    telemetry=None,
                     ) -> GuardedRound:
     """Generic guarded-receive engine, parameterised so the flat/packed
     round (:func:`guarded_ota_round`) and the shard-local round (inside
@@ -202,16 +203,29 @@ def guarded_receive(key: Array, gcfg: GuardConfig, *,
 
         carry = jax.lax.while_loop(unhealthy, retry, carry)
 
-    snr_db = 10.0 * jnp.log10(jnp.maximum(carry.sig, 1e-30)
-                              / jnp.maximum(carry.npow, 1e-30))
+    snr_db = transport.snr_db_from_power(carry.sig, carry.npow)
     metrics = {
-        "guard_retries": (carry.attempt - 1).astype(jnp.float32),
-        "guard_snr_db": jnp.nan_to_num(snr_db, nan=-1e3,
-                                       posinf=1e3, neginf=-1e3),
-        "guard_ok_first": ok0.astype(jnp.float32),
-        "guard_healthy": carry.ok.astype(jnp.float32),
-        "guard_evicted": jnp.sum(evicted.astype(jnp.float32)),
+        "guard/retries": (carry.attempt - 1).astype(jnp.float32),
+        "guard/snr_db": snr_db,
+        "guard/ok_first": ok0.astype(jnp.float32),
+        "guard/healthy": carry.ok.astype(jnp.float32),
+        "guard/evicted": jnp.sum(evicted.astype(jnp.float32)),
     }
+    tel = telemetry
+    if tel is not None:
+        # the accepted attempt's channel telemetry — everything is already
+        # in the cascade carry, so this adds no dispatches.  The guard's
+        # sig/npow include the burst term, so obs/rx_snr_db here is exactly
+        # guard/snr_db (one SNR definition, two namespaces).
+        alpha = jnp.where(carry.inv_alpha > 0,
+                          1.0 / jnp.maximum(carry.inv_alpha, 1e-38), 0.0)
+        metrics["obs/rx_snr_db"] = snr_db
+        metrics["obs/min_alpha"] = alpha
+        metrics["obs/active_workers"] = jnp.sum(
+            carry.mask.astype(jnp.float32))
+        if tel.per_worker:
+            metrics["obs/tx_energy"] = jnp.where(
+                carry.mask, carry.energy * (alpha * alpha), 0.0)
     return GuardedRound(carry.Theta, carry.inv_alpha, carry.ok, evicted,
                         metrics)
 
@@ -235,6 +249,7 @@ def guarded_ota_round(theta: Array, lam, h, key: Array, rho: float,
                       block_cols: Optional[int] = None,
                       backend: Optional[str] = None,
                       burst_std: Optional[Array] = None,
+                      telemetry=None,
                       ) -> GuardedRound:
     """Guarded twin of :func:`transport.ota_round_fused` for the flat
     ``(W, d)`` and packed ``(W, D)`` paths.  On a healthy round (no burst,
@@ -275,7 +290,9 @@ def guarded_ota_round(theta: Array, lam, h, key: Array, rho: float,
             planes += [h_tx.re, h_tx.im]
         return _rows_nonfinite(*planes)
 
+    from repro import obs as _obs
     return guarded_receive(key, gcfg, stats_fn=stats_fn,
                            inv_alpha_fn=inv_alpha_fn, noise_fn=noise_fn,
                            demod_fn=demod_fn, mask=mask, n_workers=W,
-                           burst_std=burst_std, offender_fn=offender_fn)
+                           burst_std=burst_std, offender_fn=offender_fn,
+                           telemetry=_obs.resolve(telemetry))

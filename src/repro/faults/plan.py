@@ -167,13 +167,13 @@ def draw(plan: FaultPlan, key: Array, st: FaultState,
                      snapshot_due=snapshot_due, burst_std=burst)
     st_mid = st._replace(alive=alive, round=r + 1)
     f32 = lambda x: jnp.sum(x.astype(jnp.float32))
-    metrics = {"fault_alive": f32(alive)}
+    metrics = {"fault/alive": f32(alive)}
     if straggler is not None:
-        metrics["fault_stragglers"] = f32(straggler & alive)
+        metrics["fault/stragglers"] = f32(straggler & alive)
     if corrupt is not None:
-        metrics["fault_corrupt"] = f32(corrupt & alive)
+        metrics["fault/corrupt"] = f32(corrupt & alive)
     if burst is not None:
-        metrics["fault_burst"] = (burst > 0).astype(jnp.float32)
+        metrics["fault/burst"] = (burst > 0).astype(jnp.float32)
     return rf, st_mid, metrics
 
 

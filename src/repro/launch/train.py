@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import jax
@@ -131,13 +132,30 @@ def main() -> None:
     ap.add_argument("--resume", action="store_true",
                     help="resume from the latest snapshot in "
                          "--checkpoint-dir; bitwise the uninterrupted run")
+    # --- observability (repro.obs) -----------------------------------------
+    ap.add_argument("--run-dir", default=None,
+                    help="structured run logs: manifest.json + one "
+                         "metrics.jsonl event per round (EVERY round, both "
+                         "drivers) + compile_report.json; --resume appends "
+                         "to the same log")
+    ap.add_argument("--telemetry", default=None, choices=["on", "off"],
+                    help="in-graph obs/ channel telemetry (default: on iff "
+                         "--run-dir is set; off is bitwise the pre-obs "
+                         "trainer)")
+    ap.add_argument("--profile", action="store_true",
+                    help="jax.profiler trace into RUN_DIR/trace plus "
+                         "wall-clock spans (compile vs execute split, "
+                         "s/round series) in RUN_DIR/profile.json")
     args = ap.parse_args()
 
     if args.ota_block_rows is not None:
         # knobs are read lazily at trace time (repro.optflags), so setting
         # the env here — after import — still takes effect
-        import os
         os.environ["REPRO_OTA_BLOCK_ROWS"] = str(args.ota_block_rows)
+
+    #: telemetry defaults on exactly when the run is being logged
+    telemetry_on = (args.telemetry == "on") if args.telemetry is not None \
+        else args.run_dir is not None
 
     key = jax.random.PRNGKey(args.seed)
     model = get_model(args.arch, reduced=args.reduced)
@@ -187,11 +205,31 @@ def main() -> None:
                      else args.ota_fused == "on",
                      ota_worker_chunk=args.ota_worker_chunk,
                      ota_block_cols=args.ota_block_cols,
-                     faults=faults, guard=guard)
+                     faults=faults, guard=guard,
+                     telemetry=True if telemetry_on else None)
     acfg = AdmmConfig(rho=args.rho, flip_on_change=False)
     ccfg = ChannelConfig(n_workers=W, snr_db=args.snr_db,
                          coherence_iters=args.coherence)
     init_fn, train_step = make_fl_train(model, flcfg, acfg, ccfg, mesh=mesh)
+
+    sink = timer = None
+    if args.run_dir:
+        import dataclasses
+        from repro.obs.sink import MetricsSink, run_manifest
+        sink = MetricsSink(args.run_dir, resume=args.resume)
+        sink.write_manifest(run_manifest(
+            arch=args.arch, reduced=args.reduced, mode=args.mode,
+            driver=args.driver, backend=args.backend,
+            telemetry=telemetry_on, rounds=args.rounds, workers=W,
+            seed=args.seed, log_every=args.log_every,
+            mesh_shape=dict(mesh.shape) if mesh is not None else None,
+            flconfig=dataclasses.asdict(flcfg),
+            admm=dataclasses.asdict(acfg),
+            channel=dataclasses.asdict(ccfg),
+            argv=vars(args)))
+    if args.run_dir or args.profile:
+        from repro.obs.profiling import SpanTimer
+        timer = SpanTimer()
 
     # per-worker non-IID token streams (data pipeline)
     data = token_dataset(jax.random.fold_in(key, 1), n_sequences=64,
@@ -212,6 +250,8 @@ def main() -> None:
             r0 = latest
             print(f"resumed from round {r0} "
                   f"({round_path(args.checkpoint_dir, latest)})", flush=True)
+            if sink is not None:
+                sink.log_resume(r0)
 
     def maybe_checkpoint(stop: int, st, last: int) -> int:
         """Snapshot the FULL train state (θ, λ, Θ, channel/fault state —
@@ -238,52 +278,128 @@ def main() -> None:
         return batch
 
     def log(r, metrics):
-        m = {k: float(v) for k, v in metrics.items()}
+        # stdout keeps the scalar summary; vector leaves (obs/tx_energy)
+        # only go to the structured sink
+        m = {k: float(v) for k, v in metrics.items() if jnp.ndim(v) == 0}
         print(f"round {r:4d}  loss={m['loss']:.4f}  "
               f"{json.dumps({k: round(v, 4) for k, v in m.items() if k != 'loss'})}",
               flush=True)
 
+    def aot_compile(jitted, sample_args, rounds_per_dispatch):
+        """AOT lower + compile (timed, so the compile/execute split is
+        real) and write ``compile_report.json`` from the optimized HLO.
+        Falls back to the plain jitted callable on any failure — the run
+        itself must never die on a profiling hook."""
+        if timer is None:
+            return jitted
+        from repro.obs.profiling import compile_report
+        try:
+            t_l = time.time()
+            lowered = jitted.lower(*sample_args)
+            t_c = time.time()
+            compiled = lowered.compile()
+            dt_c = time.time() - t_c
+            timer.add("compile", dt_c)
+            if args.run_dir:
+                compile_report(
+                    compiled.as_text(),
+                    os.path.join(args.run_dir, "compile_report.json"),
+                    compile_seconds=dt_c, lower_seconds=t_c - t_l,
+                    rounds_per_dispatch=rounds_per_dispatch)
+            return compiled
+        except Exception as e:
+            print(f"obs: compile report unavailable ({e})", flush=True)
+            return jitted
+
+    import contextlib
+    trace_ctx = contextlib.nullcontext()
+    if args.profile and args.run_dir:
+        from repro.obs.profiling import trace_session
+        trace_ctx = trace_session(os.path.join(args.run_dir, "trace"))
+
     t0 = time.time()
-    if args.driver == "scan":
-        # batch sampling folded into the scan body: one dispatch per block
-        # instead of one per round.  Block = gcd(log_every, remaining) so
-        # every block has the SAME static length — one XLA compile even when
-        # log_every doesn't divide rounds (a ragged tail block would force a
-        # second full compile of the scanned train_step).  A fresh run
-        # (r0 = 0) keeps the historical gcd(log_every, rounds) blocks; batch
-        # and round keys fold in the GLOBAL round index, so a resumed run's
-        # shifted block boundaries change nothing about the math.
-        import math
-        block = max(1, math.gcd(args.log_every, args.rounds - r0))
+    with trace_ctx:
+        if args.driver == "scan":
+            # batch sampling folded into the scan body: one dispatch per
+            # block instead of one per round.  Block = gcd(log_every,
+            # remaining) so every block has the SAME static length — one XLA
+            # compile even when log_every doesn't divide rounds (a ragged
+            # tail block would force a second full compile of the scanned
+            # train_step).  A fresh run (r0 = 0) keeps the historical
+            # gcd(log_every, rounds) blocks; batch and round keys fold in
+            # the GLOBAL round index, so a resumed run's shifted block
+            # boundaries change nothing about the math.
+            import math
+            block = max(1, math.gcd(args.log_every, args.rounds - r0))
 
-        def block_body(data, s, r):
-            batch = make_batch(data, jax.random.fold_in(key, 1000 + r))
-            return train_step(s, batch, jax.random.fold_in(key, 2000 + r))
+            def block_body(data, s, r):
+                batch = make_batch(data, jax.random.fold_in(key, 1000 + r))
+                return train_step(s, batch, jax.random.fold_in(key, 2000 + r))
 
-        # data rides as a jit argument (not a closed-over constant baked
-        # into the executable)
-        run_block = jax.jit(
-            lambda d, s, rs: jax.lax.scan(
-                lambda ss, r: block_body(d, ss, r), s, rs),
-            donate_argnums=(1,))
-        last = r0
-        for start in range(r0, args.rounds, block):
-            st, ms = run_block(data, st, jnp.arange(start, start + block,
-                                                    dtype=jnp.int32))
-            log(start + block - 1, jax.tree.map(lambda x: x[-1], ms))
-            last = maybe_checkpoint(start + block, st, last)
-    else:
-        step = jax.jit(train_step, donate_argnums=(0,))
-        last = r0
-        for r in range(r0, args.rounds):
-            batch = make_batch(data, jax.random.fold_in(key, 1000 + r))
-            st, metrics = step(st, batch, jax.random.fold_in(key, 2000 + r))
-            if r % args.log_every == 0 or r == args.rounds - 1:
-                log(r, metrics)
-            last = maybe_checkpoint(r + 1, st, last)
+            # data rides as a jit argument (not a closed-over constant baked
+            # into the executable)
+            run_block = jax.jit(
+                lambda d, s, rs: jax.lax.scan(
+                    lambda ss, r: block_body(d, ss, r), s, rs),
+                donate_argnums=(1,))
+            run_block = aot_compile(
+                run_block,
+                (data, st, jnp.arange(r0, r0 + block, dtype=jnp.int32)),
+                block)
+            last = r0
+            for start in range(r0, args.rounds, block):
+                tb = time.time()
+                st, ms = run_block(data, st, jnp.arange(start, start + block,
+                                                        dtype=jnp.int32))
+                if sink is not None or timer is not None:
+                    ms = jax.device_get(ms)      # host sync: timing is real
+                    bs = time.time() - tb
+                    if timer is not None:
+                        timer.add("execute", bs)
+                    if sink is not None:
+                        # EVERY round of the block goes to the structured
+                        # log; stdout keeps the last-round summary below
+                        sink.log_rounds(start, ms)
+                        sink.log_block(start + block - 1, bs, block)
+                log(start + block - 1, jax.tree.map(lambda x: x[-1], ms))
+                last = maybe_checkpoint(start + block, st, last)
+        else:
+            step = jax.jit(train_step, donate_argnums=(0,))
+            step = aot_compile(
+                step,
+                (st, make_batch(data, jax.random.fold_in(key, 1000 + r0)),
+                 jax.random.fold_in(key, 2000 + r0)), 1)
+            last = r0
+            for r in range(r0, args.rounds):
+                tr = time.time()
+                batch = make_batch(data, jax.random.fold_in(key, 1000 + r))
+                st, metrics = step(st, batch,
+                                   jax.random.fold_in(key, 2000 + r))
+                if sink is not None or timer is not None:
+                    metrics = jax.device_get(metrics)
+                    if timer is not None:
+                        timer.add("execute", time.time() - tr)
+                    if sink is not None:
+                        sink.log_round(r, metrics)
+                if r % args.log_every == 0 or r == args.rounds - 1:
+                    log(r, metrics)
+                last = maybe_checkpoint(r + 1, st, last)
     dt = time.time() - t0
     print(f"done: {args.rounds} rounds in {dt:.1f}s "
           f"({dt / args.rounds:.2f}s/round)")
+    if sink is not None:
+        sink.log_done(args.rounds - r0, dt)
+        sink.close()
+    if timer is not None:
+        summ = timer.summary()
+        if args.run_dir:
+            with open(os.path.join(args.run_dir, "profile.json"), "w") as f:
+                json.dump({"spans": summ, "series": timer.series}, f,
+                          indent=2, sort_keys=True)
+                f.write("\n")
+        parts = ", ".join(f"{k}={v['seconds']:.2f}s/{int(v['count'])}x"
+                          for k, v in sorted(summ.items()))
+        print(f"profile: {parts}", flush=True)
 
     if args.checkpoint:
         Theta = st.Theta

@@ -53,9 +53,20 @@ def _eval_rounds(n_rounds: int, eval_every: int) -> List[bool]:
             for r in range(n_rounds)]
 
 
+def _metric_entries(v) -> list:
+    """Per-round history entries from a ``(T,)`` or ``(T, k)`` stacked
+    metric: scalar metrics become floats, vector metrics (e.g. the per-worker
+    ``obs/tx_energy``) become lists of floats — one entry per round either
+    way."""
+    a = np.asarray(v)
+    if a.ndim <= 1:
+        return [float(x) for x in a.reshape(-1)]
+    return [[float(x) for x in row] for row in a.reshape(a.shape[0], -1)]
+
+
 def _record_metrics(hist: History, metrics: Dict[str, np.ndarray]) -> None:
     for k, v in metrics.items():
-        vals = [float(x) for x in np.asarray(v)]
+        vals = _metric_entries(v)
         if k == "channel_uses":
             hist.channel_uses.extend(vals)
         else:
@@ -70,7 +81,8 @@ def train_scan(algorithm, theta0: Array, local_solve: Callable,
                start_round: int = 0,
                init_state=None,
                checkpoint_dir: Optional[str] = None,
-               checkpoint_every: int = 0) -> History:
+               checkpoint_every: int = 0,
+               sink=None) -> History:
     """Scan-compiled driver: ≤ ``ceil(n_rounds / block_rounds)`` dispatches.
 
     ``block_rounds`` defaults to the algorithm's channel coherence block
@@ -111,7 +123,12 @@ def train_scan(algorithm, theta0: Array, local_solve: Callable,
         rounds = jnp.arange(start, stop, dtype=jnp.int32)
         mask = jnp.asarray(do_eval[start:stop])
         st, metrics, evals = chunk_fn(st, rounds, mask)
-        _record_metrics(hist, jax.device_get(metrics))
+        ms = jax.device_get(metrics)
+        _record_metrics(hist, ms)
+        if sink is not None:
+            # EVERY round of the block lands in the structured log, not
+            # just the block's last row
+            sink.log_rounds(start, ms)
         if eval_fn is not None:
             evals = jax.device_get(evals)
             for i, r in enumerate(range(start, stop)):
@@ -149,7 +166,7 @@ def resume_state(algorithm, theta0: Array, key: Array, checkpoint_dir: str):
 def train_loop(algorithm, theta0: Array, local_solve: Callable,
                grad_fn: Callable, n_rounds: int, key: Array,
                eval_fn: Optional[Callable[[Array], Dict[str, Array]]] = None,
-               eval_every: int = 1) -> History:
+               eval_every: int = 1, sink=None) -> History:
     """Reference driver: one jitted round + host sync per round."""
     st = algorithm.init(key, theta0)
 
@@ -172,10 +189,15 @@ def train_loop(algorithm, theta0: Array, local_solve: Callable,
             hist.loss.append(float(ev["loss"]))
             if "accuracy" in ev:
                 hist.accuracy.append(float(ev["accuracy"]))
+        if sink is not None:
+            sink.log_round(r, jax.device_get(metrics))
         for k, v in metrics.items():
             if k == "channel_uses":
                 continue
-            hist.extra.setdefault(k, []).append(float(v))
+            a = np.asarray(v)
+            hist.extra.setdefault(k, []).append(
+                float(a) if a.ndim == 0
+                else [float(x) for x in a.reshape(-1)])
     return hist
 
 
@@ -185,7 +207,8 @@ def train(algorithm, theta0: Array, local_solve: Callable, grad_fn: Callable,
           eval_every: int = 1, driver: str = "scan",
           block_rounds: Optional[int] = None,
           checkpoint_dir: Optional[str] = None,
-          checkpoint_every: int = 0, resume: bool = False) -> History:
+          checkpoint_every: int = 0, resume: bool = False,
+          sink=None) -> History:
     """Run ``n_rounds`` of federated optimisation.
 
     Args:
@@ -209,8 +232,8 @@ def train(algorithm, theta0: Array, local_solve: Callable, grad_fn: Callable,
                           key, eval_fn, eval_every, block_rounds,
                           start_round=start_round, init_state=init_state,
                           checkpoint_dir=checkpoint_dir,
-                          checkpoint_every=checkpoint_every)
+                          checkpoint_every=checkpoint_every, sink=sink)
     if driver == "loop":
         return train_loop(algorithm, theta0, local_solve, grad_fn, n_rounds,
-                          key, eval_fn, eval_every)
+                          key, eval_fn, eval_every, sink=sink)
     raise ValueError(f"unknown driver {driver!r}; want 'scan' or 'loop'")

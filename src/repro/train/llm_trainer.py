@@ -63,6 +63,7 @@ from repro.core.tree_ota import (TreeChannel, TreeFLState, _zmap,
                                  tree_penalty_grad, unpack_cplx_shard_local)
 from repro.models.registry import Model
 from repro.models.sharding import shard
+from repro.obs import merge_disjoint, resolve as resolve_telemetry
 from repro.optim.optimizers import adam, sgd
 
 Array = jax.Array
@@ -131,6 +132,12 @@ class FLConfig:
     #: receive-SNR floor, skip/retransmit/evict cascade) compiled into the
     #: fused receive.  A healthy guarded round is bitwise the unguarded one.
     guard: Optional[Any] = None
+    #: ``repro.obs.TelemetryConfig`` (or True) — in-graph round telemetry:
+    #: ``obs/``-prefixed metrics (receive SNR, min-α, per-worker tx energy,
+    #: active workers, Θ-update norm) collected inside the round and riding
+    #: the existing metrics dict / scan carry.  None/False keeps the trainer
+    #: bitwise identical to the telemetry-free build (no extra ops traced).
+    telemetry: Optional[Any] = None
 
 
 def _local_opt(flcfg: FLConfig):
@@ -153,6 +160,7 @@ def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
     scenario + model-parallel rejection is gone)."""
     W = flcfg.n_workers
     opt = _local_opt(flcfg)
+    tel = resolve_telemetry(flcfg.telemetry)
 
     if mesh is None:
         from repro.models.sharding import current_mesh
@@ -182,6 +190,10 @@ def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
                 "FLConfig.faults/guard apply to the packed uplink and "
                 "require the packed state layout (packed_uplink != False)")
         from repro import faults as _faults
+    if tel is not None and flcfg.packed_uplink is False:
+        raise ValueError(
+            "FLConfig.telemetry is collected inside the packed receive and "
+            "requires the packed state layout (packed_uplink != False)")
 
     def _packed_state() -> bool:
         """Resolved once at build time; ``train_step`` then reads the layout
@@ -321,7 +333,7 @@ def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
                 backend=flcfg.transport_backend, mask=mask, h_tx_p=h_tx_p,
                 Theta_prev=Theta_prev, fused=flcfg.ota_fused,
                 block_cols=flcfg.ota_block_cols,
-                guard=gcfg, faults=faults_arg)
+                guard=gcfg, faults=faults_arg, telemetry=tel)
         elif packed:  # incl. every scenario: mask/h_tx/guard default to None
             Theta_f32, lam_new, m = ota_tree_round_packed_state(
                 theta, state.lam, chan.h, kn, acfg, ccfg, spec,
@@ -329,7 +341,7 @@ def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
                 Theta_prev=Theta_prev, fused=flcfg.ota_fused,
                 worker_chunk=flcfg.ota_worker_chunk,
                 block_cols=flcfg.ota_block_cols,
-                guard=gcfg, faults=faults_arg)
+                guard=gcfg, faults=faults_arg, telemetry=tel)
         else:
             Theta_f32, lam_new, m = ota_tree_round(
                 theta, state.lam, chan.h, kn, acfg, ccfg,
@@ -340,11 +352,21 @@ def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
             flt_new = _faults.commit(flt_mid, aux.get("stale"),
                                      aux.get("evicted"))
         Theta_new = _zmap(lambda T, t: T.astype(t.dtype), Theta_f32, state.Theta)
+        if tel is not None and "obs/theta_update_norm" not in m:
+            # fault-free rounds never see Theta_prev inside the round, so
+            # the round couldn't emit the norm itself — compute it here
+            sq = sum(jnp.sum((jnp.asarray(n, jnp.float32)
+                              - jnp.asarray(o, jnp.float32)) ** 2)
+                     for n, o in zip(jax.tree.leaves(Theta_new),
+                                     jax.tree.leaves(state.Theta)))
+            m["obs/theta_update_norm"] = jnp.sqrt(sq)
         new_state = TreeFLState(theta=theta, lam=lam_new, Theta=Theta_new,
                                 chan=chan, opt=opt_state,
                                 step=state.step + 1, flt=flt_new)
-        metrics = {"loss": losses[-1], **m, **fmetrics,
-                   "theta_drift": _tree_rms_gap(theta, Theta_new)}
+        metrics = merge_disjoint(
+            {"loss": losses[-1],
+             "theta_drift": _tree_rms_gap(theta, Theta_new)},
+            m, fmetrics, who="make_replicated.train_step")
         return new_state, metrics
 
     return init_fn, train_step
@@ -405,6 +427,7 @@ def make_sketched(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
     W = flcfg.n_workers
     ratio = flcfg.sketch_ratio
     backend = flcfg.transport_backend
+    tel = resolve_telemetry(flcfg.telemetry)
 
     if mesh is None:
         from repro.models.sharding import current_mesh
@@ -643,7 +666,7 @@ def make_sketched(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
             Theta_prev=Theta_prev, fused=flcfg.ota_fused,
             worker_chunk=flcfg.ota_worker_chunk,
             block_cols=flcfg.ota_block_cols,
-            guard=gcfg, faults=faults_arg)
+            guard=gcfg, faults=faults_arg, telemetry=tel)
 
         g_delta = decode_delta(sspec, Theta_s)
         Theta_new = jax.tree.map(
@@ -657,7 +680,14 @@ def make_sketched(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
                                      aux.get("evicted"))
         new_state = SketchFLState(Theta=Theta_new, lam=lam_new, chan=chan,
                                   step=state.step + 1, flt=flt_new)
-        metrics = {"loss": jnp.mean(losses), **m, **fmetrics}
+        metrics = merge_disjoint({"loss": jnp.mean(losses)}, m, fmetrics,
+                                 who="make_sketched.train_step")
+        if tel is not None:
+            # report the MODEL-space update norm (sketch_lr · ‖decoded
+            # delta‖), superseding any sketch-space norm the round emitted
+            sq = sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                     for l in jax.tree.leaves(g_delta))
+            metrics["obs/theta_update_norm"] = flcfg.sketch_lr * jnp.sqrt(sq)
         return new_state, metrics
 
     return init_fn, train_step

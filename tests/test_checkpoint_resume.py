@@ -135,7 +135,7 @@ def test_scan_resume_bitwise_at_non_block_aligned_round(tmp_path):
     assert hist_b.loss == hist_a.loss[-len(hist_b.loss):]
     assert len(hist_b.loss) == 4
     # the faults were live across the kill point
-    assert sum(hist_a.extra["guard_evicted"]) >= 1
+    assert sum(hist_a.extra["guard/evicted"]) >= 1
 
 
 def test_resume_state_empty_dir_is_fresh_start(tmp_path):

@@ -71,7 +71,7 @@ def test_crash_hazard_monotone_and_never_empty():
         alive = np.asarray(st.alive)
         assert (alive <= prev).all(), "crashes must be permanent"
         assert alive.any(), "the last worker is never hazard-crashed"
-        assert float(m["fault_alive"]) == alive.sum()
+        assert float(m["fault/alive"]) == alive.sum()
         prev = alive
 
 
@@ -187,9 +187,9 @@ def test_guarded_healthy_bitwise_unguarded():
     assert bool(g.healthy)
     np.testing.assert_array_equal(np.asarray(g.Theta), np.asarray(T0))
     np.testing.assert_array_equal(np.asarray(g.inv_alpha), np.asarray(ia0))
-    assert float(g.metrics["guard_retries"]) == 0.0
-    assert float(g.metrics["guard_ok_first"]) == 1.0
-    assert float(g.metrics["guard_evicted"]) == 0.0
+    assert float(g.metrics["guard/retries"]) == 0.0
+    assert float(g.metrics["guard/ok_first"]) == 1.0
+    assert float(g.metrics["guard/evicted"]) == 0.0
 
 
 def test_guard_evicts_nonfinite_worker():
@@ -225,7 +225,7 @@ def test_guard_skip_flags_unhealthy():
         t, l, hh, KEY, RHO, ccfg, GuardConfig(policy="skip"),
         backend="jnp"))(theta, lam, h)
     assert not bool(g.healthy)  # caller reuses previous Theta, freezes duals
-    assert float(g.metrics["guard_ok_first"]) == 0.0
+    assert float(g.metrics["guard/ok_first"]) == 0.0
 
 
 def test_guard_retransmit_clears_burst():
@@ -238,10 +238,10 @@ def test_guard_retransmit_clears_burst():
     g = jax.jit(lambda t, l, hh: guarded_ota_round(
         t, l, hh, KEY, RHO, ccfg, gcfg, backend="jnp",
         burst_std=jnp.float32(5.0)))(theta, lam, h)
-    assert float(g.metrics["guard_ok_first"]) == 0.0  # burst tripped floor
-    assert float(g.metrics["guard_retries"]) >= 1.0
+    assert float(g.metrics["guard/ok_first"]) == 0.0  # burst tripped floor
+    assert float(g.metrics["guard/retries"]) >= 1.0
     assert bool(g.healthy)                            # retry recovered
-    assert float(g.metrics["guard_snr_db"]) >= 0.0
+    assert float(g.metrics["guard/snr_db"]) >= 0.0
     assert np.isfinite(np.asarray(g.Theta)).all()
 
 
@@ -257,7 +257,7 @@ def test_guard_exhausted_retries_reports_unhealthy():
     g = jax.jit(lambda t, l, hh: guarded_ota_round(
         t, l, hh, KEY, RHO, ccfg, gcfg, backend="jnp"))(theta, lam, h)
     assert not bool(g.healthy)
-    assert float(g.metrics["guard_retries"]) == 2.0
+    assert float(g.metrics["guard/retries"]) == 2.0
 
 
 def test_zero_burst_is_bitwise_noop():
@@ -302,7 +302,7 @@ def test_flat_afadmm_faulted_scan_equals_loop():
         st_l, _ = rnd(jax.random.fold_in(KEY, r + 1), st_l)
     for a, b in zip(jax.tree.leaves(st_s), jax.tree.leaves(st_l)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-    assert ms["guard_healthy"].shape == (12,)
+    assert ms["guard/healthy"].shape == (12,)
 
 
 def test_flat_afadmm_faulted_run_accounting():
@@ -405,6 +405,6 @@ def test_chaos_convergence_within_10pct():
     assert np.isfinite(f1), "faulted run must stay finite"
     assert f1 <= 1.10 * f0 + 1e-8, (f0, f1)
     # the injected faults actually exercised the machinery
-    assert sum(h1.extra["guard_retries"]) > 0, "no retransmission fired"
-    assert sum(h1.extra["guard_evicted"]) >= 1, "NaN worker not evicted"
-    assert h1.extra["fault_alive"][-1] == 5.0  # 8 - 2 crashed - 1 evicted
+    assert sum(h1.extra["guard/retries"]) > 0, "no retransmission fired"
+    assert sum(h1.extra["guard/evicted"]) >= 1, "NaN worker not evicted"
+    assert h1.extra["fault/alive"][-1] == 5.0  # 8 - 2 crashed - 1 evicted
