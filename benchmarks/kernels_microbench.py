@@ -865,6 +865,123 @@ def phy_microbench() -> dict:
     }
 
 
+def scaleup_microbench() -> dict:
+    """ISSUE 10 contract: at N = 65536 the fused population phy step
+    (``phy.population.population_step``, one jit) beats the pre-fusion
+    hot path — the same ``correlated_step`` → ``waypoint_shadow_step`` →
+    ``worker_gains`` chain issued as per-function eager jnp calls, one
+    XLA dispatch per op, which is exactly how ``Scenario.step`` evolved
+    the population before this module existed.  On the jnp backend the
+    fused step IS that chain, so parity is bitwise.  Plus the structural
+    pin behind it: a freq-flat mobile ``Scenario.step`` on the pallas
+    backend is exactly ONE kernel launch for the whole phy (fading +
+    mobility + shadowing + path gain)."""
+    from repro.core.channel import ChannelConfig, rayleigh
+    from repro.phy import (GeometryConfig, make_scenario, population_step)
+    from repro.phy import fading as _fading
+    from repro.phy import geometry as _geo
+
+    n = 65536
+    rho, coh = 0.95, 4
+    key = jax.random.PRNGKey(0)
+    gcfg = GeometryConfig(speed_mps=15.0, shadowing_sigma_db=6.0,
+                          slot_seconds=1.0)
+    kh, kp, ks, kf, kg = jax.random.split(key, 5)
+    h = rayleigh(kh, (n, 1))
+    pos, dest = _geo.init_positions(kp, n, gcfg)
+    shadow = _geo.shadowing(ks, n, gcfg)
+    age = jnp.zeros((), jnp.int32)
+
+    fused = jax.jit(lambda h, age, pos, dest, shadow: population_step(
+        kf, kg, h, age, pos, dest, shadow, gcfg, rho=rho,
+        coherence_iters=coh, backend="jnp"))
+
+    def composed():
+        # deliberately NOT jitted: per-function eager dispatch is the
+        # baseline the fused step replaces (op-by-op XLA executions)
+        h2, age2, _ = _fading.correlated_step(kf, h, age, rho, coh,
+                                              backend="jnp")
+        p2, d2, s2 = _geo.waypoint_shadow_step(kg, pos, dest, shadow, gcfg)
+        g = _geo.worker_gains(p2, s2, gcfg)
+        jax.block_until_ready((h2, p2, g))
+        return h2, age2, p2, d2, s2, g
+
+    def composed_jit():
+        # parity oracle: same chain under jit, so both sides see identical
+        # XLA fusion/FMA decisions (eager vs jit can differ by an ulp,
+        # enough to flip an `arrived` threshold and redraw a waypoint)
+        h2, age2, _ = jax.jit(
+            lambda h, age: _fading.correlated_step(
+                kf, h, age, rho, coh, backend="jnp"))(h, age)
+        p2, d2, s2 = jax.jit(
+            lambda pos, dest, shadow: _geo.waypoint_shadow_step(
+                kg, pos, dest, shadow, gcfg))(pos, dest, shadow)
+        g = jax.jit(lambda pos, shadow: _geo.worker_gains(
+            pos, shadow, gcfg))(p2, s2)
+        jax.block_until_ready((h2, p2, g))
+        return h2, age2, p2, d2, s2, g
+
+    got = jax.block_until_ready(fused(h, age, pos, dest, shadow))
+    want = composed_jit()
+    parity = max(
+        float(jnp.max(jnp.abs(got[0].re - want[0].re))),
+        float(jnp.max(jnp.abs(got[0].im - want[0].im))),
+        float(jnp.max(jnp.abs(got[2] - want[2]))),
+        float(jnp.max(jnp.abs(got[4] - want[4]))),
+        float(jnp.max(jnp.abs(got[5] - want[5]))))
+
+    fused_us = _time(lambda: jax.block_until_ready(
+        fused(h, age, pos, dest, shadow)))
+    comp_us = _time(composed)
+
+    # structural pin (trace only, backend-independent): the whole phy step
+    # of a freq-flat mobile scenario is ONE pallas launch
+    ccfg = ChannelConfig(n_workers=256)
+    scn = make_scenario("urban-mobility", ccfg, freq_flat=True,
+                        backend="pallas")
+    st = scn.init(key, 256, 32)
+    dispatches = _count_pallas_dispatches(lambda s, k: scn.step(k, s),
+                                          st, key)
+    return {
+        "shape": {"N": n, "rho": rho, "coherence_iters": coh},
+        "fused_population_step_us": fused_us,
+        "composed_eager_chain_us": comp_us,
+        "speedup_fused_over_composed": comp_us / fused_us,
+        "parity_max_abs_err_jnp": parity,       # bitwise: fused IS the chain
+        "scenario_step_pallas_dispatches": dispatches,
+        "optimised_metric": "speedup_fused_over_composed",
+    }
+
+
+def device_microbench() -> dict:
+    """Opt-in real-accelerator lane (closes ROADMAP item 1's leftover):
+    ``REPRO_BENCH_DEVICE=gpu|tpu`` runs the pallas population step and the
+    fused OTA round autotuners on the actual device; unset — or a platform
+    mismatch (the usual CPU CI) — returns a clean skip marker instead of
+    interpreting pallas kernels for hours."""
+    import os
+    want = os.environ.get("REPRO_BENCH_DEVICE", "").lower()
+    plat = jax.default_backend()
+    if not want:
+        return {"skipped": True, "platform": plat,
+                "reason": "REPRO_BENCH_DEVICE unset (opt-in lane)"}
+    if plat != want:
+        return {"skipped": True, "platform": plat,
+                "reason": f"REPRO_BENCH_DEVICE={want} but jax platform "
+                          f"is {plat}"}
+    from repro.core.transport import autotune_ota_round
+    from repro.phy import autotune_population_step
+    pop = autotune_population_step(1 << 20, backend="pallas")
+    rnd = autotune_ota_round(256, 1 << 16, backend="pallas")
+    return {
+        "skipped": False,
+        "platform": plat,
+        "population_step_1M": pop,
+        "ota_round_256x65536": rnd,
+        "optimised_metric": "population_step_1M.best.us",
+    }
+
+
 # ---------------------------------------------------------------------------
 # flash attention forward + backward (custom_vjp) dispatch counts
 # ---------------------------------------------------------------------------
@@ -1009,6 +1126,20 @@ def main() -> None:
                          "MetricsSink JSONL schema smoke (CI smoke)")
     ap.add_argument("--out-obs", default="BENCH_obs.json",
                     help="where --obs writes its JSON")
+    ap.add_argument("--scaleup", action="store_true",
+                    help="population-scale phy section only: fused "
+                         "one-dispatch population step vs the composed "
+                         "3-jit chain at N=65536 (>=1.0x gated in CI) + "
+                         "the 1-launch freq-flat Scenario.step pin")
+    ap.add_argument("--out-scaleup", default="BENCH_scaleup_micro.json",
+                    help="where --scaleup writes its JSON")
+    ap.add_argument("--device-bench", action="store_true",
+                    help="opt-in real-accelerator lane: honours "
+                         "REPRO_BENCH_DEVICE=gpu|tpu, self-skips cleanly "
+                         "on CPU / unset (no file written when skipped)")
+    ap.add_argument("--out-device-bench", default="BENCH_device.json",
+                    help="where --device-bench writes its JSON (skipped "
+                         "runs print the skip marker and write nothing)")
     args = ap.parse_args()
     if args.shard_local or args.sketched:
         # must happen before jax's first backend init (the import above is
@@ -1021,7 +1152,8 @@ def main() -> None:
     derived = {}
     if not (args.packed_only or args.attn_bwd or args.phy
             or args.shard_local or args.fused_round or args.faults
-            or args.sketched or args.obs):
+            or args.sketched or args.obs or args.scaleup
+            or args.device_bench):
         derived = {"kernels": microbench(),
                    "transport": transport_microbench()}
     out = dict(derived)
@@ -1043,6 +1175,10 @@ def main() -> None:
         out["sketched"] = sketched_microbench()
     if args.obs:
         out["obs"] = obs_microbench()
+    if args.scaleup:
+        out["scaleup"] = scaleup_microbench()
+    if args.device_bench:
+        out["device"] = device_microbench()
     text = json.dumps(out, indent=2, default=str)
     print(text)
     if args.out and derived:
@@ -1075,6 +1211,12 @@ def main() -> None:
     if args.obs:
         with open(args.out_obs, "w") as f:
             f.write(json.dumps(out["obs"], indent=2, default=str) + "\n")
+    if args.scaleup:
+        with open(args.out_scaleup, "w") as f:
+            f.write(json.dumps(out["scaleup"], indent=2, default=str) + "\n")
+    if args.device_bench and not out["device"].get("skipped"):
+        with open(args.out_device_bench, "w") as f:
+            f.write(json.dumps(out["device"], indent=2, default=str) + "\n")
 
 
 if __name__ == "__main__":

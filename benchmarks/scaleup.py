@@ -1,0 +1,232 @@
+"""Log-scale worker sweep: how far does one OTA round scale?
+
+Full-transmit rounds at W ∈ {16, 256, 4096, 65536} plus a
+1M-population / 256-cohort sampled round (``core.cohort``), all running
+the SAME flat A-FADMM round over the freq-flat ``urban-mobility``
+scenario — so the fused population phy step (``phy.population``) and the
+packed transport are what is actually being scaled.  Per sweep point:
+
+* ``seconds_per_round``   wall-clock, median of ``--iters`` jitted rounds
+* ``rx_snr_db``           in-graph receive SNR (``obs/`` telemetry)
+* ``consensus_gap_*``     RMS ‖θ_n − Θ‖ before/after ``--rounds`` rounds
+
+plus the structural pin behind the 1M point: a jaxpr walk of the sampled
+round proving no COMPUTE intermediate reaches O(N·D) — population-width
+buffers may only appear as carried state, phy planes (O(N)), and
+gather/scatter row traffic, so peak signal memory is O(cohort·D)
+regardless of N.
+
+    PYTHONPATH=src python benchmarks/scaleup.py [--fast] \
+        [--out BENCH_scaleup.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import AdmmConfig, ChannelConfig, SubcarrierPlan, cplx
+from repro.core import transport as _transport
+from repro.core.aggregators import AFadmm
+from repro.core.cohort import CohortConfig
+from repro.phy import make_scenario
+
+D = 32          #: model dim — small on purpose: the sweep scales WORKERS
+N_SUB = 32
+RHO = 0.5
+SNR_DB = 20.0
+
+#: (population, cohort) sweep; cohort == population -> everyone transmits
+SWEEP = ((16, 16), (256, 256), (4096, 4096), (65536, 65536),
+         (1_000_000, 256))
+SWEEP_FAST = ((16, 16), (64, 64), (256, 32))
+
+#: buffer-restructuring primitives — moving existing bytes, not creating
+#: live compute intermediates (same convention as tests/test_fused_round);
+#: gather/scatter are the cohort row traffic, scatter also the population
+#: state writeback
+_LAYOUT_PRIMS = {
+    "reshape", "transpose", "broadcast_in_dim", "convert_element_type",
+    "squeeze", "slice", "concatenate", "pad", "copy", "dynamic_slice",
+    "dynamic_update_slice", "gather", "scatter", "scatter-add",
+}
+
+
+def proximal_solver(rho: float):
+    """Closed-form primal for the proximal-point objective
+    f_n(θ) = ‖θ − θ_n^prev‖²: a data-free consensus task whose solver is
+    width-agnostic (works at population AND gathered-cohort width).
+
+    Stationarity: 2(θ − θ_prev) + Re{λ*h} + ρ|h|²(θ − Θ) = 0."""
+    def solve(theta, lam, h, Theta):
+        h2 = cplx.abs2(h)
+        mu = cplx.cmul_conj(h, lam).re
+        return (2.0 * theta - mu + rho * h2 * Theta[None, :]) \
+            / (2.0 + rho * h2)
+    return solve
+
+
+def _zero_grad(theta):
+    return jnp.zeros_like(theta)
+
+
+def make_alg(population: int, cohort: int):
+    acfg = AdmmConfig(rho=RHO, flip_on_change=False, power_control=True)
+    ccfg = ChannelConfig(n_workers=population, n_subcarriers=N_SUB,
+                         snr_db=SNR_DB)
+    plan = SubcarrierPlan.build(D, N_SUB)
+    scn = make_scenario("urban-mobility", ccfg, freq_flat=True)
+    coh = CohortConfig(population=population, cohort=cohort) \
+        if cohort < population else None
+    return AFadmm(acfg, ccfg, plan, scenario=scn, telemetry=True,
+                  cohort=coh)
+
+
+def max_compute_out_elems(fn, *args) -> int:
+    """Largest output aval (elements) of any non-layout equation in
+    ``fn``'s jaxpr, recursing into scan/cond/pjit bodies.  Pure trace —
+    nothing executes, so it is safe at N = 10⁶ and beyond."""
+    from jax.extend import core as jcore
+    worst = 0
+
+    def walk(j):
+        nonlocal worst
+        for eqn in j.eqns:
+            for v in eqn.params.values():
+                if isinstance(v, jcore.ClosedJaxpr):
+                    walk(v.jaxpr)
+                elif isinstance(v, jcore.Jaxpr):
+                    walk(v)
+            if eqn.primitive.name in _LAYOUT_PRIMS or any(
+                    isinstance(v, (jcore.ClosedJaxpr, jcore.Jaxpr))
+                    for v in eqn.params.values()):
+                continue
+            for ov in eqn.outvars:
+                worst = max(worst, ov.aval.size)
+
+    walk(jax.make_jaxpr(fn)(*args).jaxpr)
+    return worst
+
+
+def run_point(population: int, cohort: int, rounds: int, iters: int,
+              seed: int = 0) -> dict:
+    alg = make_alg(population, cohort)
+    solve = proximal_solver(RHO)
+    key = jax.random.PRNGKey(seed)
+    theta0 = jax.random.normal(jax.random.fold_in(key, 1),
+                               (population, D), jnp.float32)
+    st = alg.init(key, theta0)
+
+    gap = lambda s: float(jnp.sqrt(jnp.mean(
+        (s.theta - s.Theta[None, :]) ** 2)))
+    gap0 = gap(st)
+
+    round_fn = jax.jit(
+        lambda s, k: alg.round(k, s, solve, _zero_grad))
+    st1, metrics = jax.tree.map(jax.block_until_ready, round_fn(st, key))
+
+    ts = []
+    for i in range(iters):
+        k = jax.random.fold_in(key, 100 + i)
+        t0 = time.perf_counter()
+        jax.block_until_ready(round_fn(st1, k)[0])
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+
+    stN, _ = alg.scan_rounds(key, st, solve, _zero_grad, rounds)
+    stN = jax.block_until_ready(stN)
+
+    return {
+        "workers": int(cohort),
+        "population": int(population),
+        "cohort": int(cohort),
+        "sampled": cohort < population,
+        "rounds": int(rounds),
+        "seconds_per_round": ts[len(ts) // 2],
+        "rx_snr_db": float(metrics["obs/rx_snr_db"]),
+        "consensus_gap_first": gap0,
+        "consensus_gap_last": gap(stN),
+        "optimised_metric": "seconds_per_round",
+    }
+
+
+def memory_pin(population: int, cohort: int) -> dict:
+    """Structural O(cohort·D) claim on the SAMPLED round at full N."""
+    alg = make_alg(population, cohort)
+    solve = proximal_solver(RHO)
+    key = jax.random.PRNGKey(0)
+    st = jax.eval_shape(
+        lambda k: alg.init(k, jnp.zeros((population, D), jnp.float32)), key)
+    st = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype)
+        if hasattr(s, "shape") else s, st)
+    worst = max_compute_out_elems(
+        lambda s, k: alg.round(k, s, solve, _zero_grad)[0], st, key)
+    # allowed: O(cohort·D) signal planes plus O(N) phy/mask/dual-index
+    # planes; an (N, D)-sized compute intermediate (= the thing cohort
+    # sampling exists to avoid) would need population*D elements
+    bound = max(16 * cohort * D, 8 * population)
+    return {
+        "population": int(population),
+        "cohort": int(cohort),
+        "d": D,
+        "max_compute_out_elems": int(worst),
+        "bound_elems": int(bound),
+        "n_times_d_elems": int(population * D),
+        "ok": bool(worst <= bound and worst < population * D),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_scaleup.json")
+    ap.add_argument("--rounds", type=int, default=12,
+                    help="convergence rounds per sweep point")
+    ap.add_argument("--iters", type=int, default=5,
+                    help="timed round repetitions (median reported)")
+    ap.add_argument("--fast", action="store_true",
+                    help="tiny sweep for CI/smoke (shape-identical JSON)")
+    args = ap.parse_args(argv)
+
+    sweep_pts = SWEEP_FAST if args.fast else SWEEP
+    sweep = {}
+    for population, cohort in sweep_pts:
+        name = f"W{cohort}" if cohort == population \
+            else f"N{population}_c{cohort}"
+        t0 = time.time()
+        sweep[name] = run_point(population, cohort, args.rounds, args.iters)
+        print(f"{name}: {sweep[name]['seconds_per_round'] * 1e3:.2f} "
+              f"ms/round  rx_snr={sweep[name]['rx_snr_db']:.1f} dB  "
+              f"gap {sweep[name]['consensus_gap_first']:.3f} -> "
+              f"{sweep[name]['consensus_gap_last']:.3f}  "
+              f"({time.time() - t0:.1f}s)", flush=True)
+
+    pin_pop, pin_coh = sweep_pts[-1] if args.fast else SWEEP[-1]
+    pin = memory_pin(pin_pop, pin_coh)
+    print(f"memory pin: worst compute out {pin['max_compute_out_elems']} "
+          f"elems <= bound {pin['bound_elems']} "
+          f"(N*D = {pin['n_times_d_elems']}): "
+          f"{'OK' if pin['ok'] else 'VIOLATED'}", flush=True)
+
+    out = {
+        "config": {"d": D, "n_subcarriers": N_SUB, "rho": RHO,
+                   "snr_db": SNR_DB, "scenario": "urban-mobility/freq-flat",
+                   "transport_backend": _transport.resolve_backend(None),
+                   "device_backend": jax.default_backend(),
+                   "rounds": args.rounds, "iters": args.iters,
+                   "fast": bool(args.fast)},
+        "sweep": sweep,
+        "memory_pin": pin,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out}")
+    return 0 if pin["ok"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

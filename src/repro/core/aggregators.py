@@ -30,14 +30,14 @@ from typing import Any, Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import admm, cplx, subcarrier
+from repro.core import admm, cohort as _cohort, cplx, subcarrier
 from repro.core.admm import AdmmConfig, AFadmmState
 from repro.core.channel import (ChannelBlock, ChannelConfig, init_channel,
                                 matched_filter_noise, shannon_rate,
                                 step_channel)
 from repro.core.cplx import Complex
 from repro.core.subcarrier import SubcarrierPlan
-from repro.obs import merge_disjoint
+from repro.obs import merge_disjoint, resolve as resolve_telemetry
 
 Array = jax.Array
 LocalSolve = Callable[[Array, Complex, Complex, Array], Array]
@@ -123,6 +123,13 @@ class AFadmm(ScanRounds):
     #: optional ``repro.obs.TelemetryConfig`` (or True) — in-graph ``obs/``
     #: channel telemetry.  None keeps the round bit-for-bit.
     telemetry: Optional[Any] = None
+    #: optional ``repro.core.cohort.CohortConfig`` — per-round cohort
+    #: sampling from an N-worker population: ``theta0``/duals/phy state are
+    #: population-width, but each round only the sampled cohort's rows run
+    #: the uplink; non-sampled duals/θ stay frozen.  ``cohort == population``
+    #: (or None) is bitwise the unsampled round — the cohort key is a
+    #: ``fold_in`` side-branch (``COHORT_SALT``), never a ``split``.
+    cohort: Optional[Any] = None
 
     name = "afadmm"
 
@@ -173,11 +180,16 @@ class AFadmm(ScanRounds):
             st = st._replace(flt=st_mid)
             mask = rf.alive if mask is None else mask & rf.alive
             faults = (self.faults, rf, st.flt.stale)
-        st, metrics = admm.afadmm_round(
-            st, blk_next, local_solve, grad_fn, self.acfg, self.ccfg, kn,
-            reduce_fn=self.reduce_fn, min_reduce_fn=self.min_reduce_fn,
-            backend=self.backend, mask=mask, h_tx=h_tx,
-            guard=self.guard, faults=faults, telemetry=self.telemetry)
+        if _cohort.cohort_active(self.cohort):
+            st, metrics = self._cohort_round(
+                key, st, blk_next, local_solve, grad_fn, kn, mask, h_tx,
+                faults)
+        else:
+            st, metrics = admm.afadmm_round(
+                st, blk_next, local_solve, grad_fn, self.acfg, self.ccfg, kn,
+                reduce_fn=self.reduce_fn, min_reduce_fn=self.min_reduce_fn,
+                backend=self.backend, mask=mask, h_tx=h_tx,
+                guard=self.guard, faults=faults, telemetry=self.telemetry)
         if self.faults is not None:
             from repro import faults as _faults
             aux = metrics.pop("_fault_aux", {})
@@ -186,6 +198,61 @@ class AFadmm(ScanRounds):
         metrics = merge_disjoint(metrics, fmetrics, who="AFadmm.round")
         metrics["channel_uses"] = jnp.asarray(
             float(subcarrier.analog_channel_uses(self.plan)))
+        return st, metrics
+
+    def _cohort_round(self, key: Array, st: AFadmmState, blk_next,
+                      local_solve, grad_fn, kn, mask, h_tx, faults
+                      ) -> Tuple[AFadmmState, dict]:
+        """Sampled round: gather the cohort's rows out of the population
+        state, run the ordinary :func:`admm.afadmm_round` at cohort width,
+        scatter θ/λ (and fault aux) back.  Non-sampled workers keep their
+        pre-round θ and λ — exactly the frozen-dual semantics a
+        participation-masked worker gets."""
+        n_pop = st.theta.shape[0]
+        # the uniform policy never reads the weight — skip the (N, D)
+        # |h|² pass entirely so the sampled round's compute stays
+        # O(cohort·D) + O(N) (the scaleup bench pins this structurally)
+        wgt = _cohort.channel_weight(blk_next.h) \
+            if self.cohort.policy != "uniform" else None
+        idx = _cohort.sample_cohort(key, self.cohort, weight=wgt)
+        blk_sub = ChannelBlock(
+            h=_cohort.take_rows(blk_next.h, idx),
+            h_prev=_cohort.take_rows(blk_next.h_prev, idx),
+            changed=_cohort.take_rows(blk_next.changed, idx),
+            age=blk_next.age)
+        faults_sub = None
+        if faults is not None:
+            fplan, rf, stale = faults
+            rf = rf._replace(
+                alive=_cohort.take_rows(rf.alive, idx),
+                straggler=_cohort.take_rows(rf.straggler, idx),
+                corrupt=_cohort.take_rows(rf.corrupt, idx),
+                snapshot_due=_cohort.take_rows(rf.snapshot_due, idx))
+            faults_sub = (fplan, rf, _cohort.take_rows(stale, idx))
+        sub = AFadmmState(theta=st.theta[idx],
+                          lam=_cohort.take_rows(st.lam, idx),
+                          Theta=st.Theta, blk=blk_sub, step=st.step)
+        st2, metrics = admm.afadmm_round(
+            sub, blk_sub, local_solve, grad_fn, self.acfg, self.ccfg, kn,
+            reduce_fn=self.reduce_fn, min_reduce_fn=self.min_reduce_fn,
+            backend=self.backend, mask=_cohort.take_rows(mask, idx),
+            h_tx=_cohort.take_rows(h_tx, idx),
+            guard=self.guard, faults=faults_sub, telemetry=self.telemetry)
+        aux = metrics.pop("_fault_aux", None)
+        if aux is not None:
+            if aux.get("stale") is not None:
+                aux["stale"] = st.flt.stale.at[idx].set(aux["stale"])
+            if aux.get("evicted") is not None:
+                aux["evicted"] = jnp.zeros((n_pop,), bool).at[idx].set(
+                    aux["evicted"])
+            metrics["_fault_aux"] = aux
+        if resolve_telemetry(self.telemetry) is not None:
+            metrics = merge_disjoint(metrics, _cohort.cohort_metrics(
+                self.cohort), who="AFadmm._cohort_round")
+        st = AFadmmState(theta=st.theta.at[idx].set(st2.theta),
+                         lam=_cohort.put_rows(st.lam, idx, st2.lam),
+                         Theta=st2.Theta, blk=blk_next, step=st2.step,
+                         phys=st.phys, flt=st.flt)
         return st, metrics
 
     def global_model(self, st: AFadmmState) -> Array:

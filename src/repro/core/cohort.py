@@ -1,0 +1,144 @@
+"""Per-round cohort sampling from an N-worker population (ROADMAP item 2).
+
+The population/cohort split is the paper's scalability story made concrete:
+the phy scenario evolves wireless state for ALL N workers
+(``phy.population``), but each round only a W-worker *cohort* transmits —
+its ``(θ, λ, h)`` rows are gathered into the existing packed ``(W, D)``
+buffers, the fused one-pass receive runs at cohort width (the streamed
+``worker_chunk`` path unchanged), and dual updates scatter back with
+non-sampled duals frozen.  A sampled-but-deep-faded worker still composes
+with scenarios, faults, and guards through the ordinary participation
+mask.
+
+Policies (arXiv 2104.03490 motivates channel-aware scheduling):
+
+* ``uniform``  — W indices uniform without replacement (classic FL client
+  sampling).
+* ``top-gain`` — the W strongest channels by mean |h|² (deterministic
+  opportunistic scheduling; starves weak workers, maximises receive SNR).
+* ``prop-h2``  — W indices without replacement with probability ∝ mean
+  |h|², via the Gumbel-top-k trick (stochastic middle ground).
+
+PRNG discipline: :func:`sample_cohort` folds :data:`COHORT_SALT` into the
+round key (a side branch, exactly the ``faults.FAULT_SALT`` pattern), so
+enabling sampling consumes no draw from the base schedule — the base
+round stays bitwise reproducible, and checkpoint/resume re-derives the
+cohort from the global round index alone, with zero extra state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cplx
+from repro.core.cplx import Complex
+
+Array = jax.Array
+
+#: ``fold_in`` salt for the per-round cohort draw (PRNG side branch).
+COHORT_SALT = 0xC0407
+
+POLICIES = ("uniform", "top-gain", "prop-h2")
+
+
+@dataclasses.dataclass(frozen=True)
+class CohortConfig:
+    """Which W of the N population transmit each round.
+
+    ``cohort == population`` is the identity: no sampling is traced at all
+    (no PRNG consumed, no gather compiled), so the round is BITWISE the
+    ordinary packed round — pinned in ``tests/test_cohort.py``.
+    """
+
+    #: total workers that EXIST (phy state / dual buffers are this wide)
+    population: int
+    #: workers SAMPLED per round (packed uplink buffers are this wide)
+    cohort: int
+    #: sampling policy — one of :data:`POLICIES`
+    policy: str = "uniform"
+
+    def __post_init__(self):
+        if not 0 < self.cohort <= self.population:
+            raise ValueError(
+                f"need 0 < cohort <= population, got cohort={self.cohort} "
+                f"population={self.population}")
+        if self.policy not in POLICIES:
+            raise ValueError(
+                f"unknown cohort policy {self.policy!r}; want one of "
+                f"{POLICIES}")
+
+
+def cohort_active(cfg: Optional[CohortConfig]) -> bool:
+    """True when sampling actually subsets the population (static gate:
+    ``cohort == population`` compiles to the unsampled round)."""
+    return cfg is not None and int(cfg.cohort) < int(cfg.population)
+
+
+def channel_weight(h: Complex) -> Array:
+    """Per-worker scheduling weight: mean |h|² over the packed dim, (N,).
+
+    The quantity the channel-aware policies rank by — for frequency-flat
+    channels this is exactly the per-worker power gain |h_n|²."""
+    a2 = cplx.abs2(h)
+    return jnp.mean(a2.reshape(a2.shape[0], -1), axis=-1)
+
+
+def sample_cohort(key: Array, cfg: CohortConfig,
+                  weight: Optional[Array] = None) -> Array:
+    """Draw the round's cohort: (W,) int32 indices into the N population.
+
+    ``key`` is the ROUND key — the cohort draw branches off it via
+    :data:`COHORT_SALT` internally, so callers pass the same key they
+    already hold and the base schedule stays untouched.  ``weight`` is the
+    (N,) channel weight (:func:`channel_weight`) — required by the
+    channel-aware policies, ignored by ``uniform``.
+    """
+    k = jax.random.fold_in(key, COHORT_SALT)
+    n, w = int(cfg.population), int(cfg.cohort)
+    if cfg.policy == "uniform":
+        return jax.random.permutation(k, n)[:w].astype(jnp.int32)
+    if weight is None:
+        raise ValueError(
+            f"cohort policy {cfg.policy!r} needs the (N,) channel weight")
+    wt = jnp.asarray(weight, jnp.float32)
+    if cfg.policy == "top-gain":
+        return jax.lax.top_k(wt, w)[1].astype(jnp.int32)
+    # prop-h2: Gumbel-top-k == sampling w indices WITHOUT replacement with
+    # inclusion probability ∝ weight (log-weights + Gumbel noise, top-k)
+    g = jax.random.gumbel(k, (n,), jnp.float32)
+    return jax.lax.top_k(jnp.log(jnp.maximum(wt, 1e-30)) + g,
+                         w)[1].astype(jnp.int32)
+
+
+def take_rows(x, idx: Array):
+    """Gather worker rows from a (N, ...) array / Complex / None.
+    0-d values (scalar fault flags, burst std) pass through untouched."""
+    if x is None:
+        return None
+    if isinstance(x, Complex):
+        return Complex(x.re[idx], x.im[idx])
+    x = jnp.asarray(x)
+    return x if x.ndim == 0 else x[idx]
+
+
+def put_rows(full, idx: Array, rows):
+    """Scatter cohort rows back into the (N, ...) buffer (non-sampled rows
+    keep their previous values — the frozen-dual semantics)."""
+    if full is None:
+        return None
+    if isinstance(full, Complex):
+        return Complex(full.re.at[idx].set(rows.re),
+                       full.im.at[idx].set(rows.im))
+    return full.at[idx].set(rows)
+
+
+def cohort_metrics(cfg: CohortConfig) -> dict:
+    """The ``obs/`` keys a sampled round contributes (static per config)."""
+    return {
+        "obs/cohort_size": jnp.asarray(float(cfg.cohort), jnp.float32),
+        "obs/population_sampled_frac": jnp.asarray(
+            float(cfg.cohort) / float(cfg.population), jnp.float32),
+    }

@@ -733,3 +733,43 @@ def _round_timing_fn(rho, ccfg, worker_chunk, block_cols, backend):
                                worker_chunk=worker_chunk,
                                block_cols=block_cols, backend=backend)[0]
     return fn
+
+
+def autotune_ota_round_cached(W: int, d: int,
+                              ccfg: Optional[ChannelConfig] = None, *,
+                              cache_path: str, backend: Optional[str] = None,
+                              **kw) -> dict:
+    """:func:`autotune_ota_round` behind a JSON file cache.
+
+    Results key on ``"{W}x{d}:{backend}"`` — one sweep per problem shape
+    per machine, then every later launch (``launch/train.py
+    --autotune-cache``) reads the winning tiling instead of re-measuring.
+    The write is atomic (tmp + rename) so concurrent launchers can share
+    one cache file; a corrupt/unreadable cache is treated as empty, never
+    fatal.  The returned dict is the autotune result plus ``"cached":
+    True`` on a hit.
+    """
+    import json
+    import os
+
+    bk = resolve_backend(backend)
+    cache_key = f"{int(W)}x{int(d)}:{bk}"
+    cache = {}
+    if os.path.exists(cache_path):
+        try:
+            with open(cache_path) as f:
+                cache = json.load(f)
+            if not isinstance(cache, dict):
+                cache = {}
+        except (OSError, ValueError):
+            cache = {}
+    if cache_key in cache:
+        return dict(cache[cache_key], cached=True)
+    res = autotune_ota_round(W, d, ccfg, backend=backend, **kw)
+    cache[cache_key] = res
+    tmp = f"{cache_path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(cache, f, indent=2, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, cache_path)
+    return dict(res, cached=False)

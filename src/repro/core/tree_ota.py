@@ -177,6 +177,7 @@ def ota_tree_round_packed_state(theta: PyTree, lam_p: Complex, h_p: Complex,
                                 guard=None,
                                 faults=None,
                                 telemetry=None,
+                                cohort_idx: Optional[Array] = None,
                                 ) -> Tuple[PyTree, Complex, dict]:
     """One OTA round where the duals/fading are ALREADY packed ``(W, D)``.
 
@@ -213,9 +214,36 @@ def ota_tree_round_packed_state(theta: PyTree, lam_p: Complex, h_p: Complex,
     dual (the PR 4 all-masked machinery); evicted offenders get their dual
     zeroed.  Aux state the caller must thread back (refreshed stale buffer,
     evicted rows) rides in ``metrics["_fault_aux"]``.
+
+    Cohort sampling (``repro.core.cohort``): with ``cohort_idx`` ((W,)
+    int32 indices into the N-worker population) the caller's θ tree is
+    ALREADY cohort-width, while λ/h (and ``mask``/``h_tx_p``/fault rows)
+    arrive population-width — their cohort rows are gathered here, the
+    whole round runs at cohort width, and the dual update / fault aux
+    scatter back, with every non-sampled worker's dual frozen by
+    construction.  ``cohort_idx=None`` traces the exact pre-cohort round.
     """
     tel = resolve_telemetry(telemetry)
     theta_p = pack(spec, theta)                    # the one layout op per round
+    lam_pop = h_pop = stale_pop = None
+    n_population = lam_p.re.shape[0]
+    if cohort_idx is not None:
+        from repro.core import cohort as _cohort
+        lam_pop, h_pop = lam_p, h_p
+        lam_p = _cohort.take_rows(lam_p, cohort_idx)
+        h_p = _cohort.take_rows(h_p, cohort_idx)
+        h_tx_p = _cohort.take_rows(h_tx_p, cohort_idx)
+        mask = _cohort.take_rows(mask, cohort_idx)
+        if faults is not None:
+            fplan, rf, stale = faults
+            stale_pop = stale
+            rf = rf._replace(
+                alive=_cohort.take_rows(rf.alive, cohort_idx),
+                straggler=_cohort.take_rows(rf.straggler, cohort_idx),
+                corrupt=_cohort.take_rows(rf.corrupt, cohort_idx),
+                snapshot_due=_cohort.take_rows(rf.snapshot_due, cohort_idx))
+            faults = (fplan, rf,
+                      _cohort.take_rows(stale, cohort_idx))
     aux = {}
     burst_std = None
     theta_tx_p = theta_p
@@ -313,6 +341,26 @@ def ota_tree_round_packed_state(theta: PyTree, lam_p: Complex, h_p: Complex,
                  for n, o in zip(jax.tree.leaves(Theta_new),
                                  jax.tree.leaves(Theta_prev)))
         metrics["obs/theta_update_norm"] = jnp.sqrt(sq)
+    if cohort_idx is not None:
+        from repro.core import cohort as _cohort
+        # scatter the cohort's results back over the population buffers:
+        # non-sampled duals keep their previous rows (frozen), fault aux
+        # (stale snapshots, evictions) lands on the sampled rows only
+        lam_new_p = _cohort.put_rows(lam_pop, cohort_idx, lam_new_p)
+        if "stale" in aux and stale_pop is not None:
+            aux["stale"] = stale_pop.at[cohort_idx].set(aux["stale"])
+        if "evicted" in aux:
+            aux["evicted"] = jnp.zeros((n_population,), bool).at[
+                cohort_idx].set(aux["evicted"])
+        if tel is not None:
+            metrics = merge_disjoint(
+                metrics,
+                {"obs/cohort_size": jnp.asarray(
+                    float(cohort_idx.shape[0]), jnp.float32),
+                 "obs/population_sampled_frac": jnp.asarray(
+                     float(cohort_idx.shape[0]) / float(n_population),
+                     jnp.float32)},
+                who="ota_tree_round_packed_state.cohort")
     if aux:
         metrics["_fault_aux"] = aux
     return Theta_new, lam_new_p, metrics

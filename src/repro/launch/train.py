@@ -83,6 +83,23 @@ def main() -> None:
                          "1024, or REPRO_OTA_BLOCK_COLS)")
     ap.add_argument("--rounds", type=int, default=50)
     ap.add_argument("--workers", type=int, default=4)
+    # --- population/cohort sampling (repro.core.cohort) --------------------
+    ap.add_argument("--population", type=int, default=None,
+                    help="worker-population size N: θ/λ/phy/fault state all "
+                         "carry N rows while only --cohort workers uplink "
+                         "per round (supersedes --workers; replicated mode)")
+    ap.add_argument("--cohort", type=int, default=None,
+                    help="workers sampled per round (requires --population; "
+                         "cohort == population disables sampling bitwise)")
+    ap.add_argument("--cohort-policy", default="uniform",
+                    choices=["uniform", "top-gain", "prop-h2"],
+                    help="cohort sampling policy (channel-aware policies "
+                         "rank by mean |h|^2)")
+    ap.add_argument("--autotune-cache", default=None,
+                    help="JSON file caching autotuned OTA round tiles per "
+                         "(W, d, backend); measured once, reused across "
+                         "runs — fills REPRO_OTA_BLOCK_COLS / "
+                         "REPRO_OTA_WORKER_CHUNK unless set explicitly")
     ap.add_argument("--batch", type=int, default=2, help="per-worker batch")
     ap.add_argument("--seq", type=int, default=32)
     ap.add_argument("--local-steps", type=int, default=2)
@@ -161,6 +178,12 @@ def main() -> None:
     model = get_model(args.arch, reduced=args.reduced)
     cfg = model.cfg
     W = args.workers
+    #: rows the batch (and the uplink) carries per round: the cohort width
+    #: under population sampling, else every worker
+    W_round = args.cohort if args.population is not None else W
+    if args.population is not None and args.cohort is None:
+        raise SystemExit("--population requires --cohort (use "
+                         "--cohort == --population to disable sampling)")
 
     mesh = None
     if args.fsdp > 1:
@@ -206,9 +229,11 @@ def main() -> None:
                      ota_worker_chunk=args.ota_worker_chunk,
                      ota_block_cols=args.ota_block_cols,
                      faults=faults, guard=guard,
-                     telemetry=True if telemetry_on else None)
+                     telemetry=True if telemetry_on else None,
+                     population=args.population, cohort=args.cohort,
+                     cohort_policy=args.cohort_policy)
     acfg = AdmmConfig(rho=args.rho, flip_on_change=False)
-    ccfg = ChannelConfig(n_workers=W, snr_db=args.snr_db,
+    ccfg = ChannelConfig(n_workers=args.population or W, snr_db=args.snr_db,
                          coherence_iters=args.coherence)
     init_fn, train_step = make_fl_train(model, flcfg, acfg, ccfg, mesh=mesh)
 
@@ -231,15 +256,38 @@ def main() -> None:
         from repro.obs.profiling import SpanTimer
         timer = SpanTimer()
 
-    # per-worker non-IID token streams (data pipeline)
+    # per-worker non-IID token streams (data pipeline) — cohort-width under
+    # population sampling: stream i feeds the round's i-th sampled worker
     data = token_dataset(jax.random.fold_in(key, 1), n_sequences=64,
                          seq_len=args.seq, vocab_size=cfg.vocab_size,
-                         n_workers=W)
+                         n_workers=W_round)
 
     st = init_fn(key)
     # zeros-initialised leaves may alias one buffer; donation needs them
     # distinct (only matters for the very first execute)
     st = jax.tree.map(jnp.array, st)
+
+    if args.autotune_cache:
+        from repro.core.cplx import Complex as _Cplx
+        if args.mode == "replicated" and isinstance(st.lam, _Cplx):
+            from repro.core.transport import autotune_ota_round_cached
+            res = autotune_ota_round_cached(
+                W_round, st.lam.re.shape[-1], ccfg, backend=args.backend,
+                cache_path=args.autotune_cache)
+            best = res["best"]
+            # knobs are read lazily at trace time, so the envs land before
+            # the first compile; explicit flags win over the autotuner
+            if args.ota_block_cols is None:
+                os.environ["REPRO_OTA_BLOCK_COLS"] = str(best["block_cols"])
+            if args.ota_worker_chunk is None:
+                os.environ["REPRO_OTA_WORKER_CHUNK"] = \
+                    str(best["worker_chunk"])
+            print(f"autotune[{'cache' if res.get('cached') else 'measured'}]"
+                  f": block_cols={best['block_cols']} "
+                  f"worker_chunk={best['worker_chunk']}", flush=True)
+        else:
+            print("autotune: skipped (replicated packed state only)",
+                  flush=True)
 
     r0 = 0
     if args.resume and args.checkpoint_dir:
@@ -266,15 +314,16 @@ def main() -> None:
         return last
 
     def make_batch(data, kb):
-        idx = jax.random.randint(kb, (W, args.batch), 0, data.shape[1])
+        idx = jax.random.randint(kb, (W_round, args.batch), 0, data.shape[1])
         batch = {"tokens": jnp.take_along_axis(
             data, idx[:, :, None], axis=1)}
         if cfg.family == "vlm":
             batch["patches"] = jax.random.normal(
-                kb, (W, args.batch, cfg.frontend_tokens, cfg.frontend_dim))
+                kb, (W_round, args.batch, cfg.frontend_tokens,
+                     cfg.frontend_dim))
         if cfg.family == "audio":
             batch["frames"] = jax.random.normal(
-                kb, (W, args.batch, cfg.frontend_tokens, cfg.d_model))
+                kb, (W_round, args.batch, cfg.frontend_tokens, cfg.d_model))
         return batch
 
     def log(r, metrics):

@@ -59,6 +59,9 @@ present when a ``GuardConfig`` is active):
                          a (W,) VECTOR leaf (sinks store it as a list)
     ``obs/active_workers``  number of workers transmitting this round
     ``obs/theta_update_norm``  l2 norm of the committed Theta update
+    ``obs/cohort_size``  workers sampled this round (population/cohort
+                         sampling active — ``core.cohort``)
+    ``obs/population_sampled_frac``  cohort / population
 
 Keys starting with ``_`` (e.g. ``_fault_aux``) are private plumbing that
 callers pop before metrics reach a sink.

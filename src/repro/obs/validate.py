@@ -74,6 +74,33 @@ def validate_bench(path: str) -> List[str]:
     if n_found == 0:
         errs.append(f"{path}: no 'optimised_metric' anywhere (the bench "
                     "convention: every artefact tags its headline number)")
+    if os.path.basename(path) == "BENCH_scaleup.json":
+        errs.extend(_check_scaleup(path, d))
+    return errs
+
+
+def _check_scaleup(path: str, d: dict) -> List[str]:
+    """Extra shape for the worker-sweep artefact (benchmarks/scaleup.py):
+    every sweep point carries its width + wall-clock + receive SNR, and the
+    O(cohort*D) signal-memory pin must have held when it was generated."""
+    errs = []
+    sweep = d.get("sweep")
+    if not isinstance(sweep, dict) or not sweep:
+        return [f"{path}: BENCH_scaleup needs a non-empty 'sweep' object"]
+    for name, pt in sorted(sweep.items()):
+        if not isinstance(pt, dict):
+            errs.append(f"{path}[sweep.{name}]: sweep point must be an "
+                        "object")
+            continue
+        for fld in ("workers", "population", "seconds_per_round",
+                    "rx_snr_db"):
+            if not _is_num(pt.get(fld)):
+                errs.append(f"{path}[sweep.{name}]: needs numeric "
+                            f"{fld!r}")
+    pin = d.get("memory_pin")
+    if not isinstance(pin, dict) or pin.get("ok") is not True:
+        errs.append(f"{path}: 'memory_pin.ok' must be true — the sweep "
+                    "only counts if peak signal memory stayed O(cohort*D)")
     return errs
 
 

@@ -10,9 +10,12 @@ transport layer.
 from repro.phy.csi import estimate as estimate_csi  # noqa: F401
 from repro.phy.fading import (bessel_j0, correlated_step, doppler_rho,  # noqa: F401
                               gauss_markov_step, innovation_scale)
-from repro.phy.geometry import (GeometryConfig, init_positions,  # noqa: F401
-                                path_gain, shadowing, uniform_disk,
+from repro.phy.geometry import (SHADOW_SALT, GeometryConfig,  # noqa: F401
+                                init_positions, path_gain, shadowing,
+                                uniform_disk, waypoint_shadow_step,
                                 waypoint_step, worker_gains)
+from repro.phy.population import (autotune_population_step,  # noqa: F401
+                                  population_step)
 from repro.phy.scenario import (PRESETS, PhyConfig, PhyState,  # noqa: F401
                                 Scenario, h_tx, list_scenarios,
                                 make_scenario, participation_mask)

@@ -25,6 +25,11 @@ import jax.numpy as jnp
 
 Array = jax.Array
 
+#: ``fold_in`` salt for the on-arrival shadowing redraw — a PRNG *side
+#: branch* of the waypoint key (the ``faults.FAULT_SALT`` pattern), so
+#: enabling the redraw changes no draw on the base mobility schedule.
+SHADOW_SALT = 0x5AD0
+
 
 @dataclasses.dataclass(frozen=True)
 class GeometryConfig:
@@ -84,10 +89,9 @@ def init_positions(key: Array, n: int, gcfg: GeometryConfig
             uniform_disk(kd, n, gcfg.cell_radius_m))
 
 
-def waypoint_step(key: Array, pos: Array, dest: Array,
-                  gcfg: GeometryConfig) -> Tuple[Array, Array]:
-    """One random-waypoint move: advance ``speed·slot`` toward the waypoint;
-    arrivals draw a fresh waypoint (branch-free ``where`` — scan-safe)."""
+def _advance(key: Array, pos: Array, dest: Array,
+             gcfg: GeometryConfig) -> Tuple[Array, Array, Array]:
+    """Shared random-waypoint arithmetic: (pos', dest', arrived)."""
     step = gcfg.speed_mps * gcfg.slot_seconds
     delta = dest - pos
     dist = jnp.sqrt(jnp.sum(delta * delta, axis=-1, keepdims=True))
@@ -97,4 +101,35 @@ def waypoint_step(key: Array, pos: Array, dest: Array,
                         pos + step * unit)
     fresh = uniform_disk(key, pos.shape[0], gcfg.cell_radius_m)
     dest_new = jnp.where(arrived[:, None], fresh, dest)
+    return pos_new, dest_new, arrived
+
+
+def waypoint_step(key: Array, pos: Array, dest: Array,
+                  gcfg: GeometryConfig) -> Tuple[Array, Array]:
+    """One random-waypoint move: advance ``speed·slot`` toward the waypoint;
+    arrivals draw a fresh waypoint (branch-free ``where`` — scan-safe)."""
+    pos_new, dest_new, _arrived = _advance(key, pos, dest, gcfg)
     return pos_new, dest_new
+
+
+def waypoint_shadow_step(key: Array, pos: Array, dest: Array, shadow: Array,
+                         gcfg: GeometryConfig
+                         ) -> Tuple[Array, Array, Array]:
+    """:func:`waypoint_step` plus a log-normal shadowing redraw on arrival.
+
+    A worker reaching its waypoint is in a new environment (new
+    obstructions), so its shadowing coefficient is redrawn — branch-free
+    via the same ``arrived`` mask that swaps the destination.  The redraw
+    key is a :data:`SHADOW_SALT` side branch of the waypoint key, so the
+    fresh-destination draw stays bit-identical to :func:`waypoint_step`'s
+    and a worker that never arrives keeps its shadowing bitwise-unchanged
+    (the static-worker pin in ``tests/test_phy.py``).  With
+    ``shadowing_sigma_db <= 0`` there is nothing to redraw and ``shadow``
+    passes through untouched.
+    """
+    pos_new, dest_new, arrived = _advance(key, pos, dest, gcfg)
+    if gcfg.shadowing_sigma_db > 0.0:
+        fresh_sh = shadowing(jax.random.fold_in(key, SHADOW_SALT),
+                             pos.shape[0], gcfg)
+        shadow = jnp.where(arrived, fresh_sh, shadow)
+    return pos_new, dest_new, shadow

@@ -1,0 +1,160 @@
+"""Population-scale phy: advance EVERY worker's wireless state in one step.
+
+This is the state-evolution half of ROADMAP item 2 ("million-worker
+rounds"): the phy scenario keeps per-worker state for the whole N-worker
+*population* — fading phasor, position, waypoint, shadowing — while each
+round only *samples* a W-worker cohort for the uplink (``core.cohort``).
+Three distinct scaling axes, easy to conflate (see README "Scaling up"):
+
+* ``population`` (N) — how many workers EXIST; sizes the phy state and
+  this module's one-launch step.
+* ``cohort`` (W) — how many are SAMPLED per round; sizes the packed
+  ``(W, D)`` uplink buffers.
+* ``worker_chunk`` — how many of the sampled cohort are STREAMED per
+  ``lax.scan`` step inside the fused receive; sizes peak signal memory.
+
+:func:`population_step` replaces the chain of ``fading.correlated_step`` →
+``geometry.waypoint_step``/``waypoint_shadow_step`` → ``worker_gains``
+dispatches in ``Scenario.step``:
+
+* jnp backend — literally that composed chain (the bitwise oracle; the
+  calls below ARE the chain, same keys, same order).
+* pallas backend, frequency-flat channel (``h.size == N``) — ONE
+  row-blocked launch (``kernels/phy_population.py``) over the flat planes,
+  with all randomness pre-drawn here using the composed chain's exact keys.
+* pallas backend, wideband ``(N, d)`` fading — the planes don't share the
+  ``(N,)`` grid, so fall back to the composed chain (pallas fading kernel
+  + jnp geometry), unchanged from before this module existed.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.channel import rayleigh
+from repro.core.cplx import Complex
+from repro.core.transport import _interpret, resolve_backend
+from repro.phy import fading as _fading
+from repro.phy import geometry as _geo
+from repro.phy.geometry import SHADOW_SALT, GeometryConfig
+
+Array = jax.Array
+
+__all__ = ["population_step", "autotune_population_step"]
+
+
+def population_step(key_f: Array, key_g: Array, h: Complex, age: Array,
+                    pos: Array, dest: Array, shadow: Array,
+                    gcfg: GeometryConfig, *, rho: float,
+                    coherence_iters: int, backend: Optional[str] = None,
+                    block_rows: Optional[int] = None
+                    ) -> Tuple[Complex, Array, Array, Array, Array, Array]:
+    """Advance fading + mobility + shadowing + path gain one slot.
+
+    Args:
+      key_f / key_g: the fading and geometry keys ``Scenario.step`` already
+        splits (same keys the composed chain consumed).
+      h: small-scale fading, ``(N, d)`` Complex (``(N, 1)`` when
+        frequency-flat).
+      age / pos / dest / shadow: coherence age (scalar int32), ``(N, 2)``
+        positions and waypoints, ``(N,)`` linear shadowing.
+      gcfg: cell geometry + mobility parameters.
+      rho / coherence_iters: AR(1) coefficient and redraw period.
+
+    Returns ``(h', age', pos', dest', shadow', gain)`` with ``gain`` the
+    ``(N,)`` linear power gains at the NEW positions.
+    """
+    bk = resolve_backend(backend)
+    n = pos.shape[0]
+    if bk == "pallas" and h.re.size == n:
+        return _population_step_fused(
+            key_f, key_g, h, age, pos, dest, shadow, gcfg,
+            rho=rho, coherence_iters=coherence_iters, block_rows=block_rows)
+    h_new, age_new, _redraw = _fading.correlated_step(
+        key_f, h, age, rho, coherence_iters, backend=bk)
+    pos_n, dest_n, shadow_n = _geo.waypoint_shadow_step(
+        key_g, pos, dest, shadow, gcfg)
+    gain = _geo.worker_gains(pos_n, shadow_n, gcfg)
+    return h_new, age_new, pos_n, dest_n, shadow_n, gain
+
+
+def _population_step_fused(key_f, key_g, h, age, pos, dest, shadow, gcfg, *,
+                           rho, coherence_iters, block_rows):
+    """One-launch pallas path: pre-draw every random with the composed
+    chain's exact keys, then a single elementwise kernel over 12 planes."""
+    from repro.kernels import phy_population as _k
+    n = pos.shape[0]
+    shape = h.re.shape
+    # the EXACT draws the composed chain makes, same keys, same shapes:
+    w = rayleigh(key_f, shape, h.re.dtype)            # gauss_markov_step
+    fresh = _geo.uniform_disk(key_g, n, gcfg.cell_radius_m)  # _advance
+    sigma_on = gcfg.shadowing_sigma_db > 0.0
+    if sigma_on:                                      # waypoint_shadow_step
+        sh_fresh = _geo.shadowing(jax.random.fold_in(key_g, SHADOW_SALT),
+                                  n, gcfg)
+    else:
+        sh_fresh = shadow
+    # correlated_step's age/redraw bookkeeping (cheap scalar jnp)
+    age1 = age + 1
+    redraw = age1 >= coherence_iters
+    age_new = jnp.where(redraw, jnp.zeros((), jnp.int32), age1)
+    out = _k.population_step(
+        h.re.reshape(-1), h.im.reshape(-1),
+        w.re.reshape(-1), w.im.reshape(-1),
+        pos[:, 0], pos[:, 1], dest[:, 0], dest[:, 1],
+        fresh[:, 0], fresh[:, 1], shadow, sh_fresh,
+        float(rho), _fading.innovation_scale(rho), redraw,
+        gcfg.speed_mps * gcfg.slot_seconds, gcfg.ref_distance_m,
+        gcfg.norm_distance_m, gcfg.pathloss_exp,
+        1.0 if sigma_on else 0.0,
+        block_rows=block_rows, interpret=_interpret())
+    hre, him, px, py, dx, dy, sh, gain = out
+    return (Complex(hre.reshape(shape), him.reshape(shape)), age_new,
+            jnp.stack([px, py], axis=-1), jnp.stack([dx, dy], axis=-1),
+            sh, gain)
+
+
+def autotune_population_step(n: int, gcfg: Optional[GeometryConfig] = None,
+                             *, rho: float = 0.95, coherence_iters: int = 4,
+                             block_rows_grid=(128, 256, 512, 1024),
+                             iters: int = 10, backend: Optional[str] = None,
+                             seed: int = 0) -> dict:
+    """Small host-side sweep over the population kernel's row-block knob.
+
+    Times :func:`population_step` (jit, median of ``iters`` after warmup)
+    on a random frequency-flat N-worker population and returns
+    ``{"best": {"block_rows", "us"}, "table": [...]}``.  ``block_rows``
+    only reaches the pallas kernel, so on the jnp backend the sweep keeps
+    one row.  The winner maps 1:1 onto ``REPRO_OTA_BLOCK_ROWS``.
+    """
+    import time
+
+    if gcfg is None:
+        gcfg = GeometryConfig(speed_mps=15.0, shadowing_sigma_db=6.0,
+                              slot_seconds=1.0)
+    key = jax.random.PRNGKey(seed)
+    kh, kp, ks, kf, kg = jax.random.split(key, 5)
+    h = rayleigh(kh, (n, 1))
+    pos, dest = _geo.init_positions(kp, n, gcfg)
+    shadow = _geo.shadowing(ks, n, gcfg)
+    age = jnp.zeros((), jnp.int32)
+
+    if resolve_backend(backend) != "pallas":
+        block_rows_grid = block_rows_grid[:1]
+    table = []
+    for br in block_rows_grid:
+        fn = jax.jit(lambda h, age, pos, dest, shadow, _br=br: population_step(
+            kf, kg, h, age, pos, dest, shadow, gcfg, rho=rho,
+            coherence_iters=coherence_iters, backend=backend, block_rows=_br))
+        jax.block_until_ready(fn(h, age, pos, dest, shadow))
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(h, age, pos, dest, shadow))
+            ts.append(time.perf_counter() - t0)
+        ts.sort()
+        table.append({"block_rows": int(br), "us": 1e6 * ts[len(ts) // 2]})
+    best = min(table, key=lambda r: r["us"])
+    return {"best": best, "table": table}

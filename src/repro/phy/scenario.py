@@ -45,6 +45,7 @@ from repro.core.cplx import Complex
 from repro.phy import csi as _csi
 from repro.phy import fading as _fading
 from repro.phy import geometry as _geo
+from repro.phy import population as _pop
 from repro.phy.geometry import GeometryConfig
 
 Array = jax.Array
@@ -203,15 +204,23 @@ class Scenario:
             return state._replace(age=state.age + 1)
         kf, kg, kc = self._keys(key)
         h_small = state.h if state.h_small is None else state.h_small
-        h_small, age, _redraw = _fading.correlated_step(
-            kf, h_small, state.age, cfg.rho, cfg.coherence_iters,
-            backend=cfg.backend)
 
         gain, shadow, pos, dest = (state.gain, state.shadow, state.pos,
                                    state.dest)
         if self.mobile:
-            pos, dest = _geo.waypoint_step(kg, pos, dest, cfg.geometry)
-            gain = _geo.worker_gains(pos, shadow, cfg.geometry)
+            # the whole population's physics in one call: fading + waypoint
+            # mobility + on-arrival shadowing redraw + path gain.  On the
+            # pallas backend with a frequency-flat channel this is ONE
+            # kernel launch over the flat (N,) planes (phy.population);
+            # the jnp path composes the exact chain that used to live here.
+            h_small, age, pos, dest, shadow, gain = _pop.population_step(
+                kf, kg, h_small, state.age, pos, dest, shadow, cfg.geometry,
+                rho=cfg.rho, coherence_iters=cfg.coherence_iters,
+                backend=cfg.backend)
+        else:
+            h_small, age, _redraw = _fading.correlated_step(
+                kf, h_small, state.age, cfg.rho, cfg.coherence_iters,
+                backend=cfg.backend)
 
         d = state.h.re.shape[-1]
         return self._assemble(kc, h_small, gain, shadow, pos, dest, age, d)

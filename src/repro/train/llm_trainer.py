@@ -138,6 +138,23 @@ class FLConfig:
     #: the existing metrics dict / scan carry.  None/False keeps the trainer
     #: bitwise identical to the telemetry-free build (no extra ops traced).
     telemetry: Optional[Any] = None
+    #: population/cohort split (ROADMAP item 2, ``core.cohort``): when
+    #: ``population`` is set it supersedes ``n_workers`` as the number of
+    #: workers that EXIST — θ/λ/opt/phy/fault state all carry the (N, ...)
+    #: leading dim — while only ``cohort`` workers are sampled each round:
+    #: their rows are gathered, the local steps + the whole packed uplink
+    #: run at cohort width (peak signal memory O(cohort·D) regardless of
+    #: N), and θ/λ/opt rows scatter back with non-sampled workers frozen
+    #: (exactly the masked-worker semantics).  Batch leaves are
+    #: COHORT-width: row i feeds the round's i-th sampled worker.
+    #: ``cohort == population`` traces no sampling at all and is bitwise a
+    #: ``n_workers=population`` run.  Replicated mode, single-buffer
+    #: packed layout only (no shard-local / sketched support yet).
+    population: Optional[int] = None
+    #: workers sampled per round (requires ``population``)
+    cohort: Optional[int] = None
+    #: ``core.cohort.POLICIES``: uniform | top-gain | prop-h2
+    cohort_policy: str = "uniform"
 
 
 def _local_opt(flcfg: FLConfig):
@@ -158,7 +175,20 @@ def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
     (W, d_pad) layout (``ShardPackSpec``) and run the round per shard
     inside ``shard_map`` — scenarios included (the historical
     scenario + model-parallel rejection is gone)."""
-    W = flcfg.n_workers
+    cohort_cfg = None
+    if flcfg.population is not None:
+        from repro.core import cohort as _cohort
+        if flcfg.cohort is None:
+            raise ValueError(
+                "FLConfig.population sets the worker-population size but "
+                "says nothing about the per-round uplink width — set "
+                "FLConfig.cohort too (cohort == population disables "
+                "sampling bitwise)")
+        cohort_cfg = _cohort.CohortConfig(
+            population=flcfg.population, cohort=flcfg.cohort,
+            policy=flcfg.cohort_policy)
+    W = flcfg.population if flcfg.population is not None \
+        else flcfg.n_workers
     opt = _local_opt(flcfg)
     tel = resolve_telemetry(flcfg.telemetry)
 
@@ -208,6 +238,19 @@ def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
     #: model-parallel / fsdp mesh + packed state -> shard-local packed
     #: buffers over the 2D (fsdp, model) shard grid
     shard_local = _packed_state() and (model_n > 1 or fsdp_n > 1)
+
+    sampling = cohort_cfg is not None and _cohort.cohort_active(cohort_cfg)
+    if sampling:
+        if not _packed_state():
+            raise ValueError(
+                "FLConfig.population/cohort sampling gathers rows of the "
+                "packed (N, D) dual/fading buffers and requires the packed "
+                "state layout (packed_uplink != False)")
+        if shard_local:
+            raise ValueError(
+                "FLConfig.population/cohort sampling is not supported on "
+                "the shard-local packed layout yet — run cohort sampling "
+                "on a single-device or pure-data mesh")
 
     def _shard_spec(theta):
         from repro.launch.shardings import shard_dims_2d
@@ -272,6 +315,7 @@ def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
         kc, kn = jax.random.split(key)
         mask = h_tx_p = Theta_prev = None
         spec = sspec = None
+        idx = None
         if packed:
             # slice-views of the packed buffers for the leafwise penalty —
             # constant across the local steps, so unpack once per round.
@@ -285,21 +329,41 @@ def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
                 spec = build_packspec(state.theta, batch_dims=1)
                 unpack_tree = lambda buf: unpack_cplx(spec, buf)
         if scn is not None:
-            chan = scn.step(kc, state.chan)       # PhyState, (W, D)-packed
-            # workers see their CSI everywhere they act: penalty + duals
-            lam_tree = unpack_tree(state.lam)
-            h_tree = unpack_tree(_phys_h_tx(chan))
+            chan = scn.step(kc, state.chan)       # PhyState, (N, D)-packed
+            h_pack = _phys_h_tx(chan)
             if scn.truncating:
                 mask, Theta_prev = chan.mask, state.Theta
             if scn.imperfect_csi:
                 h_tx_p = chan.h_hat
         elif packed:
             chan, _changed = step_channel_packed(kc, state.chan, ccfg)
-            lam_tree = unpack_tree(state.lam)
-            h_tree = unpack_tree(chan.h)
+            h_pack = chan.h
         else:
             chan, _changed = step_channel_tree(kc, state.chan, ccfg)
             lam_tree, h_tree = state.lam, chan.h
+        theta_run, opt_run = state.theta, state.opt
+        if packed:
+            lam_pack = state.lam
+            if sampling:
+                # COHORT_SALT side branch of the ROUND key — the base
+                # kc/kn schedule (and every unsampled bit) is untouched,
+                # and resume re-derives the cohort from the round index
+                # uniform never reads the weight — skip the (N, D) |h|²
+                # pass so sampled-round compute stays O(cohort·D) + O(N)
+                wgt = _cohort.channel_weight(chan.h) \
+                    if cohort_cfg.policy != "uniform" else None
+                idx = _cohort.sample_cohort(key, cohort_cfg, weight=wgt)
+                # local steps see only the sampled rows: θ/opt/λ/CSI all
+                # gather to cohort width before any compute (batch leaves
+                # arrive cohort-width already)
+                lam_pack = _cohort.take_rows(lam_pack, idx)
+                h_pack = _cohort.take_rows(h_pack, idx)
+                theta_run = jax.tree.map(lambda l: l[idx], state.theta)
+                opt_run = jax.tree.map(
+                    lambda l: l if jnp.ndim(l) == 0 else l[idx], state.opt)
+            # workers see their CSI everywhere they act: penalty + duals
+            lam_tree = unpack_tree(lam_pack)
+            h_tree = unpack_tree(h_pack)
 
         faults_arg = None
         fmetrics = {}
@@ -324,7 +388,7 @@ def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
             return (theta, opt_state), jnp.mean(losses)
 
         (theta, opt_state), losses = jax.lax.scan(
-            local_body, (state.theta, state.opt), None,
+            local_body, (theta_run, opt_run), None,
             length=flcfg.local_steps)
 
         if shard_local:  # incl. scenarios: (W,) masks replicate over model
@@ -335,13 +399,18 @@ def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
                 block_cols=flcfg.ota_block_cols,
                 guard=gcfg, faults=faults_arg, telemetry=tel)
         elif packed:  # incl. every scenario: mask/h_tx/guard default to None
+            # sampling: θ arrives cohort-width; λ/h/mask/faults stay
+            # population-width and the round gathers/scatters their rows
+            # around the cohort-width receive (lam_new comes back (N, D)
+            # with non-sampled duals frozen)
             Theta_f32, lam_new, m = ota_tree_round_packed_state(
                 theta, state.lam, chan.h, kn, acfg, ccfg, spec,
                 backend=flcfg.transport_backend, mask=mask, h_tx_p=h_tx_p,
                 Theta_prev=Theta_prev, fused=flcfg.ota_fused,
                 worker_chunk=flcfg.ota_worker_chunk,
                 block_cols=flcfg.ota_block_cols,
-                guard=gcfg, faults=faults_arg, telemetry=tel)
+                guard=gcfg, faults=faults_arg, telemetry=tel,
+                cohort_idx=idx)
         else:
             Theta_f32, lam_new, m = ota_tree_round(
                 theta, state.lam, chan.h, kn, acfg, ccfg,
@@ -351,6 +420,14 @@ def make_replicated(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
             aux = m.pop("_fault_aux", {})
             flt_new = _faults.commit(flt_mid, aux.get("stale"),
                                      aux.get("evicted"))
+        if idx is not None:
+            # non-sampled workers keep this round's pre-round θ/opt rows
+            # (frozen, like masked workers) — only cohort rows scatter back
+            theta = jax.tree.map(lambda full, rows: full.at[idx].set(rows),
+                                 state.theta, theta)
+            opt_state = jax.tree.map(
+                lambda full, rows: rows if jnp.ndim(full) == 0
+                else full.at[idx].set(rows), state.opt, opt_state)
         Theta_new = _zmap(lambda T, t: T.astype(t.dtype), Theta_f32, state.Theta)
         if tel is not None and "obs/theta_update_norm" not in m:
             # fault-free rounds never see Theta_prev inside the round, so
@@ -424,6 +501,12 @@ def make_sketched(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
     (the codec's "fsdp" shards ride the data axes — the worker dim lives
     only on the small (W, d_s) planes, never on the params).
     """
+    if flcfg.population is not None:
+        raise ValueError(
+            "FLConfig.population/cohort sampling is a replicated-mode "
+            "feature (per-worker θ rows to gather); sketched mode "
+            "time-multiplexes workers over one shared model and has no "
+            "population state to subsample")
     W = flcfg.n_workers
     ratio = flcfg.sketch_ratio
     backend = flcfg.transport_backend
@@ -709,6 +792,11 @@ def make_fl_train(model: Model, flcfg: FLConfig, acfg: AdmmConfig,
                 "nothing without FLConfig.scenario — set e.g. "
                 "scenario='markov-doppler' (refusing to silently ignore "
                 "them)")
+    if flcfg.population is None and flcfg.cohort is not None:
+        raise ValueError(
+            "FLConfig.cohort samples from FLConfig.population and does "
+            "nothing without it — set population=N too (refusing to "
+            "silently ignore it)")
     if flcfg.mode == "replicated":
         return make_replicated(model, flcfg, acfg, ccfg, mesh=mesh)
     if flcfg.mode == "sketched":

@@ -1,0 +1,363 @@
+"""core.cohort — per-round cohort sampling from an N-worker population:
+policy behaviour, the COHORT_SALT side-branch discipline, gather/scatter
+helpers, the cohort == population bitwise identity (flat AFadmm AND packed
+LLM trainer), frozen non-sampled duals, composition with scenarios + faults
++ guards, resume re-derivation from the round index, and the O(cohort·D)
+compute pin behind the million-worker bench."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cplx
+from repro.core.admm import AdmmConfig
+from repro.core.aggregators import AFadmm
+from repro.core.channel import ChannelConfig, rayleigh
+from repro.core.cohort import (COHORT_SALT, CohortConfig, channel_weight,
+                               cohort_active, cohort_metrics, put_rows,
+                               sample_cohort, take_rows)
+from repro.core.cplx import Complex
+from repro.faults import FaultPlan, GuardConfig
+from repro.phy import make_scenario
+
+from helpers import default_cfgs, make_linreg, make_solver
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# config + policies
+# ---------------------------------------------------------------------------
+
+def test_cohort_config_validation():
+    with pytest.raises(ValueError, match="cohort <= population"):
+        CohortConfig(population=4, cohort=5)
+    with pytest.raises(ValueError, match="cohort <= population"):
+        CohortConfig(population=4, cohort=0)
+    with pytest.raises(ValueError, match="unknown cohort policy"):
+        CohortConfig(population=4, cohort=2, policy="vip-only")
+    assert not cohort_active(None)
+    assert not cohort_active(CohortConfig(population=4, cohort=4))
+    assert cohort_active(CohortConfig(population=4, cohort=2))
+
+
+def test_sample_uniform_is_salted_permutation_prefix():
+    """The uniform draw is pinned: a COHORT_SALT side branch of the round
+    key, permutation prefix — so the base round schedule consumes no extra
+    draw and resume can re-derive the cohort from the round key alone."""
+    cfg = CohortConfig(population=37, cohort=5)
+    idx = sample_cohort(KEY, cfg)
+    want = jax.random.permutation(
+        jax.random.fold_in(KEY, COHORT_SALT), 37)[:5]
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(want))
+    assert idx.dtype == jnp.int32 and idx.shape == (5,)
+    assert len(set(np.asarray(idx).tolist())) == 5       # w/o replacement
+    # different rounds draw different cohorts
+    idx2 = sample_cohort(jax.random.fold_in(KEY, 1), cfg)
+    assert not np.array_equal(np.asarray(idx), np.asarray(idx2))
+
+
+def test_top_gain_selects_strongest_and_requires_weight():
+    cfg = CohortConfig(population=8, cohort=3, policy="top-gain")
+    wt = jnp.asarray([0.1, 5.0, 0.2, 9.0, 0.3, 7.0, 0.0, 1.0])
+    idx = sample_cohort(KEY, cfg, weight=wt)
+    assert set(np.asarray(idx).tolist()) == {3, 5, 1}
+    with pytest.raises(ValueError, match="channel weight"):
+        sample_cohort(KEY, cfg)
+    with pytest.raises(ValueError, match="channel weight"):
+        sample_cohort(KEY, CohortConfig(population=8, cohort=3,
+                                        policy="prop-h2"))
+
+
+def test_prop_h2_is_weighted_without_replacement():
+    """Gumbel-top-k: unique indices, and a dominant-weight worker is
+    sampled (almost) every round while the rest share the leftover slots."""
+    cfg = CohortConfig(population=16, cohort=4, policy="prop-h2")
+    wt = jnp.ones((16,)).at[0].set(50.0)
+    hits = np.zeros(16)
+    for r in range(200):
+        idx = np.asarray(sample_cohort(jax.random.fold_in(KEY, r), cfg,
+                                       weight=wt))
+        assert len(set(idx.tolist())) == 4
+        hits[idx] += 1
+    assert hits[0] >= 195
+    assert hits[1:].max() <= 120
+
+
+def test_channel_weight_is_mean_abs2():
+    h = rayleigh(KEY, (6, 32))
+    want = np.asarray(jnp.mean(cplx.abs2(h), axis=-1))
+    np.testing.assert_allclose(np.asarray(channel_weight(h)), want,
+                               rtol=1e-6)
+    # freq-flat (N, 1): exactly the per-worker power gain
+    hf = rayleigh(KEY, (6, 1))
+    np.testing.assert_allclose(np.asarray(channel_weight(hf)),
+                               np.asarray(cplx.abs2(hf))[:, 0], rtol=1e-6)
+
+
+def test_take_put_rows_helpers():
+    idx = jnp.asarray([2, 0], jnp.int32)
+    x = jnp.arange(12.0).reshape(4, 3)
+    np.testing.assert_array_equal(np.asarray(take_rows(x, idx)),
+                                  np.asarray(x)[[2, 0]])
+    c = Complex(x, -x)
+    sub = take_rows(c, idx)
+    np.testing.assert_array_equal(np.asarray(sub.re), np.asarray(x)[[2, 0]])
+    assert take_rows(None, idx) is None
+    scalar = jnp.asarray(3.0)
+    assert take_rows(scalar, idx).shape == ()            # 0-d passthrough
+    rows = jnp.full((2, 3), -1.0)
+    out = np.asarray(put_rows(x, idx, rows))
+    np.testing.assert_array_equal(out[[2, 0]], np.asarray(rows))
+    np.testing.assert_array_equal(out[[1, 3]], np.asarray(x)[[1, 3]])
+    cc = np.asarray(put_rows(c, idx, Complex(rows, rows)).im)
+    np.testing.assert_array_equal(cc[[1, 3]], -np.asarray(x)[[1, 3]])
+    assert put_rows(None, idx, rows) is None
+
+
+def test_cohort_metrics_keys():
+    m = cohort_metrics(CohortConfig(population=1000, cohort=250))
+    assert float(m["obs/cohort_size"]) == 250.0
+    assert float(m["obs/population_sampled_frac"]) == 0.25
+
+
+# ---------------------------------------------------------------------------
+# flat AFadmm: identity, frozen rows, composition, resume
+# ---------------------------------------------------------------------------
+
+def _prox_solver(rho):
+    """Width-agnostic closed-form solver for f_n(θ) = ‖θ − θ_prev‖² (the
+    scaleup bench task) — works at population AND gathered-cohort width."""
+    def solve(theta, lam, h, Theta):
+        h2 = cplx.abs2(h)
+        mu = cplx.cmul_conj(h, lam).re
+        return (2.0 * theta - mu + rho * h2 * Theta[None, :]) \
+            / (2.0 + rho * h2)
+    return solve
+
+
+def _zero_grad(theta):
+    return jnp.zeros_like(theta)
+
+
+def test_cohort_equals_population_is_bitwise_identity():
+    """Acceptance criterion: ``cohort == population`` with the uniform
+    policy traces NO sampling and is bit-for-bit the unsampled round."""
+    W, d = 6, 8
+    prob = make_linreg(KEY, W=W, d=d)
+    acfg, ccfg, plan = default_cfgs(W, d, noisy=True, snr_db=30.0,
+                                    flip=False, power_control=True)
+    solver = make_solver(prob, acfg.rho)
+    states = []
+    for coh in (None, CohortConfig(population=W, cohort=W)):
+        alg = AFadmm(acfg, ccfg, plan,
+                     scenario=make_scenario("urban-mobility", ccfg),
+                     cohort=coh)
+        st = alg.init(jax.random.PRNGKey(1), prob["theta0"])
+        rnd = jax.jit(lambda s, k, _a=alg: _a.round(k, s, solver,
+                                                    prob["grad_fn"]))
+        for r in range(4):
+            st, _ = rnd(st, jax.random.fold_in(KEY, r))
+        states.append(st)
+    a, b = states
+    np.testing.assert_array_equal(np.asarray(a.theta), np.asarray(b.theta))
+    np.testing.assert_array_equal(np.asarray(a.lam.re), np.asarray(b.lam.re))
+    np.testing.assert_array_equal(np.asarray(a.lam.im), np.asarray(b.lam.im))
+    np.testing.assert_array_equal(np.asarray(a.Theta), np.asarray(b.Theta))
+
+
+def test_sampled_round_freezes_non_sampled_rows():
+    """Non-sampled workers keep their pre-round θ AND λ bitwise (the
+    frozen-dual semantics); the sampled block actually moves."""
+    N, W, d = 12, 4, 6
+    acfg, ccfg, plan = default_cfgs(N, d, noisy=True, snr_db=30.0,
+                                    flip=False, power_control=True)
+    alg = AFadmm(acfg, ccfg, plan,
+                 cohort=CohortConfig(population=N, cohort=W))
+    st = alg.init(jax.random.PRNGKey(1),
+                  jax.random.normal(KEY, (N, d)))
+    k = jax.random.fold_in(KEY, 0)
+    st2, _ = jax.jit(lambda s, kk: alg.round(
+        kk, s, _prox_solver(acfg.rho), _zero_grad))(st, k)
+    # the round's cohort is re-derivable from the round key alone
+    idx = np.asarray(sample_cohort(k, alg.cohort))
+    on = np.zeros(N, bool)
+    on[idx] = True
+    np.testing.assert_array_equal(np.asarray(st2.theta)[~on],
+                                  np.asarray(st.theta)[~on])
+    np.testing.assert_array_equal(np.asarray(st2.lam.re)[~on],
+                                  np.asarray(st.lam.re)[~on])
+    np.testing.assert_array_equal(np.asarray(st2.lam.im)[~on],
+                                  np.asarray(st.lam.im)[~on])
+    assert not np.array_equal(np.asarray(st2.theta)[on],
+                              np.asarray(st.theta)[on])
+    assert not np.array_equal(np.asarray(st2.lam.re)[on],
+                              np.asarray(st.lam.re)[on])
+
+
+@pytest.mark.parametrize("policy", ["uniform", "top-gain", "prop-h2"])
+def test_sampled_rounds_compose_with_scenario_faults_guards(policy):
+    """Acceptance criterion: sampled rounds under every policy compose with
+    a mobile scenario, fault injection, round guards, and telemetry — state
+    stays finite and the obs/ cohort keys come out of the round."""
+    N, W, d = 10, 4, 6
+    acfg, ccfg, plan = default_cfgs(N, d, noisy=True, snr_db=30.0,
+                                    flip=False, power_control=True)
+    alg = AFadmm(
+        acfg, ccfg, plan,
+        scenario=make_scenario("urban-mobility", ccfg, freq_flat=True),
+        faults=FaultPlan(straggler_prob=0.2, straggler_delay=2,
+                         burst_prob=0.2, burst_std=3.0),
+        guard=GuardConfig(policy="evict-retransmit", snr_floor_db=-60.0,
+                          max_retries=1),
+        telemetry=True,
+        cohort=CohortConfig(population=N, cohort=W, policy=policy))
+    st = alg.init(jax.random.PRNGKey(1), jax.random.normal(KEY, (N, d)))
+    rnd = jax.jit(lambda s, k: alg.round(k, s, _prox_solver(acfg.rho),
+                                         _zero_grad))
+    for r in range(5):
+        st, m = rnd(st, jax.random.fold_in(KEY, r))
+    assert bool(jnp.all(jnp.isfinite(st.Theta)))
+    assert bool(jnp.all(jnp.isfinite(st.theta)))
+    assert float(m["obs/cohort_size"]) == float(W)
+    assert float(m["obs/population_sampled_frac"]) == pytest.approx(W / N)
+    assert np.isfinite(float(m["obs/rx_snr_db"]))
+
+
+def test_cohort_resume_rederives_from_round_index():
+    """Kill/resume bitwise: the cohort draw is a pure function of the round
+    key, so a freshly-rebuilt alg continuing from a mid-run state lands on
+    exactly the straight-run state — zero extra PRNG state to checkpoint."""
+    N, W, d = 10, 3, 5
+
+    def build():
+        acfg, ccfg, plan = default_cfgs(N, d, noisy=True, snr_db=30.0,
+                                        flip=False, power_control=True)
+        return acfg, AFadmm(
+            acfg, ccfg, plan,
+            scenario=make_scenario("urban-mobility", ccfg, freq_flat=True),
+            cohort=CohortConfig(population=N, cohort=W))
+
+    acfg, alg = build()
+    solver = _prox_solver(acfg.rho)
+    st = alg.init(jax.random.PRNGKey(1), jax.random.normal(KEY, (N, d)))
+    straight = st
+    for r in range(6):
+        straight, _ = alg.round(jax.random.fold_in(KEY, r), straight,
+                                solver, _zero_grad)
+    # "crash" after round 2, rebuild everything, continue from the state
+    part = st
+    for r in range(3):
+        part, _ = alg.round(jax.random.fold_in(KEY, r), part, solver,
+                            _zero_grad)
+    _, alg2 = build()
+    for r in range(3, 6):
+        part, _ = alg2.round(jax.random.fold_in(KEY, r), part, solver,
+                             _zero_grad)
+    np.testing.assert_array_equal(np.asarray(straight.theta),
+                                  np.asarray(part.theta))
+    np.testing.assert_array_equal(np.asarray(straight.lam.re),
+                                  np.asarray(part.lam.re))
+    np.testing.assert_array_equal(np.asarray(straight.Theta),
+                                  np.asarray(part.Theta))
+
+
+# ---------------------------------------------------------------------------
+# the O(cohort·D) compute pin, at test scale
+# ---------------------------------------------------------------------------
+
+#: buffer-restructuring prims (same convention as benchmarks/scaleup.py);
+#: gather/scatter are the cohort row traffic
+_LAYOUT_PRIMS = {
+    "reshape", "transpose", "broadcast_in_dim", "convert_element_type",
+    "squeeze", "slice", "concatenate", "pad", "copy", "dynamic_slice",
+    "dynamic_update_slice", "gather", "scatter", "scatter-add",
+}
+
+
+def _max_compute_out_elems(fn, *args) -> int:
+    from jax.extend import core as jcore
+    worst = 0
+
+    def walk(j):
+        nonlocal worst
+        for eqn in j.eqns:
+            sub = False
+            for v in eqn.params.values():
+                if isinstance(v, jcore.ClosedJaxpr):
+                    walk(v.jaxpr)
+                    sub = True
+                elif isinstance(v, jcore.Jaxpr):
+                    walk(v)
+                    sub = True
+            if sub or eqn.primitive.name in _LAYOUT_PRIMS:
+                continue
+            for ov in eqn.outvars:
+                worst = max(worst, ov.aval.size)
+
+    walk(jax.make_jaxpr(fn)(*args).jaxpr)
+    return worst
+
+
+def test_sampled_round_compute_stays_cohort_sized():
+    """No compute intermediate reaches O(N·D): population-width buffers may
+    only appear as carried state, O(N) phy planes, and gather/scatter row
+    traffic — the structural claim behind the 1M-population bench point,
+    checked here at test scale."""
+    N, W, d = 512, 8, 16
+    acfg, ccfg, plan = default_cfgs(N, d, noisy=True, snr_db=30.0,
+                                    flip=False, power_control=True)
+    alg = AFadmm(acfg, ccfg, plan,
+                 scenario=make_scenario("urban-mobility", ccfg,
+                                        freq_flat=True),
+                 cohort=CohortConfig(population=N, cohort=W))
+    st = alg.init(jax.random.PRNGKey(1), jnp.zeros((N, d)))
+    worst = _max_compute_out_elems(
+        lambda s, k: alg.round(k, s, _prox_solver(acfg.rho), _zero_grad)[0],
+        st, KEY)
+    assert worst < N * d
+    assert worst <= max(16 * W * d, 8 * N)
+
+
+# ---------------------------------------------------------------------------
+# packed LLM trainer: identity + error paths
+# ---------------------------------------------------------------------------
+
+def test_trainer_cohort_equals_population_bitwise_and_errors():
+    from repro.models import get_model
+    from repro.train.llm_trainer import FLConfig, make_fl_train
+
+    W, B, S = 4, 2, 16
+    m = get_model("granite-8b", reduced=True)
+    batch = {"tokens": jax.random.randint(KEY, (W, B, S), 0,
+                                          m.cfg.vocab_size)}
+    acfg = AdmmConfig(rho=0.5, flip_on_change=False)
+    ccfg = ChannelConfig(n_workers=W, snr_db=40.0)
+    states = []
+    for extra in ({}, {"population": W, "cohort": W}):
+        flcfg = FLConfig(mode="replicated", n_workers=W, local_steps=1,
+                         local_lr=1e-2, **extra)
+        init_fn, train_step = make_fl_train(m, flcfg, acfg, ccfg)
+        st = init_fn(KEY)
+        step = jax.jit(train_step)
+        for i in range(2):
+            st, _ = step(st, batch, jax.random.fold_in(KEY, i))
+        states.append(st)
+    plain, pop = states
+    for a, b in zip(jax.tree_util.tree_leaves(plain.theta),
+                    jax.tree_util.tree_leaves(pop.theta)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(plain.lam.re),
+                                  np.asarray(pop.lam.re))
+
+    # error paths: half-configured or unsupported-mode sampling must raise
+    with pytest.raises(ValueError, match="cohort"):
+        make_fl_train(m, FLConfig(mode="replicated", n_workers=W,
+                                  population=8), acfg, ccfg)
+    with pytest.raises(ValueError, match="population"):
+        make_fl_train(m, FLConfig(mode="replicated", n_workers=W,
+                                  cohort=2), acfg, ccfg)
+    with pytest.raises(ValueError, match="replicated-mode"):
+        make_fl_train(m, FLConfig(mode="sketched", n_workers=W,
+                                  sketch_ratio=64, population=8, cohort=2),
+                      acfg, ccfg)

@@ -1,0 +1,186 @@
+"""Population-scale phy (ROADMAP item 2): the fused one-launch
+``population_step``, disk-sampler statistics (KS), waypoint trajectory
+goldens, and the on-arrival shadowing redraw with its static-worker pin —
+the oracles the fused population kernel is diffed against."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.phy import (SHADOW_SALT, GeometryConfig, autotune_population_step,
+                       population_step, waypoint_shadow_step)
+from repro.phy import fading as _fading
+from repro.phy import geometry as _geo
+from repro.phy.geometry import (init_positions, shadowing, uniform_disk,
+                                waypoint_step, worker_gains)
+from repro.core.channel import rayleigh
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# uniform_disk: KS uniformity
+# ---------------------------------------------------------------------------
+
+def _ks_stat(samples: np.ndarray) -> float:
+    """One-sample Kolmogorov–Smirnov statistic against U(0, 1)."""
+    x = np.sort(np.asarray(samples))
+    n = x.size
+    hi = np.arange(1, n + 1) / n
+    lo = np.arange(0, n) / n
+    return max(float(np.max(hi - x)), float(np.max(x - lo)))
+
+
+def test_uniform_disk_ks_uniformity():
+    """Uniform over the disk means r²/R² ~ U(0,1) and the angle is uniform;
+    both must pass a KS test at the 1% level — and the raw radius (CDF x²)
+    must FAIL the same test, so the check has teeth."""
+    n, radius = 20_000, 100.0
+    pts = np.asarray(uniform_disk(KEY, n, radius))
+    r2 = np.sum(pts * pts, axis=-1) / radius**2
+    ang = (np.arctan2(pts[:, 1], pts[:, 0]) + np.pi) / (2.0 * np.pi)
+    crit = 1.63 / np.sqrt(n)                   # alpha = 0.01
+    assert _ks_stat(r2) < crit
+    assert _ks_stat(ang) < crit
+    assert _ks_stat(np.sqrt(r2)) > crit        # negative control
+
+
+# ---------------------------------------------------------------------------
+# waypoint walk: 3-step golden trajectory
+# ---------------------------------------------------------------------------
+
+def test_waypoint_three_step_golden_trajectory():
+    """Hand-computed 3-step walk: constant-velocity progress along the unit
+    direction, arrival snapping onto the waypoint, and the fresh-waypoint
+    redraw being exactly ``uniform_disk(key)`` rows."""
+    g = GeometryConfig(cell_radius_m=100.0, speed_mps=3.0, slot_seconds=1.0)
+    pos = jnp.asarray([[0.0, 0.0], [10.0, 0.0], [0.0, 5.0]])
+    dest = jnp.asarray([[30.0, 40.0], [10.0, 7.0], [0.0, 5.0]])
+    # worker 0: 50 m out along (0.6, 0.8) — 3 m per step, never arrives
+    # worker 1: 7 m out along (0, 1) — arrives on step 3 (1 m <= step)
+    # worker 2: already AT its waypoint — arrives (and redraws) every step
+    traj = []
+    p, d = pos, dest
+    for i in range(3):
+        p, d = waypoint_step(jax.random.fold_in(KEY, i), p, d, g)
+        traj.append((np.asarray(p), np.asarray(d)))
+    np.testing.assert_allclose(traj[0][0][0], [1.8, 2.4], atol=1e-5)
+    np.testing.assert_allclose(traj[1][0][0], [3.6, 4.8], atol=1e-5)
+    np.testing.assert_allclose(traj[2][0][0], [5.4, 7.2], atol=1e-5)
+    np.testing.assert_allclose(traj[0][0][1], [10.0, 3.0], atol=1e-5)
+    np.testing.assert_allclose(traj[1][0][1], [10.0, 6.0], atol=1e-5)
+    np.testing.assert_allclose(traj[2][0][1], [10.0, 7.0], atol=1e-5)
+    # non-arrived waypoints never move ...
+    np.testing.assert_array_equal(traj[0][1][:2], np.asarray(dest)[:2])
+    # ... and the arrival redraw is bit-identical to the fresh-disk draw
+    fresh0 = np.asarray(uniform_disk(jax.random.fold_in(KEY, 0), 3, 100.0))
+    np.testing.assert_array_equal(traj[0][1][2], fresh0[2])
+    np.testing.assert_array_equal(traj[0][0][2], [0.0, 5.0])  # snapped
+
+
+# ---------------------------------------------------------------------------
+# on-arrival shadowing redraw (satellite): side branch + static pin
+# ---------------------------------------------------------------------------
+
+def test_shadow_redraw_on_arrival_and_static_worker_pin():
+    g = GeometryConfig(cell_radius_m=100.0, speed_mps=5.0, slot_seconds=1.0,
+                       shadowing_sigma_db=8.0)
+    n = 64
+    pos, dest = init_positions(KEY, n, g)
+    dest = dest.at[: n // 2].set(pos[: n // 2])   # force arrivals
+    shadow = shadowing(jax.random.fold_in(KEY, 1), n, g)
+    k = jax.random.fold_in(KEY, 2)
+    p2, d2, s2 = waypoint_shadow_step(k, pos, dest, shadow, g)
+    # the actual arrival mask (some far workers may arrive too)
+    step = g.speed_mps * g.slot_seconds
+    arrived = np.linalg.norm(np.asarray(dest - pos), axis=-1) <= step
+    assert arrived[: n // 2].all() and not arrived.all()
+    fresh = np.asarray(shadowing(jax.random.fold_in(k, SHADOW_SALT), n, g))
+    np.testing.assert_array_equal(np.asarray(s2)[arrived], fresh[arrived])
+    # static pin: a worker that never arrives keeps its shadowing BITWISE
+    np.testing.assert_array_equal(np.asarray(s2)[~arrived],
+                                  np.asarray(shadow)[~arrived])
+    # SHADOW_SALT is a side branch: the mobility draw is bit-identical to
+    # the shadow-free waypoint_step's
+    p3, d3 = waypoint_step(k, pos, dest, g)
+    np.testing.assert_array_equal(np.asarray(p2), np.asarray(p3))
+    np.testing.assert_array_equal(np.asarray(d2), np.asarray(d3))
+
+
+def test_shadow_step_sigma_zero_passes_through():
+    g = GeometryConfig(cell_radius_m=100.0, speed_mps=5.0, slot_seconds=1.0,
+                       shadowing_sigma_db=0.0)
+    pos, dest = init_positions(KEY, 8, g)
+    shadow = jnp.ones((8,), jnp.float32)
+    _, _, s2 = waypoint_shadow_step(KEY, pos, dest, shadow, g)
+    assert s2 is shadow
+
+
+# ---------------------------------------------------------------------------
+# fused population step: oracle parity (jnp bitwise, pallas numeric)
+# ---------------------------------------------------------------------------
+
+def _composed_chain(kf, kg, h, age, pos, dest, shadow, g, rho, coh):
+    h2, a2, _ = _fading.correlated_step(kf, h, age, rho, coh, backend="jnp")
+    p2, d2, s2 = waypoint_shadow_step(kg, pos, dest, shadow, g)
+    return h2, a2, p2, d2, s2, worker_gains(p2, s2, g)
+
+
+@pytest.mark.parametrize("age0", [0, 2])
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_population_step_matches_composed_chain(backend, age0):
+    """The fused step vs the correlated_step → waypoint_shadow_step →
+    worker_gains oracle: bitwise on jnp (it IS the chain), <= 1e-5 through
+    the pallas kernel — covering both the AR(1) hold and redraw branches
+    and a non-block-aligned N."""
+    n = 257
+    rho, coh = 0.9, 3
+    g = GeometryConfig(cell_radius_m=500.0, speed_mps=15.0, slot_seconds=1.0,
+                       shadowing_sigma_db=6.0)
+    kh, kp, ks, kf, kg = jax.random.split(KEY, 5)
+    h = rayleigh(kh, (n, 1))
+    pos, dest = init_positions(kp, n, g)
+    shadow = shadowing(ks, n, g)
+    age = jnp.asarray(age0, jnp.int32)
+    got = population_step(kf, kg, h, age, pos, dest, shadow, g, rho=rho,
+                          coherence_iters=coh, backend=backend)
+    want = _composed_chain(kf, kg, h, age, pos, dest, shadow, g, rho, coh)
+    assert int(got[1]) == int(want[1])                      # age bookkeeping
+    pairs = [(got[0].re, want[0].re), (got[0].im, want[0].im),
+             (got[2], want[2]), (got[3], want[3]), (got[4], want[4]),
+             (got[5], want[5])]
+    if backend == "jnp":
+        for a, b in pairs:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    else:
+        for a, b in pairs:
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-5)
+
+
+def test_population_step_wideband_falls_back_to_chain():
+    """(N, d>1) fading doesn't share the (N,) grid — the pallas request must
+    route through the composed chain, bitwise."""
+    n, d = 32, 8
+    g = GeometryConfig(speed_mps=10.0, slot_seconds=1.0)
+    kh, kp, kf, kg = jax.random.split(KEY, 4)
+    h = rayleigh(kh, (n, d))
+    pos, dest = init_positions(kp, n, g)
+    shadow = jnp.ones((n,), jnp.float32)
+    got = population_step(kf, kg, h, age=jnp.zeros((), jnp.int32), pos=pos,
+                          dest=dest, shadow=shadow, gcfg=g, rho=0.9,
+                          coherence_iters=4, backend="pallas")
+    want = _composed_chain(kf, kg, h, jnp.zeros((), jnp.int32), pos, dest,
+                           shadow, g, 0.9, 4)
+    np.testing.assert_allclose(np.asarray(got[0].re), np.asarray(want[0].re),
+                               rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(want[2]))
+
+
+def test_autotune_population_step_smoke():
+    res = autotune_population_step(128, iters=2, backend="jnp")
+    assert res["best"]["us"] > 0.0
+    assert len(res["table"]) == 1          # jnp has no row-block knob
+    assert res["best"]["block_rows"] in {r["block_rows"] for r in res["table"]}
